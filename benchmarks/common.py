@@ -1,0 +1,33 @@
+"""Shared benchmark helpers: timing, CSV emission, result dirs."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def bench_dir(name: str) -> str:
+    d = os.path.normpath(os.path.join(RESULTS_DIR, name))
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def time_call(fn, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time in µs (blocks on jax arrays)."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+            out, (jax.Array, tuple, list, dict)
+        ) else None
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,58 @@
+"""Paper Figure 9 / §3 timing claims: sampling + fit time vs n and method.
+
+Headline: coreset construction + coreset fit ≪ full fit, gap widening with n.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_dir, emit
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.coreset import build_coreset
+from repro.data.dgp import generate
+
+
+def run(sizes=(10_000, 50_000, 200_000), k: int = 100, steps: int = 500):
+    out = []
+    for n in sizes:
+        Y = generate("normal_mixture", n, seed=0)
+        cfg = M.MCTMConfig(J=2, degree=6)
+        scaler = DataScaler.fit(Y)
+        t0 = time.perf_counter()
+        full = M.fit_mctm(cfg, scaler, Y, steps=steps)
+        full_s = time.perf_counter() - t0
+        rec = {"n": n, "full_fit_s": full_s}
+        for method in ("l2-hull", "l2-only", "uniform"):
+            t0 = time.perf_counter()
+            cs = build_coreset(cfg, scaler, Y, k, method, key=jax.random.PRNGKey(0))
+            sample_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            M.fit_mctm(
+                cfg, scaler, Y[cs.indices],
+                weights=np.asarray(cs.weights, np.float32), steps=steps,
+            )
+            fit_s = time.perf_counter() - t0
+            rec[method] = {"sample_s": sample_s, "fit_s": fit_s}
+            emit(
+                f"fig9/n{n}/{method}",
+                (sample_s + fit_s) * 1e6,
+                f"full={full_s:.2f}s coreset={sample_s + fit_s:.2f}s "
+                f"speedup={full_s / (sample_s + fit_s):.1f}x",
+            )
+        out.append(rec)
+    with open(f"{bench_dir('bench')}/fig9_timing.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel-path micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of TPU wall time), so the timed numbers here are the XLA-CPU
+oracle paths — used to sanity-track the compute shapes. Kernel↔oracle
+numerical agreement is asserted in tests/test_kernels.py; TPU timings come
+from the roofline model (§Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.bernstein import bernstein_design, bernstein_deriv_design
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # bernstein basis path at coreset-scoring scale
+    t = jnp.asarray(rng.random(200_000), jnp.float32)
+    f = jax.jit(lambda t: (bernstein_design(t, 6), bernstein_deriv_design(t, 6)))
+    f(t)  # compile
+    us = time_call(f, t)
+    emit("kernel/bernstein_ref/n200k_d7", us, f"{200_000 * 14 / (us / 1e6) / 1e9:.2f} Gelem/s")
+
+    # gram at leverage scale
+    X = jnp.asarray(rng.standard_normal((100_000, 70)), jnp.float32)
+    g = jax.jit(gram_ref)
+    g(X)
+    us = time_call(g, X)
+    emit("kernel/gram_ref/100kx70", us, f"{2 * 100_000 * 70 * 70 / (us / 1e6) / 1e9:.1f} GFLOP/s")
+
+    # attention at test scale
+    q = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.bfloat16)
+    a = jax.jit(lambda q: attention_ref(q, q, q))
+    a(q)
+    us = time_call(a, q)
+    emit("kernel/attention_ref/8x512x64", us, "oracle path")
+
+    # ssd at test scale
+    BH, T, P, N = 16, 512, 64, 32
+    x = jnp.asarray(rng.standard_normal((BH, T, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((BH, T, 1)) * 0.5 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random((BH, 1)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((BH, T, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((BH, T, N)), jnp.float32)
+    s = jax.jit(ssd_ref)
+    s(x, dt, A, Bm, Cm)
+    us = time_call(s, x, dt, A, Bm, Cm)
+    emit("kernel/ssd_ref/16x512", us, "oracle sequential scan")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

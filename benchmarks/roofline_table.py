@@ -1,0 +1,79 @@
+"""§Roofline aggregator: results/dryrun/*.json → markdown + CSV tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, bench_dir, emit
+
+COLS = (
+    "arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+    "collective_s", "useful_ratio",
+)
+
+
+def load(results_dir=None) -> list[dict]:
+    d = results_dir or os.path.join(RESULTS_DIR, "dryrun")
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_fraction(r: dict) -> float:
+    t = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return r["compute_s"] / t if t > 0 else 0.0
+
+
+def markdown_table(recs: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "roofline frac | useful | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP ({r['reason'][:40]}…) | — | — | — |"
+            )
+            continue
+        if "error" in r or r.get("mesh") != mesh:
+            continue
+        mem = r.get("memory_analysis", {})
+        peak = (mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} | {roofline_fraction(r):.2f} "
+            f"| {r.get('useful_ratio', float('nan')):.2f} | {peak:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    ok = [r for r in recs if not r.get("skipped") and "error" not in r]
+    skip = [r for r in recs if r.get("skipped")]
+    err = [r for r in recs if "error" in r]
+    d = bench_dir("bench")
+    for mesh in ("16x16", "2x16x16"):
+        md = markdown_table([r for r in recs if r.get("mesh") == mesh or r.get("skipped")], mesh)
+        with open(os.path.join(d, f"roofline_{mesh}.md"), "w") as f:
+            f.write(md + "\n")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"], r.get("variant", ""))):
+        variant = r.get("variant", "baseline")
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if variant != "baseline":
+            tag += f"/{variant}"
+        emit(
+            tag,
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dom={r['dominant']} frac={roofline_fraction(r):.2f} "
+            f"useful={r.get('useful_ratio', float('nan')):.2f}",
+        )
+    print(f"# roofline cells: ok={len(ok)} skipped={len(skip)} errors={len(err)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark aggregator — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV lines. Sub-benchmarks:
+  table1   — Table 1 (+3/4 methodology): DGP coreset comparison
+  table2   — Table 2: Covertype-like 10-d data, 5 methods
+  table5   — Tables 5/6: equity panels (10/20 stocks)
+  fig9     — timing vs n (speedup headline)
+  kernels  — kernel-path micro-benchmarks
+  roofline — §Roofline aggregation of the dry-run artifacts
+
+``python -m benchmarks.run [--quick] [--only table1,roofline]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes/reps")
+    ap.add_argument("--only", default=None, help="comma list of benches")
+    args = ap.parse_args()
+
+    from benchmarks import fig9_timing, kernel_bench, roofline_table, table1_dgp
+    from benchmarks import table2_covertype, table5_equity
+
+    q = args.quick
+    benches = {
+        "table1": lambda: table1_dgp.run(
+            reps=2 if q else 3, n=4000 if q else 10_000, steps=500 if q else 700
+        ),
+        # full 14-DGP sweep (paper Tables 3/4) — run explicitly via --only
+        "table34": lambda: table1_dgp.run(
+            dgps=None, reps=2 if q else 3, n=4000 if q else 10_000,
+            steps=500 if q else 700, tag="table34",
+        ),
+        "table2": lambda: table2_covertype.run(
+            n=10_000 if q else 50_000, ks=(50, 200) if q else (50, 200, 500),
+            reps=1 if q else 2, steps=400 if q else 500,
+        ),
+        "table5": lambda: table5_equity.run(
+            n=4000 if q else 10_000, stocks=(10,) if q else (10, 20),
+            ks=(50, 200) if q else (50, 100, 200, 300),
+            reps=1 if q else 2, steps=400 if q else 500,
+        ),
+        "fig9": lambda: fig9_timing.run(
+            sizes=(10_000, 50_000) if q else (10_000, 50_000, 200_000)
+        ),
+        "kernels": kernel_bench.run,
+        "roofline": roofline_table.main,
+    }
+    selected = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name in selected:
+        try:
+            benches[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"# total bench time: {time.time() - t0:.1f}s, failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

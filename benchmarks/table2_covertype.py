@@ -1,0 +1,61 @@
+"""Paper Table 2: Covertype-like 10-dim data, 5 methods × coreset sizes."""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_dir, emit
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.coreset import CORESET_METHODS, evaluate_coreset
+from repro.data.covertype import generate_covertype
+
+
+def run(n: int = 50_000, ks=(50, 200, 500), reps: int = 2, steps: int = 500):
+    Y = generate_covertype(n, seed=0)
+    cfg = M.MCTMConfig(J=10, degree=6)
+    scaler = DataScaler.fit(Y)
+    import time as _t
+
+    t0 = _t.perf_counter()
+    full = M.fit_mctm(cfg, scaler, Y, steps=steps)
+    full_s = _t.perf_counter() - t0
+    out = []
+    for k in ks:
+        for method in CORESET_METHODS:
+            evs = [
+                evaluate_coreset(
+                    cfg, scaler, Y, full, k=k, method=method,
+                    key=jax.random.PRNGKey(31 * k + r), steps=steps,
+                )
+                for r in range(reps)
+            ]
+            rec = {
+                "k": k,
+                "method": method,
+                "param_l2": float(np.mean([e.param_l2 for e in evs])),
+                "lambda_err": float(np.mean([e.lambda_err for e in evs])),
+                "lr": float(np.mean([e.likelihood_ratio for e in evs])),
+                "fit_s": float(np.mean([e.fit_seconds for e in evs])),
+                "full_fit_s": full_s,
+            }
+            out.append(rec)
+            emit(
+                f"table2/covertype/{method}/k{k}",
+                rec["fit_s"] * 1e6,
+                f"LR={rec['lr']:.3f} param_l2={rec['param_l2']:.2f} "
+                f"speedup={full_s / max(rec['fit_s'], 1e-9):.1f}x",
+            )
+    with open(f"{bench_dir('bench')}/table2_covertype.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Tables 5/6 + Figure 1: equity-return panels (10 and 20 stocks)."""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_dir, emit
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.coreset import evaluate_coreset
+from repro.data.equity import generate_equity_returns
+
+METHODS = ("l2-hull", "l2-only", "uniform")
+
+
+def run(n: int = 10_000, stocks=(10, 20), ks=(50, 100, 200, 300), reps: int = 2, steps: int = 500):
+    out = []
+    for J in stocks:
+        Y = generate_equity_returns(n, J, seed=0)
+        cfg = M.MCTMConfig(J=J, degree=6)
+        scaler = DataScaler.fit(Y)
+        import time as _t
+
+        t0 = _t.perf_counter()
+        full = M.fit_mctm(cfg, scaler, Y, steps=steps)
+        full_s = _t.perf_counter() - t0
+        for k in ks:
+            for method in METHODS:
+                evs = [
+                    evaluate_coreset(
+                        cfg, scaler, Y, full, k=k, method=method,
+                        key=jax.random.PRNGKey(7 * k + r + J), steps=steps,
+                    )
+                    for r in range(reps)
+                ]
+                rec = {
+                    "stocks": J,
+                    "k": k,
+                    "method": method,
+                    "param_l2": float(np.mean([e.param_l2 for e in evs])),
+                    "lambda_err": float(np.mean([e.lambda_err for e in evs])),
+                    "lr": float(np.mean([e.likelihood_ratio for e in evs])),
+                    "fit_s": float(np.mean([e.fit_seconds for e in evs])),
+                    "full_fit_s": full_s,
+                }
+                out.append(rec)
+                emit(
+                    f"table5/equity{J}/{method}/k{k}",
+                    rec["fit_s"] * 1e6,
+                    f"LR={rec['lr']:.3f} param_l2={rec['param_l2']:.2f}",
+                )
+    with open(f"{bench_dir('bench')}/table5_equity.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

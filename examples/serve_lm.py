@@ -1,0 +1,75 @@
+"""Batched serving example: prefill a batch of prompts, then decode tokens
+autoregressively with the per-family cache (KV / latent / state).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m --tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+    max_len = args.prompt_len + args.tokens + cfg.n_modality_positions + 1
+
+    cache, _ = model.init_cache(args.batch, max_len)
+    batch = {"tokens": prompts}
+    if cfg.modality == "vision":
+        batch["patch_embeds"] = rng.standard_normal(
+            (args.batch, cfg.n_modality_positions, cfg.d_model)
+        ).astype(np.float32) * 0.02
+    if cfg.family == "encdec":
+        batch = {"frames": rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32) * 0.02,
+            "tokens": prompts[:, :4]}
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, batch, cache)
+    prefill_s = time.time() - t0
+
+    decode = jax.jit(model.decode_step)
+    key = jax.random.PRNGKey(1)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    generated = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        logits, cache = decode(params, tok, cache)
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, logits[:, -1].astype(jnp.float32) / args.temperature
+        ).astype(jnp.int32)[:, None]
+        generated.append(np.asarray(tok))
+    decode_s = time.time() - t0
+
+    out = np.concatenate(generated, axis=1)
+    print(f"arch={cfg.name} batch={args.batch}")
+    print(f"prefill({args.prompt_len} tok): {prefill_s * 1e3:.1f} ms")
+    print(f"decode: {args.tokens} tokens in {decode_s:.2f}s "
+          f"({decode_s / max(args.tokens - 1, 1) * 1e3:.1f} ms/tok, "
+          f"{args.batch * (args.tokens - 1) / decode_s:.0f} tok/s aggregate)")
+    print("sample generations (token ids):")
+    for b in range(min(args.batch, 2)):
+        print(f"  [{b}]", out[b][:16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — Scalable Learning of Multivariate Distributions via Coresets.
+
+Production-grade JAX framework: MCTM coresets (the paper's contribution) as a
+first-class data-reduction stage of a multi-pod training/serving stack.
+
+Subpackages: core (paper), data, models, kernels, distributed, optim, train,
+serve, checkpoint, ft, configs, launch. See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,46 @@
+"""Paper core: MCTM models + coreset constructions.
+
+Public API:
+  - MCTMConfig / init_params / nll / fit_mctm / log_density / sample
+  - build_coreset / evaluate_coreset (Algorithm 1 + baselines)
+  - leverage scores (exact, sketched, ridge, root), hull ε-kernels
+  - MergeReduceCoreset (streams), distributed_* (shard_map pods)
+"""
+from repro.core.bernstein import (
+    DataScaler,
+    bernstein_design,
+    bernstein_deriv_design,
+    monotone_theta,
+)
+from repro.core.coreset import (
+    CORESET_METHODS,
+    CoresetEvaluation,
+    CoresetResult,
+    build_coreset,
+    coreset_scores,
+    evaluate_coreset,
+)
+from repro.core.hull import epsilon_kernel_indices, greedy_hull_projection, hull_distance
+from repro.core.leverage import (
+    block_B_matrix,
+    flatten_features,
+    leverage_scores_gram,
+    leverage_scores_qr,
+    ridge_leverage_scores,
+    root_leverage_scores,
+    sketched_leverage,
+)
+from repro.core.mctm import (
+    FitResult,
+    MCTMConfig,
+    MCTMParams,
+    basis_features,
+    fit_mctm,
+    init_params,
+    log_density,
+    nll,
+    nll_terms,
+    sample,
+)
+from repro.core.sensitivity import sensitivity_sample
+from repro.core.streaming import MergeReduceCoreset, WeightedSet

@@ -1,0 +1,123 @@
+"""Bernstein polynomial basis for MCTM marginal transformations.
+
+The MCTM marginal transform is ``h̃_j(y) = a_j(y)ᵀ ϑ_j`` where ``a_j`` is the
+degree-M Bernstein basis on a per-dimension interval [low_j, high_j]:
+
+    b_{k,M}(t) = C(M,k) t^k (1-t)^{M-k},   t = (y - low)/(high - low)
+
+``h̃`` is strictly increasing iff the coefficient vector ϑ is strictly
+increasing, which we enforce with a cumulative-softplus reparameterization.
+
+The basis and its derivative are the compute hot-spot of coreset scoring at
+large n (the paper evaluates a, a' for all n·J points before sampling); a
+fused Pallas kernel lives in ``repro.kernels.bernstein`` with this module's
+``bernstein_design`` / ``bernstein_deriv_design`` as its jnp oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "binomial_coefficients",
+    "bernstein_design",
+    "bernstein_deriv_design",
+    "DataScaler",
+    "monotone_theta",
+    "monotone_theta_inverse",
+]
+
+
+def binomial_coefficients(degree: int) -> np.ndarray:
+    """C(M, k) for k = 0..M, exact in float64 (degree is small, ≤ ~30)."""
+    coeffs = np.ones(degree + 1, dtype=np.float64)
+    for k in range(1, degree + 1):
+        coeffs[k] = coeffs[k - 1] * (degree - k + 1) / k
+    return coeffs
+
+
+@partial(jax.jit, static_argnames=("degree",))
+def bernstein_design(t: jax.Array, degree: int) -> jax.Array:
+    """Bernstein basis matrix on normalized inputs.
+
+    Args:
+      t: any shape, values in [0, 1] (clipped inside).
+      degree: polynomial degree M; output gets d = M+1 basis functions.
+
+    Returns:
+      shape ``t.shape + (M+1,)``; rows sum to 1 (partition of unity).
+    """
+    t = jnp.clip(t, 0.0, 1.0)[..., None]
+    k = jnp.arange(degree + 1, dtype=t.dtype)
+    coeff = jnp.asarray(binomial_coefficients(degree), dtype=t.dtype)
+    # Direct powers are fine and exact-ish for the small degrees used by MCTMs.
+    return coeff * jnp.power(t, k) * jnp.power(1.0 - t, degree - k)
+
+
+@partial(jax.jit, static_argnames=("degree",))
+def bernstein_deriv_design(t: jax.Array, degree: int) -> jax.Array:
+    """d a(t) / dt — derivative of every basis function w.r.t. normalized t.
+
+    Uses d b_{k,M}/dt = M (b_{k-1,M-1} - b_{k,M-1}) with b_{-1}=b_{M}=0.
+    Returns ``t.shape + (M+1,)``. Scale by 1/(high-low) for d/dy.
+    """
+    if degree == 0:
+        return jnp.zeros(t.shape + (1,), dtype=t.dtype)
+    lower = bernstein_design(t, degree - 1)  # (..., M)
+    pad = jnp.zeros(lower.shape[:-1] + (1,), dtype=lower.dtype)
+    left = jnp.concatenate([pad, lower], axis=-1)   # b_{k-1, M-1}
+    right = jnp.concatenate([lower, pad], axis=-1)  # b_{k, M-1}
+    return degree * (left - right)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataScaler:
+    """Per-dimension affine map of raw data onto [0, 1] with a safety margin.
+
+    The same scaler MUST be shared between the full-data fit and every coreset
+    fit (the paper fits the basis on the full-data range), so it is computed
+    once and carried around explicitly.
+    """
+
+    low: np.ndarray   # (J,)
+    high: np.ndarray  # (J,)
+
+    @staticmethod
+    def fit(Y: np.ndarray, margin: float = 0.05) -> "DataScaler":
+        Y = np.asarray(Y)
+        lo, hi = Y.min(axis=0), Y.max(axis=0)
+        span = np.maximum(hi - lo, 1e-9)
+        return DataScaler(low=lo - margin * span, high=hi + margin * span)
+
+    def transform(self, Y: jax.Array) -> jax.Array:
+        low = jnp.asarray(self.low, dtype=jnp.result_type(Y, jnp.float32))
+        high = jnp.asarray(self.high, dtype=low.dtype)
+        return (Y - low) / (high - low)
+
+    @property
+    def inv_span(self) -> np.ndarray:
+        return 1.0 / (self.high - self.low)
+
+
+def monotone_theta(theta_raw: jax.Array, min_slope: float = 1e-4) -> jax.Array:
+    """Map unconstrained (..., d) coefficients to strictly increasing ones.
+
+    ϑ_0 = raw_0; ϑ_k = ϑ_{k-1} + softplus(raw_k) + min_slope. Guarantees
+    ⟨ϑ, a'(y)⟩ > 0 everywhere, i.e. a valid monotone transformation.
+    """
+    first = theta_raw[..., :1]
+    steps = jax.nn.softplus(theta_raw[..., 1:]) + min_slope
+    return jnp.concatenate([first, first + jnp.cumsum(steps, axis=-1)], axis=-1)
+
+
+def monotone_theta_inverse(theta: jax.Array, min_slope: float = 1e-4) -> jax.Array:
+    """Inverse of ``monotone_theta`` (for warm-starting from valid ϑ)."""
+    diffs = jnp.diff(theta, axis=-1) - min_slope
+    diffs = jnp.clip(diffs, 1e-6, None)
+    # softplus^{-1}(x) = log(expm1(x))
+    raw_rest = jnp.log(jnp.expm1(diffs))
+    return jnp.concatenate([theta[..., :1], raw_rest], axis=-1)

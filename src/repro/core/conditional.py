@@ -1,0 +1,150 @@
+"""Conditional MCTM extension (paper §4 'Choice of copula and basis functions'):
+
+    h̃_j(y_j | x) = a_j(y_j)ᵀ ϑ_j + xᵀ β_j          (linear conditional shift)
+
+The paper notes the coreset extension "only increases the dimension
+dependence by the number of features conditioned on": the leverage feature
+row becomes (b_i, x_i) ∈ R^{dJ+F}, everything else (sensitivity proxy,
+hull on a'(y)) is unchanged — which is exactly what
+:func:`conditional_coreset_scores` implements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler, monotone_theta
+from repro.core.hull import epsilon_kernel_indices
+from repro.core.leverage import leverage_scores_gram
+
+__all__ = [
+    "CMCTMConfig",
+    "CMCTMParams",
+    "init_cparams",
+    "cnll",
+    "fit_cmctm",
+    "conditional_coreset_scores",
+    "build_conditional_coreset",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CMCTMConfig:
+    J: int
+    n_features: int
+    degree: int = 6
+    eta: float = 1e-3
+    min_slope: float = 1e-4
+
+    @property
+    def d(self) -> int:
+        return self.degree + 1
+
+    @property
+    def base(self) -> M.MCTMConfig:
+        return M.MCTMConfig(J=self.J, degree=self.degree, eta=self.eta, min_slope=self.min_slope)
+
+
+class CMCTMParams(NamedTuple):
+    theta_raw: jax.Array  # (J, d)
+    lam: jax.Array        # (J(J−1)/2,)
+    beta: jax.Array       # (J, F) conditional shift coefficients
+
+
+def init_cparams(key, cfg: CMCTMConfig) -> CMCTMParams:
+    base = M.init_params(key, cfg.base)
+    beta = jnp.zeros((cfg.J, cfg.n_features), jnp.float32)
+    return CMCTMParams(theta_raw=base.theta_raw, lam=base.lam, beta=beta)
+
+
+def _transform_parts(cfg: CMCTMConfig, params: CMCTMParams, A, Ap, X):
+    theta = monotone_theta(params.theta_raw, cfg.min_slope)
+    htilde = jnp.einsum("njd,jd->nj", A, theta) + X @ params.beta.T
+    hprime = jnp.einsum("njd,jd->nj", Ap, theta)  # shift has zero dy-derivative
+    Lam = M.lambda_matrix(cfg.base, params.lam)
+    z = htilde @ Lam.T
+    return z, hprime
+
+
+def cnll_terms(cfg: CMCTMConfig, params: CMCTMParams, A, Ap, X) -> jax.Array:
+    z, hprime = _transform_parts(cfg, params, A, Ap, X)
+    log_jac = jnp.log(jnp.maximum(hprime, cfg.eta))
+    per_dim = 0.5 * jnp.square(z) - log_jac + 0.5 * M.LOG_2PI
+    return jnp.sum(per_dim, axis=-1)
+
+
+def cnll(cfg, params, A, Ap, X, weights=None) -> jax.Array:
+    terms = cnll_terms(cfg, params, A, Ap, X)
+    return jnp.sum(terms if weights is None else weights * terms)
+
+
+def fit_cmctm(
+    cfg: CMCTMConfig,
+    scaler: DataScaler,
+    Y: np.ndarray,
+    X: np.ndarray,
+    weights=None,
+    *,
+    key=None,
+    steps: int = 1500,
+    lr: float = 5e-2,
+) -> M.FitResult:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    params0 = init_cparams(key, cfg)
+    A, Ap = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
+    Xj = jnp.asarray(X, jnp.float32)
+    total_w = float(Y.shape[0]) if weights is None else float(np.sum(weights))
+    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+
+    def loss_fn(p):
+        return cnll(cfg, p, A, Ap, Xj, w) / total_w
+
+    params, losses = jax.jit(lambda p: M._adam_fit(loss_fn, p, steps, lr))(params0)
+    final = float(cnll(cfg, params, A, Ap, Xj, w))
+    return M.FitResult(params=params, losses=np.asarray(losses), final_nll=final)
+
+
+# ---------------------------------------------------------------------------
+# conditional coreset: leverage over the augmented feature row (b_i, x_i)
+# ---------------------------------------------------------------------------
+
+
+def conditional_coreset_scores(
+    cfg: CMCTMConfig, scaler: DataScaler, Y, X
+) -> np.ndarray:
+    A, _ = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
+    n = A.shape[0]
+    feats = jnp.concatenate(
+        [A.reshape(n, -1), jnp.asarray(X, jnp.float32)], axis=1
+    )  # (n, dJ + F)
+    u = np.asarray(leverage_scores_gram(feats))
+    return u + 1.0 / n
+
+
+def build_conditional_coreset(
+    cfg: CMCTMConfig, scaler: DataScaler, Y, X, k: int, *, key, alpha: float = 0.8
+):
+    """Algorithm-1 hybrid for the conditional model; returns (idx, weights)."""
+    Y = np.asarray(Y)
+    n = Y.shape[0]
+    scores = conditional_coreset_scores(cfg, scaler, Y, X)
+    probs = scores / scores.sum()
+    k1 = int(np.floor(alpha * k))
+    k_draw, k_hull = jax.random.split(key)
+    idx = np.asarray(
+        jax.random.choice(k_draw, n, shape=(k1,), replace=True, p=jnp.asarray(probs))
+    )
+    w = 1.0 / (k1 * probs[idx])
+    _, Ap = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
+    P = np.asarray(Ap).reshape(n * cfg.J, cfg.d)
+    hull_rows = epsilon_kernel_indices(P, k - k1, k_hull)
+    hull_pts = np.unique(hull_rows // cfg.J)[: k - k1]
+    idx = np.concatenate([idx, hull_pts])
+    w = np.concatenate([w, np.ones(hull_pts.shape[0])])
+    return idx, w

@@ -1,0 +1,114 @@
+"""Convex-hull / ε-kernel approximation (Blum, Har-Peled, Raichel 2019).
+
+The paper stabilizes the negative-log part f3 by force-including the extreme
+points of {a'_ij} (paper Lemma 2.3 / Algorithm 2). Two primitives:
+
+  * ``greedy_hull_projection`` — the paper's Algorithm 2: Frank-Wolfe style
+    greedy projection of a query q onto conv(P), returning the approximate
+    nearest hull point and the support (extremal) indices it touched.
+  * ``epsilon_kernel_indices`` — selects k extremal points by directional
+    queries argmax_i ⟨p_i, v⟩ over a spread of directions (random + PCA +
+    Algorithm-2 support points). Directional extremal queries are matvecs →
+    MXU-friendly, and distribute as per-shard argmax + global max.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "greedy_hull_projection",
+    "epsilon_kernel_indices",
+    "hull_distance",
+]
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def greedy_hull_projection(
+    P: jax.Array, q: jax.Array, eps: float = 1e-2, max_iter: int = 64
+):
+    """Algorithm 2 of the paper (Blum et al. 2019 sparse hull approximation).
+
+    Greedily walks from the closest point of P toward q, each step moving to
+    the best point on the segment [t, p*] where p* is extremal in direction
+    (q − t). Returns (t, support_indices, distances) with support_indices the
+    sequence of extremal points touched (−1 padding).
+    """
+    d0 = jnp.sum(jnp.square(P - q), axis=1)
+    i0 = jnp.argmin(d0)
+    t0 = P[i0]
+
+    def body(carry, _):
+        t, _ = carry
+        v = q - t
+        scores = P @ v
+        i_star = jnp.argmax(scores)
+        p = P[i_star]
+        seg = p - t
+        denom = jnp.sum(jnp.square(seg))
+        alpha = jnp.where(denom > 1e-30, jnp.dot(q - t, seg) / jnp.maximum(denom, 1e-30), 0.0)
+        alpha = jnp.clip(alpha, 0.0, 1.0)
+        t_new = t + alpha * seg
+        # Stop moving once within eps (keep state fixed — lax.scan needs static length).
+        dist = jnp.linalg.norm(q - t)
+        t_new = jnp.where(dist < eps, t, t_new)
+        i_rec = jnp.where(dist < eps, -1, i_star)
+        return (t_new, i_rec), (i_rec, jnp.linalg.norm(q - t_new))
+
+    (t, _), (support, dists) = jax.lax.scan(body, (t0, i0), None, length=max_iter)
+    support = jnp.concatenate([jnp.asarray([i0]), support])
+    return t, support, dists
+
+
+def hull_distance(P: jax.Array, q: jax.Array, eps: float = 1e-3, max_iter: int = 128) -> float:
+    """Approximate distance from q to conv(P) (for tests)."""
+    t, _, _ = greedy_hull_projection(P, q, eps, max_iter)
+    return float(jnp.linalg.norm(q - t))
+
+
+def _spread_directions(key: jax.Array, P: np.ndarray, m: int) -> np.ndarray:
+    """Random unit directions + principal axes + mean-centered far points."""
+    d = P.shape[1]
+    g = np.array(jax.random.normal(key, (m, d), dtype=jnp.float32))
+    g /= np.maximum(np.linalg.norm(g, axis=1, keepdims=True), 1e-12)
+    mu = P.mean(axis=0)
+    Pc = P - mu
+    # principal axes (d is small: basis dimension)
+    cov = Pc.T @ Pc / max(P.shape[0], 1)
+    _, V = np.linalg.eigh(cov)
+    dirs = [g, V.T, -V.T]
+    return np.concatenate(dirs, axis=0)
+
+
+def epsilon_kernel_indices(
+    P: jax.Array | np.ndarray,
+    k: int,
+    key: jax.Array,
+    oversample: int = 4,
+) -> np.ndarray:
+    """Select ≤ k extremal (hull) indices of P via directional queries.
+
+    Matches the role of the η-kernel in Theorem 2.4: the selected set touches
+    every direction's extreme within the resolution of the direction net. With
+    `oversample·k` directions the dedup'd argmaxes cover the hull densely for
+    the mild (low-d) data the paper targets.
+    """
+    P_np = np.asarray(P, dtype=np.float32)
+    n = P_np.shape[0]
+    if n <= k:
+        return np.arange(n)
+    dirs = _spread_directions(key, P_np, m=max(oversample * k, 8))
+    scores = P_np @ dirs.T  # (n, m)
+    cand = np.argmax(scores, axis=0)
+    # also take per-direction minima (extreme in −v comes for free)
+    cand = np.concatenate([cand, np.argmin(scores, axis=0)])
+    seen: list[int] = []
+    for i in cand:
+        if i not in seen:
+            seen.append(int(i))
+        if len(seen) >= k:
+            break
+    return np.asarray(seen[:k], dtype=np.int64)

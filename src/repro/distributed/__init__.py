@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    batch_specs,
+    default_rules,
+    replicated,
+    resolve_spec,
+    resolve_tree,
+)
+
+__all__ = [
+    "ShardingRules",
+    "batch_specs",
+    "default_rules",
+    "replicated",
+    "resolve_spec",
+    "resolve_tree",
+]

@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+``compressed_dp_gradients``: explicit-DP gradient averaging where each
+all-reduce ships int8 (or top-k sparsified) payloads; the quantization
+residual is carried in an error-feedback buffer so the *accumulated* update
+is unbiased (Karimireddy et al. 2019). Used by the shard_map DP trainer
+variant and benchmarked in §Perf for the collective-bound cell.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.collectives import psum_quantized
+
+PyTree = Any
+
+__all__ = ["init_error_state", "compress_and_average", "topk_sparsify"]
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_sparsify(g: jax.Array, frac: float = 0.01) -> jax.Array:
+    """Keep the top `frac` fraction of entries by magnitude (rest zeroed)."""
+    flat = g.reshape(-1)
+    k = max(int(flat.shape[0] * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_and_average(
+    grads: PyTree,
+    error: PyTree,
+    mesh: Mesh,
+    axis: str = "data",
+    *,
+    bits: int = 8,
+) -> tuple[PyTree, PyTree]:
+    """(avg_grads, new_error): int8 all-reduce with error feedback.
+
+    grads are data-parallel replicas (same shape per device, different
+    values); returns the averaged gradient and the updated residual buffer.
+    Must be called inside a shard_map over `axis`, or use the convenience
+    wrapper below for replicated inputs.
+    """
+    n = mesh.shape[axis]
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        avg = psum_quantized(corrected, axis, bits=bits) / n
+        # error = what we intended to send minus what the wire carried
+        qmax = 2 ** (bits - 1) - 1
+        scale = jax.lax.pmax(jnp.max(jnp.abs(corrected)), axis) / qmax
+        scale = jnp.maximum(scale, 1e-12)
+        sent = jnp.clip(jnp.round(corrected / scale), -qmax, qmax) * scale
+        return avg, corrected - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    avg = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return avg, new_err

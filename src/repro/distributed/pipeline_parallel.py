@@ -1,0 +1,111 @@
+"""GPipe-style pipeline parallelism over a 'stage' mesh axis (shard_map).
+
+Layers are stacked (L, ...) and split into `n_stages` contiguous groups; the
+stage axis holds one group per device row. The forward executes the classic
+pipeline schedule: at tick t, stage s processes microbatch t−s and passes
+activations to stage s+1 via ``ppermute`` — n_micro + n_stages − 1 ticks,
+bubble fraction (S−1)/(M+S−1). Works under jit/grad (the schedule is a
+lax.fori-style Python loop over static tick count, all ops batched).
+
+This composes with the existing axes: mesh ("stage", "data", "model") gives
+PP × DP × TP. Used by the PP dry-run demo (launch/dryrun_pp.py) and unit
+tests; the production 16×16 mesh itself stays DP×TP as assigned.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["pipeline_forward", "split_stages"]
+
+
+def split_stages(layer_params, n_stages: int):
+    """(L, ...) stacked layer params → (n_stages, L/n_stages, ...)."""
+
+    def reshape(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, f"L={L} not divisible by {n_stages} stages"
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+
+    return jax.tree.map(reshape, layer_params)
+
+
+def pipeline_forward(
+    x_micro: jax.Array,
+    stage_params,
+    layer_fn: Callable,
+    mesh: Mesh,
+    *,
+    axis: str = "stage",
+):
+    """Run microbatches through pipeline stages.
+
+    x_micro: (n_micro, mb, S, D) microbatched activations (replicated over
+    `axis`; each stage consumes/produces via the rotating buffer).
+    stage_params: pytree with leading (n_stages, L_per_stage, ...) — sharded
+    over `axis` on dim 0.
+    layer_fn: (layer_params_slice, x) → x, applied L_per_stage times (scan).
+
+    Returns (n_micro, mb, S, D) outputs (gathered on the last stage and
+    broadcast). Pure-JAX GPipe: at each tick every stage runs its scan on its
+    current microbatch then ppermutes the result forward.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+
+    def stage_fn(xs, params):
+        # xs: (n_micro, mb, S, D) full microbatch queue (same on all stages)
+        # params: (1, L_per, ...) this stage's layer stack
+        params = jax.tree.map(lambda p: p[0], params)
+        sid = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+        buf = jnp.zeros(mb_shape, xs.dtype)  # activation in flight
+        outputs = jnp.zeros_like(xs)
+
+        def run_stage(x):
+            def body(h, lp):
+                return layer_fn(lp, h), None
+
+            h, _ = jax.lax.scan(body, x, params)
+            return h
+
+        def tick(t, carry):
+            buf, outputs = carry
+            # stage 0 ingests microbatch t (if in range)
+            feed = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False
+            )
+            x_in = jnp.where(sid == 0, feed, buf)
+            y = run_stage(x_in)
+            # last stage emits microbatch t − (S−1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            is_valid = (t - (n_stages - 1) >= 0) & (sid == n_stages - 1)
+            outputs = jax.lax.cond(
+                is_valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+                lambda o: o,
+                outputs,
+            )
+            # pass activations forward along the ring
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(y, axis, perm)
+            return buf, outputs
+
+        buf, outputs = jax.lax.fori_loop(0, ticks, tick, (buf, outputs))
+        # broadcast the last stage's outputs to every stage (psum of one-hot)
+        has = (sid == n_stages - 1).astype(outputs.dtype)
+        outputs = jax.lax.psum(outputs * has, axis)
+        return outputs
+
+    in_specs = (P(), P(axis))
+    fn = shard_map(
+        stage_fn, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
+    )
+    return fn(x_micro, stage_params)

@@ -1,0 +1,148 @@
+"""Logical-axis sharding rules → concrete PartitionSpecs.
+
+Params and caches carry *logical* axis names ('embed', 'heads', 'kv', 'mlp',
+'vocab', 'expert', 'lru', 'batch', 'layer', None). A :class:`ShardingRules`
+maps logical names to mesh axes; :func:`resolve_spec` drops any assignment
+whose dimension is not divisible by the mesh axis size (e.g. MQA's kv=1 head
+can't shard over model=16 → replicated), so every arch gets a *valid* spec on
+every mesh without per-arch special-casing.
+
+Default strategy (single pod, mesh ('data','model')):
+  batch → 'data' | heads/kv/mlp/vocab/expert/lru → 'model' | embed → 'data'
+  (FSDP: parameters ZeRO-3-sharded over the data axis, all-gathered by XLA)
+Multi-pod mesh ('pod','data','model'): batch → ('pod','data'); parameters
+stay sharded within a pod and replicated across pods (pure DP on 'pod').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+
+    def get(self, name):
+        return self.rules.get(name)
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True) -> ShardingRules:
+    multi_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        {
+            "batch": batch_axes,
+            "embed": ("data",) if fsdp else None,
+            "heads": ("model",),
+            "kv": ("model",),
+            "mlp": ("model",),
+            "vocab": ("model",),
+            "expert": ("model",),
+            "lru": ("model",),
+            "seq_kv": ("model",),  # only emitted by decode_seq_shard caches
+            "state": None,
+            "layer": None,
+            None: None,
+        }
+    )
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(
+    logical: tuple, shape: tuple[int, ...], mesh: Mesh, rules: ShardingRules
+) -> PartitionSpec:
+    """Logical names → PartitionSpec, dropping non-divisible assignments."""
+    out = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        axes = rules.get(name)
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        if not axes or dim % _axis_size(mesh, axes) != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return PartitionSpec(*out)
+
+
+def resolve_tree(
+    specs: PyTree, shapes: PyTree, mesh: Mesh, rules: ShardingRules
+) -> PyTree:
+    """Map (logical-spec tree, array/ShapeDtypeStruct tree) → NamedSharding tree."""
+
+    def one(spec, arr):
+        ps = resolve_spec(tuple(spec), tuple(arr.shape), mesh, rules)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree.map(
+        one, specs, shapes, is_leaf=lambda s: isinstance(s, tuple)
+    )
+
+
+def batch_specs(batch_shapes: dict, mesh: Mesh, rules: ShardingRules) -> dict:
+    """Input batch shardings: leading dim = batch, rest replicated."""
+    out = {}
+    for k, v in batch_shapes.items():
+        nd = len(v.shape)
+        logical = ("batch",) + (None,) * (nd - 1) if nd else ()
+        out[k] = NamedSharding(mesh, resolve_spec(logical, v.shape, mesh, rules))
+    return out
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context: lets model code hint GSPMD with logical names
+# without holding a mesh reference. Disabled (identity) unless a launcher
+# calls ``set_activation_axes`` — tests and host-scale runs are unaffected.
+# ---------------------------------------------------------------------------
+
+_ACT: dict = {"enabled": False, "batch": ("data",), "model": ("model",)}
+
+
+def set_activation_axes(*, batch=("data",), model=("model",), enabled=True):
+    _ACT.update(batch=tuple(batch), model=tuple(model), enabled=enabled)
+
+
+def activation_axes_enabled() -> bool:
+    return _ACT["enabled"]
+
+
+def act_spec(*names) -> PartitionSpec:
+    """names ∈ {'batch', 'model', None} → PartitionSpec under current axes."""
+    out = []
+    for n in names:
+        if n is None:
+            out.append(None)
+        else:
+            axes = _ACT[n]
+            out.append(axes if len(axes) > 1 else axes[0])
+    return PartitionSpec(*out)
+
+
+def constrain(x, *names):
+    """with_sharding_constraint by logical names (no-op when disabled)."""
+    if not _ACT["enabled"]:
+        return x
+    return jax.lax.with_sharding_constraint(x, act_spec(*names))

@@ -1,0 +1,3 @@
+from repro.ft.failure import ElasticPlanner, FailureSimulator, MeshPlan, StragglerPolicy
+
+__all__ = ["ElasticPlanner", "FailureSimulator", "MeshPlan", "StragglerPolicy"]

@@ -1,0 +1,109 @@
+"""Fault-tolerance control plane: failure handling + elastic re-meshing.
+
+On a real cluster this layer sits in the coordinator: heartbeats detect dead
+hosts, the job drains, and training restarts on the surviving slice from the
+last atomic checkpoint. Here we implement the *decision logic* (pure,
+testable) plus a single-process failure simulator used by the integration
+tests:
+
+  * ``ElasticPlanner.plan(n_alive)`` — pick the largest valid mesh that fits
+    the survivors while (a) keeping the model axis intact if possible (TP
+    degree is dictated by memory), (b) shrinking data/pod axes first, and
+    (c) rescaling batch/LR consistently.
+  * ``FailureSimulator`` — drives a train loop, injecting failures at chosen
+    steps and verifying checkpoint-restore equivalence.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["MeshPlan", "ElasticPlanner", "FailureSimulator", "StragglerPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    global_batch: int
+    lr_scale: float
+    devices_used: int
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass
+class ElasticPlanner:
+    """Chooses a degraded mesh after failures (and upsizes when nodes return)."""
+
+    model_parallel: int           # required TP degree (memory-bound, fixed)
+    base_data_parallel: int       # DP at full strength (per pod)
+    n_pods: int = 1
+    base_global_batch: int = 256
+    min_data_parallel: int = 1
+
+    def plan(self, n_alive: int) -> MeshPlan:
+        if n_alive < self.model_parallel * self.min_data_parallel:
+            raise RuntimeError(
+                f"{n_alive} devices cannot host model_parallel={self.model_parallel}"
+            )
+        # keep TP fixed; give the rest to (pod × data), preferring pod-sized blocks
+        total_rows = n_alive // self.model_parallel
+        pods = min(self.n_pods, total_rows)
+        while pods > 1 and total_rows % pods != 0:
+            pods -= 1
+        data = total_rows // pods
+        # batch scales with the surviving DP degree; LR follows linearly
+        full_rows = self.base_data_parallel * self.n_pods
+        frac = (data * pods) / full_rows
+        gbatch = max(int(self.base_global_batch * frac), 1)
+        if pods > 1:
+            shape = (pods, data, self.model_parallel)
+            axes = ("pod", "data", "model")
+        else:
+            shape = (data, self.model_parallel)
+            axes = ("data", "model")
+        return MeshPlan(
+            shape=shape,
+            axes=axes,
+            global_batch=gbatch,
+            lr_scale=frac,
+            devices_used=data * pods * self.model_parallel,
+        )
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based straggler mitigation for the data-loading path.
+
+    If a shard's batch is not ready within `deadline_ms`, the step proceeds
+    with the backup batch (the deterministic re-sample of the same step with
+    a fallback seed), and the slow fetch is cancelled. The decision function
+    is pure so schedulers can unit-test it; at 1000+ nodes the same policy
+    generalizes to backup *workers*: issue the step to `backup_factor`× hosts
+    and take the first completion.
+    """
+
+    deadline_ms: float = 250.0
+    backup_factor: int = 2
+
+    def decide(self, elapsed_ms: np.ndarray) -> np.ndarray:
+        """elapsed_ms: per-shard data-ready latency → bool mask 'use backup'."""
+        return np.asarray(elapsed_ms) > self.deadline_ms
+
+
+class FailureSimulator:
+    """Drives step functions with injected failures; used by integration tests."""
+
+    def __init__(self, fail_at_steps: set[int]):
+        self.fail_at = set(fail_at_steps)
+        self.failures: list[int] = []
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at:
+            self.failures.append(step)
+            self.fail_at.discard(step)
+            raise RuntimeError(f"injected node failure at step {step}")

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel subpackage ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper with shape plumbing / padding
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  bernstein        — fused Bernstein basis + derivative evaluation (the
+                     coreset scoring front-end: bandwidth-bound, one pass)
+  gram             — tiled Gram-matrix accumulation XᵀX (leverage scores)
+  flash_attention  — blockwise-softmax causal attention (training hot-spot)
+  ssd              — Mamba2 SSD within-chunk kernel (ssm family hot-spot)
+
+Kernels are validated on CPU via ``interpret=True`` (executes the kernel body
+in Python) against the oracle; on a real TPU the same pallas_call lowers to
+Mosaic. BlockSpec tiles are MXU/VPU aligned (multiples of (8,128) f32 /
+(16,128) bf16; matmul dims multiples of 128).
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.bernstein.ops import bernstein_basis_deriv
+
+__all__ = ["bernstein_basis_deriv"]

@@ -1,0 +1,71 @@
+"""Fused Bernstein basis + derivative Pallas kernel.
+
+The coreset front-end evaluates a_j(y) and a'_j(y) for n·J points — two
+arrays of (n·J, d). Done naively that is 2(d+1) HBM round-trips of the input;
+the fused kernel reads each 8×128 input tile into VMEM once and emits every
+basis function and derivative from registers (bandwidth-bound, one pass).
+
+Layout: inputs are tiled (rows, 128) lanes; outputs are (d, rows, 128) with
+the small basis index d as the *leading* (sublane-cheap) dimension so the
+lane dimension stays 128-aligned for the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bernstein import binomial_coefficients
+
+LANE = 128
+DEFAULT_ROWS = 8  # sublanes per tile → (8, 128) f32 native tile
+
+
+def _kernel(t_ref, basis_ref, deriv_ref, *, degree: int, coeff, coeff_lo):
+    t = t_ref[...]  # (R, LANE) f32 in [0,1]
+    one_m = 1.0 - t
+    # powers t^k and (1-t)^k, k = 0..degree, built iteratively in registers
+    tp = [jnp.ones_like(t)]
+    op = [jnp.ones_like(t)]
+    for _ in range(degree):
+        tp.append(tp[-1] * t)
+        op.append(op[-1] * one_m)
+    for k in range(degree + 1):
+        basis_ref[k, :, :] = coeff[k] * tp[k] * op[degree - k]
+    # derivative: d b_{k,M}/dt = M (b_{k-1,M-1} − b_{k,M-1})
+    if degree == 0:
+        deriv_ref[0, :, :] = jnp.zeros_like(t)
+        return
+    lower = [coeff_lo[k] * tp[k] * op[degree - 1 - k] for k in range(degree)]
+    for k in range(degree + 1):
+        left = lower[k - 1] if k >= 1 else jnp.zeros_like(t)
+        right = lower[k] if k <= degree - 1 else jnp.zeros_like(t)
+        deriv_ref[k, :, :] = degree * (left - right)
+
+
+def bernstein_kernel(
+    t: jax.Array, degree: int, *, rows: int = DEFAULT_ROWS, interpret: bool = False
+):
+    """t: (M, 128) f32 tiles → (basis, deriv) each (d, M, 128)."""
+    M = t.shape[0]
+    d = degree + 1
+    coeff = tuple(float(c) for c in binomial_coefficients(degree))
+    coeff_lo = tuple(float(c) for c in binomial_coefficients(max(degree - 1, 0)))
+    grid = (M // rows,)
+    out_shape = [
+        jax.ShapeDtypeStruct((d, M, LANE), jnp.float32),
+        jax.ShapeDtypeStruct((d, M, LANE), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_kernel, degree=degree, coeff=coeff, coeff_lo=coeff_lo),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANE), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((d, rows, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((d, rows, LANE), lambda i: (0, i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(t)

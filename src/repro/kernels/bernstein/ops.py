@@ -1,0 +1,28 @@
+"""jit'd public wrapper: flat input of any length → (basis, deriv) (n, d)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bernstein.kernel import DEFAULT_ROWS, LANE, bernstein_kernel
+
+
+@partial(jax.jit, static_argnames=("degree", "interpret"))
+def bernstein_basis_deriv(t: jax.Array, degree: int, *, interpret: bool = True):
+    """t: (n,) in [0,1] → (basis (n, d), deriv (n, d)), d = degree+1.
+
+    Pads to (8·k, 128) tiles, runs the fused kernel, and untiles. `interpret`
+    defaults True (CPU validation); pass False on a real TPU.
+    """
+    n = t.shape[0]
+    tile = DEFAULT_ROWS * LANE
+    n_pad = (n + tile - 1) // tile * tile
+    tp = jnp.zeros((n_pad,), jnp.float32).at[:n].set(t.astype(jnp.float32))
+    tiles = tp.reshape(n_pad // LANE, LANE)
+    basis, deriv = bernstein_kernel(tiles, degree, interpret=interpret)
+    d = degree + 1
+    basis = basis.transpose(1, 2, 0).reshape(n_pad, d)[:n]
+    deriv = deriv.transpose(1, 2, 0).reshape(n_pad, d)[:n]
+    return basis, deriv

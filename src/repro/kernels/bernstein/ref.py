@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the bernstein kernel (shares repro.core.bernstein)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bernstein import bernstein_design, bernstein_deriv_design
+
+
+def bernstein_basis_deriv_ref(t: jax.Array, degree: int):
+    """t: any shape → (basis, deriv) each t.shape + (d,) — d/dt (unscaled)."""
+    return bernstein_design(t, degree), bernstein_deriv_design(t, degree)

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["flash_attention"]

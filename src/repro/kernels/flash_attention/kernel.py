@@ -1,0 +1,88 @@
+"""Blockwise-softmax (flash) causal attention Pallas kernel.
+
+Grid: (batch·heads, S/block_q). Each step holds one q tile in VMEM and runs
+an online-softmax fori_loop over k/v tiles, carrying (acc, m, l) in f32
+registers. Causal skipping: key tiles strictly above the diagonal contribute
+nothing and are masked (Mosaic DCEs the fully-masked tail on TPU).
+
+VMEM budget per step: q (bq, d) + k,v (S, d) + acc ≈ (2S + 2·bq)·d·2B — with
+S ≤ 8k, d = 128, bf16 that is ≤ 4.2 MB, comfortably inside 16 MB VMEM. For
+longer S, wire block_k through the BlockSpec instead (same inner loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, sm_scale: float):
+    bq, d = q_ref.shape[-2], q_ref.shape[-1]
+    S = k_ref.shape[-2]
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # (bq, d)
+
+    nk = S // block_k
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        if causal:
+            q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+            k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    # causal: key tiles strictly beyond this q tile's diagonal are skipped.
+    upper = ((iq + 1) * bq + block_k - 1) // block_k if causal else nk
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (BH, S, d) → (BH, S, d). S must divide by block_q/block_k."""
+    BH, S, d = q.shape
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    grid = (BH, S // block_q)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, causal=causal, sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

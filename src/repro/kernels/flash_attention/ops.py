@@ -1,0 +1,38 @@
+"""jit'd wrapper: (B, S, H, d) GQA-ready flash attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, S, H, d); k/v: (B, S, KV, d) with H % KV == 0 → (B, S, H, d)."""
+    B, S, H, d = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    # expand kv to per-q-head layout and flatten (B, H) → grid rows
+    kq = jnp.repeat(k, groups, axis=2)
+    vq = jnp.repeat(v, groups, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = kq.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vf = vq.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    out = flash_attention_kernel(
+        qf, kf, vf, causal=causal, block_q=bq, block_k=bk, interpret=interpret
+    )
+    return out.reshape(B, H, S, d).transpose(0, 2, 1, 3)

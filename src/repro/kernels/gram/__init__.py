@@ -1,0 +1,3 @@
+from repro.kernels.gram.ops import gram_matrix
+
+__all__ = ["gram_matrix"]

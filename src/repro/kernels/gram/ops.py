@@ -1,0 +1,24 @@
+"""jit'd wrapper: arbitrary (n, D) → exact (D, D) Gram with padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.kernel import DEFAULT_BLOCK_ROWS, gram_kernel
+
+LANE = 128
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def gram_matrix(
+    x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True
+) -> jax.Array:
+    """G = XᵀX. Zero-pads rows (no effect on the sum) and lanes (sliced off)."""
+    n, D = x.shape
+    n_pad = (n + block_rows - 1) // block_rows * block_rows
+    d_pad = (D + LANE - 1) // LANE * LANE
+    xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :D].set(x)
+    G = gram_kernel(xp, block_rows=block_rows, interpret=interpret)
+    return G[:D, :D]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the gram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf

@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd_chunked
+
+__all__ = ["ssd_chunked"]

@@ -1,0 +1,37 @@
+"""jit'd wrapper for the SSD chunk kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import DEFAULT_CHUNK, ssd_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> jax.Array:
+    """x (BH,T,P), dt (BH,T), A (BH,), Bm/Cm (BH,T,N) → y (BH,T,P).
+
+    T is padded to a chunk multiple with dt=0 steps (decay 1, no state
+    contribution) and sliced back.
+    """
+    BH, T, P = x.shape
+    Tp = (T + chunk - 1) // chunk * chunk
+    pad = Tp - T
+
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    xp, dtp, Bp, Cp = padt(x), padt(dt[..., None]), padt(Bm), padt(Cm)
+    y = ssd_kernel(xp, dtp, A[:, None], Bp, Cp, chunk=min(chunk, Tp), interpret=interpret)
+    return y[:, :T]

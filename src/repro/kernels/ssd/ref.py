@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: sequential SSD recurrence (the definitional form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential state-space recurrence.
+
+    x: (BH, T, P); dt: (BH, T, 1); A: (BH, 1); Bm/Cm: (BH, T, N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t · B_t x_tᵀ ;  y_t = C_t h_t.
+    """
+    BH, T, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (BH,P), (BH,1), (BH,N), (BH,N)
+        a = jnp.exp(dtt * A)  # (BH, 1)
+        h = h * a[:, :, None] + jnp.einsum("bn,bp->bnp", bt, xt * dtt)
+        y = jnp.einsum("bn,bnp->bp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        Bm.swapaxes(0, 1).astype(jnp.float32),
+        Cm.swapaxes(0, 1).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)  # (BH, T, P)

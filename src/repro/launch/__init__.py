@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, training/serving drivers.
+
+NOTE: import ``repro.launch.dryrun`` only in a fresh process — it sets
+XLA_FLAGS (512 placeholder devices) at import time, before jax initializes.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

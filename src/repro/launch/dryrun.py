@@ -1,0 +1,352 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``) so the
+XLA_FLAGS above take effect before jax initializes — the two lines at the top
+of this file run before ANY other import.
+
+For each cell this produces:
+  * ``compiled.memory_analysis()``  — proves the program fits per-device HBM
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline
+  * collective wire bytes parsed from the compiled HLO text
+and writes one JSON per cell under ``results/dryrun/`` for the roofline
+aggregator (benchmarks/roofline_table.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape decode_32k
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import batch_specs, default_rules, replicated, resolve_tree
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analytic_flops, count_params, roofline_terms
+from repro.launch.shapes import (
+    SHAPES,
+    cell_supported,
+    decode_token_specs,
+    prefill_batch_specs,
+    train_batch_specs,
+)
+from repro.models import build_model
+from repro.optim import adafactor, adamw
+from repro.train.state import TrainState
+from repro.utils.hlo import collective_stats
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+# per-arch training knobs (memory-driven): microbatch count + optimizer
+TRAIN_MICROBATCHES = {"arctic-480b": 16, "minicpm3-4b": 8}
+DEFAULT_MICROBATCHES = 8
+ADAFACTOR_ARCHS = {"arctic-480b"}  # 0.5T params: factored moments required
+
+
+def _cost(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def _mem(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        out[k] = int(getattr(ma, k, 0) or 0)
+    return out
+
+
+def _optimizer(arch: str):
+    if arch in ADAFACTOR_ARCHS:
+        return adafactor(1e-4)
+    return adamw(3e-4)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    remat: str = "full",
+    xent_chunk: int = 512,
+    fsdp: bool = True,
+    microbatches: int | None = None,
+    rules_override=None,
+    overrides: dict | None = None,
+    act_constraints: bool = False,
+    prefill_chunk: int = 0,
+) -> dict:
+    """Lower + compile one cell; return the roofline record (raises on failure)."""
+    t0 = time.time()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True, "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    mesh_name = "x".join(str(s) for s in mesh.shape.values())
+    # serving: no FSDP (params replicated over the batch axes, TP over model)
+    # and bf16 weights; training: FSDP fp32 masters.
+    serve = shape.kind != "train"
+    rules = rules_override or default_rules(mesh, fsdp=fsdp and not serve)
+    from repro.distributed.sharding import set_activation_axes
+
+    set_activation_axes(
+        batch=rules.get("batch"),
+        model=("model",),
+        enabled=act_constraints or cfg.decode_seq_shard,
+    )
+    model = build_model(cfg, remat=remat, xent_chunk=xent_chunk)
+
+    from repro.models.transformer import shapes_and_specs
+
+    params_shapes, specs = shapes_and_specs(model)
+    if serve:
+        params_shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating)
+            else x,
+            params_shapes,
+        )
+    param_sh = resolve_tree(specs, params_shapes, mesh, rules)
+    n_params = count_params(params_shapes)
+
+    if shape.kind == "train":
+        from repro.train.trainer import make_train_step
+
+        mb = microbatches or TRAIN_MICROBATCHES.get(arch, DEFAULT_MICROBATCHES)
+        opt = _optimizer(arch)
+        step_fn = make_train_step(model, opt, microbatches=mb)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_specs = opt.state_specs(specs, params_shapes)
+        opt_sh = resolve_tree(opt_specs, opt_shapes, mesh, rules)
+        state_shapes = TrainState(
+            step=jax.ShapeDtypeStruct((), jnp.int32), params=params_shapes, opt_state=opt_shapes
+        )
+        state_sh = TrainState(step=replicated(mesh), params=param_sh, opt_state=opt_sh)
+        b_shapes = train_batch_specs(cfg, shape)
+        b_sh = batch_specs(b_shapes, mesh, rules)
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, b_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_shapes, b_shapes)
+            compiled = lowered.compile()
+        kind = "train"
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)[0]
+        )
+        _, cache_specs = model.init_cache(1, 2)
+        cache_sh = resolve_tree(_cache_logical(cache_specs), cache_shapes, mesh, rules)
+        if shape.kind == "prefill":
+            b_shapes = prefill_batch_specs(cfg, shape)
+            if prefill_chunk and cfg.family != "encdec":
+                # chunked prefill: compile the per-chunk incremental step
+                # (writes into the full-length cache at `pos`); the whole
+                # prefill = S/chunk sequential invocations, so FLOPs/bytes/
+                # collective totals are scaled back up by that factor while
+                # peak memory is the per-chunk figure — the HBM-capacity fix.
+                b_shapes = dict(b_shapes)
+                b_shapes["tokens"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, prefill_chunk), jnp.int32
+                )
+                b_shapes.pop("patch_embeds", None)  # patch prefix: chunk 0 only
+            b_sh = batch_specs(b_shapes, mesh, rules)
+
+            def step(params, batch, cache):
+                return model.prefill(params, batch, cache)
+
+            with mesh:
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(param_sh, b_sh, cache_sh),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(2,),
+                ).lower(params_shapes, b_shapes, cache_shapes)
+                compiled = lowered.compile()
+            kind = "prefill"
+        else:
+            tok = decode_token_specs(shape)
+            tok_sh = batch_specs({"tokens": tok}, mesh, rules)["tokens"]
+
+            def step(params, tokens, cache):
+                return model.decode_step(params, tokens, cache)
+
+            with mesh:
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(param_sh, tok_sh, cache_sh),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(2,),
+                ).lower(params_shapes, tok, cache_shapes)
+                compiled = lowered.compile()
+            kind = "decode"
+
+    cost = _cost(compiled)
+    mem = _mem(compiled)
+    hlo_text = compiled.as_text()
+    coll = collective_stats(hlo_text)
+    ana, model_flops = analytic_flops(cfg, n_params, shape, kind)
+    scale = 1.0
+    if kind == "prefill" and prefill_chunk and cfg.family != "encdec":
+        scale = shape.seq_len / prefill_chunk  # whole prefill = scale chunks
+    report = roofline_terms(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)) * scale,
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)) * scale,
+        collective_bytes=float(coll["total_bytes"]) * scale,
+        collective_by_op=coll["by_op"],
+        model_flops=model_flops,
+        analytic=ana,
+        peak_memory_bytes=float(mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)),
+    )
+    rec = report.to_json()
+    rec.update(
+        {
+            "kind": kind,
+            "n_params": n_params,
+            "memory_analysis": mem,
+            "compile_seconds": time.time() - t0,
+            "multi_pod": multi_pod,
+            "skipped": False,
+            "remat": remat,
+            "fsdp": fsdp,
+        }
+    )
+    return rec
+
+
+def _cache_logical(cache_specs):
+    """Cache logical specs: first data axis is 'layer', second is batch."""
+
+    def fix(s):
+        s = tuple(s)
+        if len(s) >= 2 and s[0] == "layer":
+            return s
+        return s
+
+    return jax.tree.map(fix, cache_specs, is_leaf=lambda s: isinstance(s, tuple))
+
+
+def run_cell_to_file(arch, shape_name, multi_pod, out_dir, skip_existing=True, variant="", **kw):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if variant:
+        tag += f"__opt-{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip existing] {tag}")
+        return path
+    print(f"[lower+compile] {tag} ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod, **kw)
+        rec["variant"] = variant or "baseline"
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "multi_pod": multi_pod,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+            "skipped": False,
+        }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = "ERROR " + rec["error"][:120] if "error" in rec else (
+        "SKIP " + rec.get("reason", "") if rec.get("skipped") else
+        f"ok compute={rec['compute_s']:.4f}s mem={rec['memory_s']:.4f}s coll={rec['collective_s']:.4f}s dom={rec['dominant']}"
+    )
+    print(f"[done] {tag}: {status}", flush=True)
+    return path
+
+
+def _parse_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for p in pairs or []:
+        k, _, v = p.partition("=")
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true", default=True)
+    ap.add_argument("--no-skip-existing", dest="skip_existing", action="store_false")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--xent-chunk", type=int, default=512)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="ModelConfig field=value (e.g. decode_seq_shard=true scan_dtype=bfloat16)",
+    )
+    ap.add_argument("--variant", default="", help="tag for §Perf variant records")
+    ap.add_argument("--act-constraints", action="store_true",
+                    help="enable logical activation sharding constraints")
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false", default=True,
+                    help="replicate params over the data axis (small models)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="compile the per-chunk incremental prefill step")
+    args = ap.parse_args()
+
+    arch_list = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shape_list = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or (args.all and not args.multi_pod)) else [args.multi_pod]
+    overrides = _parse_overrides(args.override)
+
+    for mp in meshes:
+        for arch in arch_list:
+            for shape_name in shape_list:
+                run_cell_to_file(
+                    arch, shape_name, mp, args.out,
+                    skip_existing=args.skip_existing, remat=args.remat,
+                    xent_chunk=args.xent_chunk, microbatches=args.microbatches,
+                    overrides=overrides, variant=args.variant,
+                    act_constraints=args.act_constraints, fsdp=args.fsdp,
+                    prefill_chunk=args.prefill_chunk,
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Roofline derivation from compiled dry-run artifacts (TPU v5e targets).
+
+Convention: the compiled artifact is the **per-device SPMD program**, so
+``cost_analysis()`` FLOPs/bytes and the HLO collective bytes are per-chip
+quantities. The three roofline terms (seconds) are therefore
+
+    compute    = per_chip_FLOPs   / 197e12 bf16 FLOP/s
+    memory     = per_chip_bytes   / 819e9  B/s HBM
+    collective = per_chip_coll_B  / 50e9   B/s ICI link
+
+which equals the spec's global formulation (global = per-chip × chips divided
+by chips × peak). ``cost_analysis()`` can undercount FLOPs inside `while`
+bodies (scan over layers), so we also compute an *analytic* global FLOP count
+(6·N_active·tokens + attention quadratic terms); compute uses
+max(hlo, analytic/chips) and MODEL_FLOPS/(chips·flops_used) is the
+useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 per chip, TPU v5e
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+__all__ = [
+    "RooflineReport",
+    "roofline_terms",
+    "analytic_flops",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+]
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    analytic_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    peak_memory_bytes: float
+    collective_by_op: dict
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max-term: 1.0 = perfectly compute-bound."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    collective_by_op: dict,
+    model_flops: float,
+    analytic: float,
+    peak_memory_bytes: float = 0.0,
+    note: str = "",
+) -> RooflineReport:
+    flops_per_chip = max(hlo_flops, analytic / chips)
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops / chips) / flops_per_chip if flops_per_chip > 0 else 0.0
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=hlo_flops,
+        analytic_flops=analytic,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        peak_memory_bytes=peak_memory_bytes,
+        collective_by_op=collective_by_op,
+        note=note,
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs (6·N·D convention)
+# ---------------------------------------------------------------------------
+
+
+def count_params(shapes_tree) -> int:
+    import jax
+
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes_tree))
+
+
+def active_param_fraction(cfg) -> float:
+    """MoE: fraction of expert params active per token (top_k / n_experts)."""
+    if cfg.family != "moe" or cfg.n_experts == 0:
+        return 1.0
+    # approximate: expert params dominate; scale them by k/E, keep the rest.
+    d, f, E, L = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_layers
+    expert = 3 * d * f * E * L
+    attn = 4 * d * cfg.n_heads * cfg.head_dim * L
+    shared = 3 * d * f * cfg.n_shared_experts * L
+    dense = 3 * d * f * L if cfg.moe_dense_residual else 0
+    other = attn + shared + dense
+    total = expert + other
+    active = expert * (cfg.top_k / E) + other
+    return active / total
+
+
+def analytic_flops(cfg, n_params: int, shape, kind: str) -> tuple[float, float]:
+    """(analytic_total, model_flops = 6·N_active·D).
+
+    analytic_total adds the quadratic attention term; both count the global
+    step (all chips).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    embed_params = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_body = max(n_params - embed_params, 1)
+    n_active = n_body * active_param_fraction(cfg) + cfg.d_model * cfg.vocab_size  # logits matmul
+    if kind == "train":
+        tokens = B * S
+        passes = 6.0  # fwd 2 + bwd 4
+    elif kind == "prefill":
+        tokens = B * S
+        passes = 2.0
+    else:  # decode: one token per sequence
+        tokens = B * 1
+        passes = 2.0
+    base = passes * n_active * tokens
+    # attention quadratic term (full attention archs; window caps it)
+    attn = 0.0
+    if cfg.family in ("dense", "moe", "encdec"):
+        eff = S if kind != "decode" else S  # decode reads S keys for 1 query
+        q_tokens = tokens
+        attn = passes * 2 * cfg.n_layers * q_tokens * eff * cfg.n_heads * cfg.head_dim
+    elif cfg.family == "hybrid":
+        w = cfg.attn_window or S
+        n_attn_layers = sum(1 for k in (cfg.block_pattern * cfg.n_layers)[: cfg.n_layers] if k == "attn")
+        eff = min(w, S)
+        attn = passes * 2 * n_attn_layers * tokens * eff * cfg.n_heads * cfg.head_dim
+    # MODEL_FLOPS convention: 6·N_active·D for training, 2·N_active·D for
+    # forward-only (prefill/decode) — the "useful" model compute.
+    return base + attn, passes * n_active * tokens

@@ -1,0 +1,116 @@
+"""Training driver: config-driven launcher for real (host-scale) runs.
+
+``python -m repro.launch.train --arch olmo-1b --steps 200 --reduced \
+      --coreset l2-hull --coreset-k 512``
+
+Wires together: model zoo → data pipeline (optional coreset selection stage)
+→ sharded train step → checkpoint manager → failure-resilient step loop.
+On the CPU container use ``--reduced``; on a pod the same driver runs the
+full config over ``make_production_mesh()``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_reduced_config
+from repro.data.pipeline import CoresetSelector, subset_loader
+from repro.data.synthetic_lm import TokenStreamConfig, sample_batch, sample_modality_stub
+from repro.models import build_model
+from repro.optim import adamw, chain, clip_by_global_norm, cosine_warmup
+from repro.train import init_train_state, make_train_step
+
+
+def build_batch_fn(cfg, batch_size: int, seq_len: int, coreset: str, coreset_k: int, key):
+    stream = TokenStreamConfig(vocab_size=cfg.vocab_size, seq_len=seq_len)
+
+    def augment(b, step):
+        if cfg.modality == "vision":
+            b["patch_embeds"] = sample_modality_stub(
+                b["tokens"].shape[0], cfg.n_modality_positions, cfg.d_model, step
+            )
+        if cfg.family == "encdec":
+            b["frames"] = sample_modality_stub(
+                b["tokens"].shape[0], seq_len, cfg.d_model, step
+            )
+        return b
+
+    if coreset == "none":
+        return lambda step: augment(sample_batch(stream, batch_size, step), step)
+
+    # coreset data-reduction stage: score a corpus once, train on the subset
+    corpus = [sample_batch(stream, 64, s) for s in range(max(coreset_k // 16, 8))]
+    data = {k: np.concatenate([c[k] for c in corpus]) for k in ("tokens", "labels")}
+    rng = np.random.default_rng(0)
+    proj = rng.standard_normal((cfg.vocab_size, 32)).astype(np.float32) * 0.05
+
+    def featurize(tokens):  # cheap proxy: random-projected bag of tokens
+        return proj[tokens].mean(axis=1)
+
+    sel = CoresetSelector(featurize=featurize, method=coreset)
+    subset = sel.select(data["tokens"], k=coreset_k, key=key)
+    fn = subset_loader(data, subset, batch_size)
+    return lambda step: augment(fn(step), step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--coreset", default="none", choices=("none", "l2-hull", "l2-only", "uniform"))
+    ap.add_argument("--coreset-k", type=int, default=512)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = chain(
+        clip_by_global_norm(1.0),
+        adamw(cosine_warmup(args.lr, warmup=20, total=args.steps)),
+    )
+    state = init_train_state(params, opt)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    start = 0
+    if mgr and args.resume and mgr.latest_step() is not None:
+        state = mgr.restore(jax.tree.map(np.zeros_like, state))
+        from repro.train.state import TrainState
+
+        state = TrainState(*[jax.tree.map(jax.numpy.asarray, s) for s in state])
+        start = int(state.step)
+        print(f"[resume] from step {start}")
+
+    batch_fn = build_batch_fn(
+        cfg, args.batch, args.seq, args.coreset, args.coreset_k, jax.random.PRNGKey(7)
+    )
+    step_fn = jax.jit(make_train_step(model, opt))
+    t0 = time.time()
+    for i in range(start, args.steps):
+        state, metrics = step_fn(state, batch_fn(i))
+        if (i + 1) % args.log_every == 0:
+            print(
+                f"step {i + 1:5d} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"({(time.time() - t0) / (i - start + 1):.3f}s/step)",
+                flush=True,
+            )
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, state)
+    if mgr:
+        mgr.save(args.steps, state)
+    print(f"done: {args.steps} steps, final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model, build_model
+
+__all__ = ["ModelConfig", "Model", "build_model"]

@@ -1,0 +1,58 @@
+"""Encoder-decoder pieces (whisper-style): cross-attention + sinusoidal pos.
+
+The audio frontend (log-mel + conv downsampling) is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, T_frames, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _sdpa, dense_init
+
+Params = dict
+
+
+def sinusoid_pos(T: int, D: int, dtype=jnp.float32) -> jax.Array:
+    pos = np.arange(T)[:, None]
+    div = np.exp(np.arange(0, D, 2) * (-np.log(10000.0) / D))
+    pe = np.zeros((T, D), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe, dtype)
+
+
+def init_cross_attention(key, cfg: ModelConfig) -> tuple[Params, dict]:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, (cfg.n_heads, cfg.head_dim)),
+        "wk": dense_init(ks[1], d, (cfg.n_kv_heads, cfg.head_dim)),
+        "wv": dense_init(ks[2], d, (cfg.n_kv_heads, cfg.head_dim)),
+        "wo": dense_init(ks[3], cfg.q_dim, (d,)).reshape(cfg.n_heads, cfg.head_dim, d),
+    }
+    s = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv", None),
+        "wv": ("embed", "kv", None),
+        "wo": ("heads", None, "embed"),
+    }
+    return p, s
+
+
+def cross_kv(params: Params, memory: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output (done once)."""
+    k = jnp.einsum("btd,dhk->bthk", memory, params["wk"].astype(memory.dtype))
+    v = jnp.einsum("btd,dhk->bthk", memory, params["wv"].astype(memory.dtype))
+    return k, v
+
+
+def cross_attention_apply(
+    params: Params, x: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

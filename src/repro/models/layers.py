@@ -1,0 +1,711 @@
+"""Functional neural-net layers shared by all assigned architectures.
+
+Conventions:
+  * Parameters are nested dicts of jnp arrays; every init function returns
+    ``(params, specs)`` where specs mirrors params with tuples of *logical*
+    axis names ('embed', 'heads', 'kv', 'mlp', 'vocab', 'expert', 'state',
+    'layer', None). ``repro.distributed.sharding`` resolves these to mesh
+    PartitionSpecs.
+  * Activations are bf16 (configurable); softmax / norms / router run fp32.
+  * All sequence ops support three modes: train (full causal), prefill
+    (causal, returns cache), decode (single token against a cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+Params = dict
+Specs = dict
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_shape, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    shape = (in_dim,) + tuple(np.atleast_1d(out_shape))
+    scale = 1.0 / np.sqrt(in_dim)
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig) -> tuple[Params, Specs]:
+    if cfg.norm_type == "nonparametric_ln":
+        return {}, {}
+    if cfg.norm_type == "layernorm":
+        return (
+            {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))},
+            {"scale": ("embed",), "bias": ("embed",)},
+        )
+    return {"scale": jnp.ones((cfg.d_model,))}, {"scale": ("embed",)}
+
+
+def apply_norm(params: Params, x: jax.Array, norm_type: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        return (xf * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    # layer norm (parametric or not)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if norm_type == "layernorm":
+        xf = xf * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return xf.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (half-rotation / llama convention)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S) int."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (S, half) or (B,S,half)
+    if ang.ndim == 2:  # (S, half) → broadcast batch
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / MQA, optional local window, train/prefill/decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, (cfg.n_heads, cfg.head_dim)),
+        "wk": dense_init(ks[1], d, (cfg.n_kv_heads, cfg.head_dim)),
+        "wv": dense_init(ks[2], d, (cfg.n_kv_heads, cfg.head_dim)),
+        "wo": dense_init(ks[3], cfg.q_dim, (d,)).reshape(cfg.n_heads, cfg.head_dim, d),
+    }
+    s = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv", None),
+        "wv": ("embed", "kv", None),
+        "wo": ("heads", None, "embed"),
+    }
+    return p, s
+
+
+def _sdpa(q, k, v, mask, logits_softcap: float = 0.0):
+    """Reference scaled-dot-product attention (fp32 softmax).
+
+    q: (B, S, H, hd), k/v: (B, T, KV, hd) — H % KV == 0 (GQA broadcast).
+    mask: (B, 1, S, T) or (S, T) boolean, True = attend.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    qg = q.reshape(B, S, KV, groups, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if logits_softcap > 0:
+        scores = logits_softcap * jnp.tanh(scores / logits_softcap)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]  # (1,1,1,S,T)
+    else:
+        mask = mask[:, :, None]  # (B,1,1,S,T) → align kv/group dims
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: int = 0) -> jax.Array:
+    """(S, T) boolean mask: query i attends key j iff j ≤ i+offset (and within window)."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def blocked_causal_attention(q, k, v, block: int = 1024, logits_softcap: float = 0.0):
+    """Full causal attention without the S×S score matrix (flash-style, XLA).
+
+    Outer scan over q blocks; inner fori over k blocks up to the diagonal
+    with an online-softmax accumulator — peak score memory is (H, bq, bk)
+    instead of (H, S, S). This is the jnp twin of kernels/flash_attention
+    (used on the XLA path for long-prefill cells; same math, same oracle).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    pad = (-S) % block
+    if pad:
+        zq = jnp.zeros((B, pad, H, hd), q.dtype)
+        zkv = jnp.zeros((B, pad, KV, hd), k.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zkv], 1)
+        v = jnp.concatenate([v, zkv], 1)
+    Sp = S + pad
+    nb = Sp // block
+    scale = 1.0 / np.sqrt(hd)
+    qb = q.reshape(B, nb, block, KV, groups, hd).swapaxes(0, 1)  # (nb,B,bq,KV,G,hd)
+    kb = k.reshape(B, nb, block, KV, hd)
+    vb = v.reshape(B, nb, block, KV, hd)
+
+    def q_block(carry, inp):
+        qi, iq = inp  # (B,bq,KV,G,hd), scalar block index
+
+        def kv_step(j, state):
+            acc, m, l = state
+            kj = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qi, kj).astype(jnp.float32) * scale
+            if logits_softcap > 0:
+                s = logits_softcap * jnp.tanh(s / logits_softcap)
+            qpos = iq * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+            kpos = j * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+            s = jnp.where((kpos <= qpos)[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, -1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return acc, m_new, l_new
+
+        acc0 = jnp.zeros((B, KV, groups, block, hd), jnp.float32)
+        m0 = jnp.full((B, KV, groups, block, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, groups, block, 1), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(0, iq + 1, kv_step, (acc0, m0, l0))
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)  # (B,KV,G,bq,hd)
+        return carry, out.transpose(0, 3, 1, 2, 4)  # (B,bq,KV,G,hd)
+
+    _, outs = jax.lax.scan(q_block, None, (qb, jnp.arange(nb)))
+    out = outs.swapaxes(0, 1).reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+def local_attention_chunked(q, k, v, window: int, logits_softcap: float = 0.0):
+    """Banded (local) causal attention without the S×S score matrix.
+
+    Splits S into window-sized chunks; chunk i attends to chunks i−1 and i
+    with the exact band mask — peak score memory W×2W per chunk instead of
+    S×S (the recurrentgemma-32k-prefill enabler). Scan over chunks.
+    """
+    B, S, H, hd = q.shape
+    W = window
+    pad = (-S) % W
+    if pad:
+        zq = jnp.zeros((B, pad, H, hd), q.dtype)
+        zkv = jnp.zeros((B, pad, k.shape[2], hd), k.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zkv], 1)
+        v = jnp.concatenate([v, zkv], 1)
+    Sp = S + pad
+    nc = Sp // W
+    KV = k.shape[2]
+
+    def chunks(a):
+        return a.reshape(B, nc, W, a.shape[2], hd).swapaxes(0, 1)  # (nc,B,W,·,hd)
+
+    qc, kc, vc = chunks(q), chunks(k), chunks(v)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:1]), kc[:-1]], 0)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:1]), vc[:-1]], 0)
+
+    # band mask within a (W, 2W) window: key j (absolute offset j−W relative
+    # to the chunk start) visible to query i iff 0 ≤ i−(j−W) < W.
+    qpos = jnp.arange(W)[:, None]
+    kpos = jnp.arange(2 * W)[None, :] - W
+    band = (kpos <= qpos) & (kpos > qpos - W)
+
+    def body(_, inp):
+        qi, ki, vi, kp, vp, first = inp
+        kk = jnp.concatenate([kp, ki], 1)  # (B, 2W, KV, hd)
+        vv = jnp.concatenate([vp, vi], 1)
+        mask = band & ~(first & (kpos < 0))  # chunk 0 has no predecessor
+        out = _sdpa(qi, kk, vv, mask, logits_softcap)
+        return None, out
+
+    first_flags = jnp.zeros((nc, 1, 1), bool).at[0].set(True)
+    _, outs = jax.lax.scan(body, None, (qc, kc, vc, k_prev, v_prev, first_flags))
+    out = outs.swapaxes(0, 1).reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+def _ring_slot_positions(total: jax.Array, W: int) -> jax.Array:
+    """Absolute position held by each ring slot after `total` writes."""
+    i = jnp.arange(W)
+    return total - 1 - ((total - 1 - i) % W)
+
+
+def _vector_pos_decode(params, q, k, v, cache, cfg, *, window: int = 0):
+    """Single-token decode with per-row cache positions (continuous batching).
+
+    q/k/v: (B, 1, H|KV, hd); cache['pos']: (B,) int32. Supports linear caches
+    (scatter at pos_b) and ring caches (scatter at pos_b % W, window mask).
+    """
+    B = q.shape[0]
+    pos = cache["pos"]  # (B,)
+    W_cache = cache["k"].shape[1]
+    ring = window > 0 and W_cache == window
+    rows = jnp.arange(B)
+    slots = (pos % window) if ring else pos
+    K = cache["k"].at[rows, slots].set(k[:, 0].astype(cache["k"].dtype))
+    V = cache["v"].at[rows, slots].set(v[:, 0].astype(cache["v"].dtype))
+    if ring:
+        abs_pos = jax.vmap(lambda t: _ring_slot_positions(t, window))(pos + 1)  # (B, W)
+        mask = (abs_pos >= 0) & (abs_pos <= pos[:, None]) & (abs_pos > pos[:, None] - window)
+    else:
+        kpos = jnp.arange(W_cache)[None, :]
+        mask = kpos <= pos[:, None]
+        if window > 0:
+            mask &= kpos > pos[:, None] - window
+    out = _sdpa(
+        q, K.astype(q.dtype), V.astype(q.dtype), mask[:, None, None, :], cfg.logits_softcap
+    )
+    return out, {"k": K, "v": V, "pos": pos + 1}
+
+
+def attention_apply(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Params | None = None,
+    window: int = 0,
+    bidirectional: bool = False,
+    use_rope: bool = True,
+) -> tuple[jax.Array, Params | None]:
+    """Returns (out, new_cache).
+
+    cache = {'k','v','pos'}: linear buffer (global attention) or ring buffer
+    (local attention, cache length == window).
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if window > 0 and S > window:
+            out = local_attention_chunked(q, k, v, window, cfg.logits_softcap)
+        elif (
+            cfg.prefill_flash_block
+            and not bidirectional
+            and window == 0
+            and S > cfg.prefill_flash_block
+        ):
+            out = blocked_causal_attention(
+                q, k, v, cfg.prefill_flash_block, cfg.logits_softcap
+            )
+        else:
+            mask = (
+                jnp.ones((S, S), bool)
+                if bidirectional
+                else causal_mask(S, S, 0, window)
+            )
+            out = _sdpa(q, k, v, mask, cfg.logits_softcap)
+        new_cache = None
+    else:
+        pos = cache["pos"]  # scalar int32, or (B,) per-slot positions (serving)
+        if getattr(pos, "ndim", 0) == 1 and S == 1:
+            out, new_cache = _vector_pos_decode(
+                params, q, k, v, cache, cfg, window=window
+            )
+            out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+            return out, new_cache
+        W_cache = cache["k"].shape[1]
+        ring = window > 0 and W_cache == window
+        if ring and S >= window:
+            # prefill-from-empty into a ring cache: local attention over the
+            # full sequence, then park the last W keys at slots p % W.
+            out = local_attention_chunked(q, k, v, window, cfg.logits_softcap)
+            tail_k = k[:, -window:].astype(cache["k"].dtype)
+            tail_v = v[:, -window:].astype(cache["v"].dtype)
+            shift = (pos + S) % window  # slot of tail element 0 is (pos+S-W) % W
+            K = jnp.roll(tail_k, shift, axis=1)
+            V = jnp.roll(tail_v, shift, axis=1)
+            new_cache = {"k": K, "v": V, "pos": pos + S}
+        elif ring:
+            # incremental write(s) at slots (pos+i) % W, masked by absolute pos
+            slots = (pos + jnp.arange(S)) % window
+            K = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+            V = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+            total = pos + S
+            abs_pos = _ring_slot_positions(total, window)[None, :]  # (1, W)
+            qpos = pos + jnp.arange(S)[:, None]
+            mask = (abs_pos >= 0) & (abs_pos <= qpos) & (abs_pos > qpos - window)
+            out = _sdpa(q, K.astype(x.dtype), V.astype(x.dtype), mask, cfg.logits_softcap)
+            new_cache = {"k": K, "v": V, "pos": total}
+        else:
+            K = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)
+            )
+            V = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)
+            )
+            if cfg.decode_seq_shard:
+                # §Perf flash-decode: keep the KV cache sharded over the model
+                # axis along its *sequence* dim; GSPMD then computes partial
+                # softmax stats per shard and combines with tiny all-reduces
+                # instead of all-gathering the cache.
+                from repro.distributed.sharding import constrain
+
+                K = constrain(K, "batch", "model", None, None)
+                V = constrain(V, "batch", "model", None, None)
+            if cfg.prefill_flash_block and window == 0 and S > cfg.prefill_flash_block:
+                # long prefill-from-empty: blocked online-softmax over the
+                # *fresh* k/v (cache holds nothing before `pos`) — avoids the
+                # (S, T) score buffer entirely (§Perf: memory-bound prefill).
+                out = blocked_causal_attention(
+                    q, k, v, cfg.prefill_flash_block, cfg.logits_softcap
+                )
+            else:
+                T = K.shape[1]
+                kpos = jnp.arange(T)[None, :]
+                qpos = pos + jnp.arange(S)[:, None]
+                mask = kpos <= qpos
+                if window > 0:
+                    mask &= kpos > qpos - window
+                out = _sdpa(q, K.astype(x.dtype), V.astype(x.dtype), mask, cfg.logits_softcap)
+            new_cache = {"k": K, "v": V, "pos": pos + S}
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype=jnp.bfloat16):
+    """Stacked-over-layers KV cache pytree (zeros) + matching logical specs.
+
+    The sequence dim carries the 'seq_kv' logical name: unsharded by default;
+    the flash-decode §Perf variant maps it to the model axis.
+    """
+    kv = lambda: jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+    seq = "seq_kv" if cfg.decode_seq_shard else None
+    spec = ("layer", "batch", seq, "kv", None)
+    params = {"k": kv(), "v": kv(), "pos": jnp.zeros((), jnp.int32)}
+    specs = {"k": spec, "v": spec, "pos": ()}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek family)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.n_heads
+    r, dc = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    p = {
+        "wdq": dense_init(ks[0], d, (r,)),
+        "q_norm": jnp.ones((r,)),
+        "wuq": dense_init(ks[1], r, (H, nope + rdim)),
+        "wdkv": dense_init(ks[2], d, (dc,)),
+        "kv_norm": jnp.ones((dc,)),
+        "wkr": dense_init(ks[3], d, (rdim,)),     # shared rope key (per token)
+        "wuk": dense_init(ks[4], dc, (H, nope)),
+        "wuv": dense_init(ks[5], dc, (H, vdim)),
+        "wo": dense_init(ks[6], H * vdim, (d,)).reshape(H, vdim, d),
+    }
+    s = {
+        "wdq": ("embed", None),
+        "q_norm": (None,),
+        "wuq": (None, "heads", None),
+        "wdkv": ("embed", None),
+        "kv_norm": (None,),
+        "wkr": ("embed", None),
+        "wuk": (None, "heads", None),
+        "wuv": (None, "heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    return p, s
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_apply(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    """MLA: KV compressed to a (dc + rope_dim) latent per token — the cache
+    stores only the latent, the decisive memory win at long context."""
+    B, S, _ = x.shape
+    H, nope, rdim, vdim = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = _rms(x @ params["wdq"].astype(x.dtype), params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = _rms(x @ params["wdkv"].astype(x.dtype), params["kv_norm"])  # (B,S,dc)
+    krope = rope((x @ params["wkr"].astype(x.dtype))[:, :, None, :], positions, cfg.rope_theta)
+
+    if cache is not None:
+        pos = cache["pos"]
+        if getattr(pos, "ndim", 0) == 1 and S == 1:
+            # per-slot positions (continuous batching): scatter row-wise
+            rows = jnp.arange(B)
+            CKV = cache["ckv"].at[rows, pos].set(ckv[:, 0].astype(cache["ckv"].dtype))
+            KR = cache["krope"].at[rows, pos].set(krope[:, 0].astype(cache["krope"].dtype))
+            new_cache = {"ckv": CKV, "krope": KR, "pos": pos + 1}
+            ckv_all, krope_all = CKV.astype(x.dtype), KR.astype(x.dtype)
+            T = ckv_all.shape[1]
+            mask = (jnp.arange(T)[None, :] <= pos[:, None])[:, None, :]  # (B,1,T)
+        else:
+            CKV = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+            KR = jax.lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype), (0, pos, 0, 0))
+            if cfg.decode_seq_shard:
+                from repro.distributed.sharding import constrain
+
+                CKV = constrain(CKV, "batch", "model", None)
+                KR = constrain(KR, "batch", "model", None, None)
+            new_cache = {"ckv": CKV, "krope": KR, "pos": pos + S}
+            ckv_all, krope_all = CKV.astype(x.dtype), KR.astype(x.dtype)
+            T = ckv_all.shape[1]
+            kpos = jnp.arange(T)[None, :]
+            qpos = pos + jnp.arange(S)[:, None]
+            mask = kpos <= qpos
+    else:
+        ckv_all, krope_all = ckv, krope
+        T = S
+        mask = causal_mask(S, S)
+        new_cache = None
+
+    k_nope = jnp.einsum("btc,chk->bthk", ckv_all, params["wuk"].astype(x.dtype))
+    vmat = jnp.einsum("btc,chk->bthk", ckv_all, params["wuv"].astype(x.dtype))
+    scores = (
+        jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+        + jnp.einsum("bshk,btok->bhst", q_rope, jnp.broadcast_to(krope_all, (B, T, 1, rdim)))
+    ).astype(jnp.float32) / np.sqrt(nope + rdim)
+    scores = jnp.where(mask[None, None] if mask.ndim == 2 else mask[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, -1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", w, vmat)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype=jnp.bfloat16):
+    seq = "seq_kv" if cfg.decode_seq_shard else None
+    params = {
+        "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_layers, batch, max_len, 1, cfg.qk_rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    specs = {
+        "ckv": ("layer", "batch", seq, None),
+        "krope": ("layer", "batch", seq, None, None),
+        "pos": (),
+    }
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    p = {
+        "wi_gate": dense_init(ks[0], d, (f,)),
+        "wi_up": dense_init(ks[1], d, (f,)),
+        "wo": dense_init(ks[2], f, (d,)),
+    }
+    s = {"wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return p, s
+
+
+def mlp_apply(params: Params, x: jax.Array, act: str) -> jax.Array:
+    gate = x @ params["wi_gate"].astype(x.dtype)
+    up = x @ params["wi_up"].astype(x.dtype)
+    actv = jax.nn.silu if act == "silu" else (lambda g: jax.nn.gelu(g, approximate=True))
+    return (actv(gate) * up) @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture-of-Experts with capacity-based scatter dispatch
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 5)
+    d, f = cfg.d_model, cfg.d_ff
+    E = max(cfg.n_experts, cfg.moe_pad_experts)  # pad for EP divisibility
+    p = {
+        "router": dense_init(ks[0], d, (E,)),
+        "wi_gate": jax.vmap(lambda k: dense_init(k, d, (f,)))(jax.random.split(ks[1], E)),
+        "wi_up": jax.vmap(lambda k: dense_init(k, d, (f,)))(jax.random.split(ks[2], E)),
+        "wo": jax.vmap(lambda k: dense_init(k, f, (d,)))(jax.random.split(ks[3], E)),
+    }
+    s = {
+        "router": ("embed", None),
+        "wi_gate": ("expert", "embed", "mlp"),
+        "wi_up": ("expert", "embed", "mlp"),
+        "wo": ("expert", "mlp", "embed"),
+    }
+    return p, s
+
+
+def moe_apply(
+    params: Params, x: jax.Array, cfg: ModelConfig, act: str
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed experts with static capacity; returns (out, aux_loss).
+
+    Scatter-based dispatch (no (T,k,E,C) one-hot): tokens are scatter-added
+    into per-expert (E, C, D) buffers, processed by batched expert matmuls,
+    and gathered back weighted by router probs. Static shapes throughout.
+    """
+    B, S, D = x.shape
+    E_real, K = cfg.n_experts, cfg.top_k
+    E = max(E_real, cfg.moe_pad_experts)
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    if E > E_real:  # dummy padding experts are never routed
+        pad_mask = jnp.arange(E) >= E_real
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (T, K)
+    top_p = top_p / jnp.clip(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    C = int(np.ceil(K * T / E_real * cfg.capacity_factor))
+    # position of each (token, slot) within its expert, in flat (T*K) order
+    flat_e = top_e.reshape(-1)  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # exclusive cumsum
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], 1)[:, 0]  # (T*K,)
+    keep = flat_pos < C
+
+    # scatter tokens into expert buffers
+    buf = jnp.zeros((E, C, D), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    safe_pos = jnp.where(keep, flat_pos, C - 1)
+    contrib = jnp.where(keep[:, None], xt[tok_idx], 0.0)
+    buf = buf.at[flat_e, safe_pos].add(contrib)
+
+    # batched expert FFN
+    actv = jax.nn.silu if act == "silu" else (lambda g: jax.nn.gelu(g, approximate=True))
+    h = actv(jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wi_up"].astype(x.dtype))
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(x.dtype))
+
+    # gather back with router weights
+    y_tok = y_e[flat_e, safe_pos]  # (T*K, D)
+    w = (top_p.reshape(-1) * keep).astype(x.dtype)
+    y = jnp.sum((y_tok * w[:, None]).reshape(T, K, D), axis=1)
+
+    # load-balancing aux loss (Switch-style, over real experts)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), 0)
+    frac_probs = jnp.mean(probs, 0)
+    aux = E_real * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": embed_init(k1, cfg.vocab_size, cfg.d_model)}
+    s = {"embed": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(k2, cfg.vocab_size, cfg.d_model)
+        s["unembed"] = ("vocab", "embed")
+    return p, s
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig, dtype) -> jax.Array:
+    from repro.distributed.sharding import activation_axes_enabled, constrain
+
+    table = params["embed"].astype(dtype)
+    if activation_axes_enabled():
+        # Pin the gather output to plain batch sharding. Without this, GSPMD
+        # picks an exotic sharding for the vocab-sharded-table gather and
+        # falls back to "involuntary full rematerialization" (replicate +
+        # repartition) of the whole (B, S, D) activation — §Perf cell B fix.
+        x = constrain(table[tokens], "batch", None, None)
+    else:
+        x = table[tokens]
+    if cfg.scale_embeddings:
+        x = x * np.sqrt(cfg.d_model)
+    return x
+
+
+def logits_from_hidden(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    table = params.get("unembed", params["embed"])
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+
+
+def softmax_xent_weighted(
+    logits: jax.Array, labels: jax.Array, weights: jax.Array
+) -> jax.Array:
+    """Per-example-weighted token CE: logits (B,S,V), labels (B,S), weights (B,)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None], -1)[..., 0]
+    tok_loss = lse - gold  # (B, S)
+    w = weights[:, None].astype(jnp.float32)
+    return jnp.sum(tok_loss * w) / (jnp.sum(w) * labels.shape[1])
+
+
+def chunked_xent_weighted(
+    x: jax.Array, table: jax.Array, labels: jax.Array, weights: jax.Array, chunk: int = 512
+) -> jax.Array:
+    """CE without materializing (B,S,V): loop over sequence chunks.
+
+    Peak logits memory drops from S/chunk× — the §Perf memory optimization
+    for large-vocab archs (gemma / recurrentgemma, V = 256k).
+    """
+    B, S, D = x.shape
+    # pick the chunk count as a divisor of S with S/n ≤ chunk
+    n_chunks = max(-(-S // chunk), 1)
+    while S % n_chunks != 0:
+        n_chunks += 1
+    chunk = S // n_chunks
+    xc = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)          # (n,B,c,D)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)         # (n,B,c)
+
+    def body(carry, inp):
+        xcb, lcb = inp
+        logits = jnp.einsum("bcd,vd->bcv", xcb, table.astype(xcb.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, lcb[..., None], -1)[..., 0]
+        tok = (lse - gold) * weights[:, None].astype(jnp.float32)
+        return carry + jnp.sum(tok), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (jnp.sum(weights).astype(jnp.float32) * S)

@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) + local-attention hybrid.
+
+The recurrent block runs a Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(W_a x_t + b_a)           (recurrence gate)
+    i_t = σ(W_x x_t + b_x)           (input gate)
+    a_t = exp(−c · r_t · softplus(Λ))  ∈ (0,1)         (c = 8)
+    h_t = a_t h_{t-1} + √(1−a_t²) · (i_t ⊙ x_t)
+
+Prefill uses ``jax.lax.associative_scan`` (log-depth), decode is one step —
+constant state, so ``long_500k`` is exact and cheap for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+Params = dict
+RGLRU_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> tuple[Params, dict]:
+    """Full Griffin recurrent block: gate branch ⊗ (conv → RG-LRU) branch."""
+    from repro.models.layers import dense_init
+
+    W = cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[0], (W,), minval=0.9**2, maxval=0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # softplus⁻¹(−log u / c)
+    p = {
+        "gate_proj": dense_init(ks[1], cfg.d_model, (W,)),
+        "rec_proj": dense_init(ks[2], cfg.d_model, (W,)),
+        "conv_w": 0.1 * jax.random.normal(ks[3], (cfg.conv_kernel, W)),
+        "conv_b": jnp.zeros((W,)),
+        "wa": dense_init(ks[4], W, (W,)),
+        "ba": jnp.zeros((W,)),
+        "wx": dense_init(ks[5], W, (W,)),
+        "bx": jnp.zeros((W,)),
+        "lam": lam,
+        "out_proj": dense_init(jax.random.fold_in(key, 7), W, (cfg.d_model,)),
+    }
+    s = {
+        "gate_proj": ("embed", "lru"),
+        "rec_proj": ("embed", "lru"),
+        "conv_w": (None, "lru"),
+        "conv_b": ("lru",),
+        "wa": (None, "lru"),
+        "ba": ("lru",),
+        "wx": (None, "lru"),
+        "bx": ("lru",),
+        "lam": ("lru",),
+        "out_proj": ("lru", "embed"),
+    }
+    return p, s
+
+
+def _rglru_scan(xw: jax.Array, params: Params, h0: jax.Array, scan_dtype=jnp.float32):
+    """xw: (B,T,W) post-conv inputs. Returns (y (B,T,W), h_T).
+
+    ``scan_dtype``: dtype of the associative-scan carry. The gates/decay are
+    always computed in f32; carrying the scan in bf16 halves the dominant
+    HBM traffic of the (B,T,W) scan intermediates (§Perf knob for the
+    memory-bound recurrentgemma train cell).
+    """
+    r = jax.nn.sigmoid((xw @ params["wa"].astype(xw.dtype) + params["ba"].astype(xw.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xw @ params["wx"].astype(xw.dtype) + params["bx"].astype(xw.dtype)).astype(jnp.float32))
+    log_a = -RGLRU_C * r * jax.nn.softplus(params["lam"])  # (B,T,W) ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+    b = beta * (i * xw.astype(jnp.float32))
+
+    # prepend h0 as a pseudo-step: h_t = a_t h_{t-1} + b_t with h_0 given
+    a_all = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1).astype(scan_dtype)
+    b_all = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1).astype(scan_dtype)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bv = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    h = Bv[:, 1:]  # (B,T,W)
+    return h.astype(xw.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_block_apply(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    B, T, _ = x.shape
+    gate = jax.nn.gelu(x @ params["gate_proj"].astype(x.dtype), approximate=True)
+    xr = x @ params["rec_proj"].astype(x.dtype)
+
+    # causal depthwise conv with history tail
+    k = params["conv_w"].shape[0]
+    tail = cache["conv"].astype(x.dtype) if cache is not None else jnp.zeros((B, k - 1, xr.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, xr], axis=1)
+    xw = sum(xp[:, i : i + T, :] * params["conv_w"][i].astype(x.dtype) for i in range(k))
+    xw = xw + params["conv_b"].astype(x.dtype)
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else tail
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, xr.shape[-1]), jnp.float32)
+    if T == 1 and cache is not None:
+        r = jax.nn.sigmoid((xw @ params["wa"].astype(x.dtype) + params["ba"].astype(x.dtype)).astype(jnp.float32))
+        i = jax.nn.sigmoid((xw @ params["wx"].astype(x.dtype) + params["bx"].astype(x.dtype)).astype(jnp.float32))
+        log_a = -RGLRU_C * r[:, 0] * jax.nn.softplus(params["lam"])
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+        h = a * h0.astype(jnp.float32) + beta * (i[:, 0] * xw[:, 0].astype(jnp.float32))
+        y = h[:, None].astype(x.dtype)
+        hT = h
+    else:
+        y, hT = _rglru_scan(xw, params, h0, scan_dtype=jnp.dtype(cfg.scan_dtype))
+
+    out = (y * gate) @ params["out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail.astype(cache["conv"].dtype), "h": hT.astype(jnp.float32), "pos": cache["pos"] + T}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, n_layers: int):
+    W = cfg.lru_width
+    params = {
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_kernel - 1, W), jnp.bfloat16),
+        "h": jnp.zeros((n_layers, batch, W), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    specs = {
+        "conv": ("layer", "batch", None, "lru"),
+        "h": ("layer", "batch", "lru"),
+        "pos": (),
+    }
+    return params, specs

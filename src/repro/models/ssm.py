@@ -1,0 +1,195 @@
+"""Mamba2 / SSD (state-space duality) block — attention-free sequence mixing.
+
+Chunked SSD algorithm (Dao & Gu 2024) with log-space decay accumulation:
+within a chunk the quadratic "attention-like" form runs on the MXU; across
+chunks a small recurrent state (H, P, N) is passed — O(T) time, O(1) state,
+which is exactly why ``long_500k`` runs for this family. The within-chunk
+einsums are mirrored by the Pallas kernel in ``repro.kernels.ssd``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim, d_state)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return d_inner, d_inner // cfg.ssm_headdim, cfg.ssm_headdim, cfg.ssm_state
+
+
+def init_ssd(key, cfg: ModelConfig) -> tuple[Params, dict]:
+    d_inner, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm_ngroups
+    conv_dim = d_inner + 2 * G * N
+    ks = jax.random.split(key, 6)
+    from repro.models.layers import dense_init
+
+    p = {
+        "in_proj": dense_init(ks[0], cfg.d_model, (2 * d_inner + 2 * G * N + H,)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim)),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))),  # softplus⁻¹(0.01)
+        "norm_scale": jnp.ones((d_inner,)),
+        "out_proj": dense_init(ks[2], d_inner, (cfg.d_model,)),
+    }
+    s = {
+        "in_proj": ("embed", "heads"),
+        "conv_w": (None, "heads"),
+        "conv_b": ("heads",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_scale": ("heads",),
+        "out_proj": ("heads", "embed"),
+    }
+    return p, s
+
+
+def _split_in_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, H, P, N = ssm_dims(cfg)
+    G = cfg.ssm_ngroups
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv; `tail` is the (k-1)-step history for decode/resume."""
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = tail.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, T+k-1, C)
+    out = sum(xp[:, i : i + xBC.shape[1], :] * w[i].astype(xBC.dtype) for i in range(k))
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out + b.astype(xBC.dtype)), new_tail
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, state0, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,T,H,P) inputs; dt: (B,T,H) positive steps; A: (H,) negative;
+    Bm/Cm: (B,T,G,N) with G=1 broadcast over H. state0: (B,H,P,N).
+    Returns (y (B,T,H,P), state_T).
+    """
+    Bt, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    xc = xh.reshape(Bt, nc, chunk, H, P)
+    dtc = dt.reshape(Bt, nc, chunk, H)
+    Bc = jnp.broadcast_to(Bm.reshape(Bt, nc, chunk, -1, N)[:, :, :, :1, :], (Bt, nc, chunk, 1, N))
+    Cc = jnp.broadcast_to(Cm.reshape(Bt, nc, chunk, -1, N)[:, :, :, :1, :], (Bt, nc, chunk, 1, N))
+
+    def scan_chunk(state, inp):
+        xq, dtq, Bq, Cq = inp  # (B,chunk,H,P), (B,chunk,H), (B,chunk,1,N) ×2
+        la = jnp.cumsum(dtq * A, axis=1)  # (B,chunk,H) log-decay prefix (≤0 slope)
+        # intra-chunk quadratic form: scores_ij = (C_i·B_j)·exp(la_i−la_j), j≤i
+        cb = jnp.einsum("bign,bjgn->bij", Cq, Bq)  # G=1 → head-shared
+        diff = la[:, :, None, :] - la[:, None, :, :]  # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((xq.shape[1], xq.shape[1]), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = cb[:, :, :, None] * decay  # (B,i,j,H)
+        xdt = xq * dtq[..., None]  # (B,chunk,H,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores.astype(xq.dtype), xdt)
+        # inter-chunk contribution from incoming state
+        y_inter = jnp.einsum("bign,bhpn,bih->bihp",
+                             Cq.astype(xq.dtype),
+                             state.astype(xq.dtype),
+                             jnp.exp(la).astype(xq.dtype))
+        # state update
+        tail = jnp.exp(la[:, -1:, :] - la)  # (B,chunk,H) decay to chunk end
+        state_add = jnp.einsum("bjgn,bjhp,bjh->bhpn", Bq.astype(xq.dtype), xdt, tail.astype(xq.dtype))
+        state_new = state * jnp.exp(la[:, -1, :])[:, :, None, None].astype(state.dtype) + state_add.astype(state.dtype)
+        return state_new, y_intra + y_inter
+
+    # scan over chunks (leading axis nc)
+    inps = (
+        xc.swapaxes(0, 1),
+        dtc.swapaxes(0, 1),
+        Bc.swapaxes(0, 1),
+        Cc.swapaxes(0, 1),
+    )
+    state_T, ys = jax.lax.scan(scan_chunk, state0, inps)
+    y = ys.swapaxes(0, 1).reshape(Bt, T, H, P)
+    return y, state_T
+
+
+def ssd_apply(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    """Full Mamba2 block: in_proj → conv → SSD → gated norm → out_proj."""
+    Bt, T, _ = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt = _split_in_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+
+    conv_tail = cache["conv"] if cache is not None else None
+    xBC, new_tail = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_tail)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + cfg.ssm_ngroups * N], axis=-1)
+    xh = xs.reshape(Bt, T, H, P)
+    Bm = Bm.reshape(Bt, T, cfg.ssm_ngroups, N)
+    Cm = Cm.reshape(Bt, T, cfg.ssm_ngroups, N)
+
+    state0 = (
+        cache["state"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((Bt, H, P, N), jnp.float32)
+    )
+
+    if T == 1 and cache is not None:
+        # decode: one recurrent step, no chunking
+        a = jnp.exp(dt[:, 0] * A)  # (B,H)
+        Bq = jnp.broadcast_to(Bm[:, 0, :1], (Bt, 1, N))
+        Cq = jnp.broadcast_to(Cm[:, 0, :1], (Bt, 1, N))
+        upd = jnp.einsum("bgn,bhp,bh->bhpn", Bq.astype(jnp.float32), xh[:, 0].astype(jnp.float32), dt[:, 0])
+        state = state0 * a[:, :, None, None] + upd
+        y = jnp.einsum("bgn,bhpn->bhp", Cq.astype(jnp.float32), state).astype(x.dtype)
+        y = y[:, None]  # (B,1,H,P)
+    else:
+        chunk = min(cfg.ssm_chunk, T)
+        assert T % chunk == 0, f"T={T} must be divisible by chunk={chunk}"
+        y, state = _ssd_chunked(xh, dt, A, Bm, Cm, state0, chunk)
+
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bt, T, d_inner)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+    y = (yf * params["norm_scale"]).astype(x.dtype)
+    out = y @ params["out_proj"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail, "state": state.astype(cache["state"].dtype), "pos": cache["pos"] + T}
+    return out, new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, n_layers: int, dtype=jnp.float32):
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * N
+    params = {
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros((n_layers, batch, H, P, N), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    specs = {
+        "conv": ("layer", "batch", None, "heads"),
+        "state": ("layer", "batch", "heads", None, None),
+        "pos": (),
+    }
+    return params, specs

@@ -1,0 +1,643 @@
+"""Model assembly for every assigned architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` with functional entry points:
+
+  * ``init(key) -> (params, specs)``      — params + logical sharding specs
+  * ``loss_fn(params, batch) -> (loss, metrics)``  — per-example-weighted CE
+  * ``prefill(params, batch, cache) -> (logits_last, cache)``
+  * ``decode_step(params, tokens, cache) -> (logits, cache)``
+  * ``init_cache(batch, max_len) -> (cache, specs)``
+
+Layers are stacked over a leading L axis and executed with ``jax.lax.scan``
+(homogeneous stacks) so the HLO stays small for 30–60-layer configs and remat
+policies apply uniformly. Hybrids scan over super-blocks of the pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+
+Params = dict
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    remat: str = "none"
+
+
+def _stack_init(key, n: int, init_fn) -> tuple[Params, dict]:
+    """vmap a per-layer init over n layers; prepend 'layer' to every spec."""
+    if n == 0:
+        return {}, {}
+    params = jax.vmap(lambda k: init_fn(k)[0])(jax.random.split(key, n))
+    _, specs = init_fn(key)  # same structure, specs are layer-local
+    specs = jax.tree.map(
+        lambda s: ("layer",) + tuple(s), specs, is_leaf=lambda s: isinstance(s, tuple)
+    )
+    return params, specs
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM (dense / mla / moe): shared assembly
+# ---------------------------------------------------------------------------
+
+
+def _init_lm(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["emb"], s["emb"] = L.init_embeddings(keys[0], cfg)
+
+    def layer_init(k):
+        ks = jax.random.split(k, 6)
+        lp, ls = {}, {}
+        lp["ln_attn"], ls["ln_attn"] = L.init_norm(cfg)
+        lp["ln_mlp"], ls["ln_mlp"] = L.init_norm(cfg)
+        if cfg.attn_type == "mla":
+            lp["attn"], ls["attn"] = L.init_mla(ks[0], cfg)
+        else:
+            lp["attn"], ls["attn"] = L.init_attention(ks[0], cfg)
+        if cfg.family == "moe":
+            lp["moe"], ls["moe"] = L.init_moe(ks[1], cfg)
+            if cfg.n_shared_experts > 0:
+                lp["shared"], ls["shared"] = L.init_mlp(
+                    ks[2], cfg, d_ff=cfg.d_ff * cfg.n_shared_experts
+                )
+            if cfg.moe_dense_residual:
+                lp["dense"], ls["dense"] = L.init_mlp(ks[3], cfg)
+        else:
+            lp["mlp"], ls["mlp"] = L.init_mlp(ks[1], cfg)
+        return lp, ls
+
+    p["layers"], s["layers"] = _stack_init(keys[1], cfg.n_layers, layer_init)
+    p["ln_f"], s["ln_f"] = L.init_norm(cfg)
+    return p, s
+
+
+def _lm_layer(
+    lp: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions,
+    cache=None,
+    window: int = 0,
+):
+    """One decoder layer; returns (x, new_cache_slice, aux)."""
+    h = L.apply_norm(lp["ln_attn"], x, cfg.norm_type)
+    if cfg.attn_type == "mla":
+        attn_out, new_cache = L.mla_apply(lp["attn"], h, cfg, positions=positions, cache=cache)
+    else:
+        attn_out, new_cache = L.attention_apply(
+            lp["attn"], h, cfg, positions=positions, cache=cache, window=window
+        )
+    x = x + attn_out
+    h = L.apply_norm(lp["ln_mlp"], x, cfg.norm_type)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        mo, aux = L.moe_apply(lp["moe"], h, cfg, cfg.mlp_act)
+        if cfg.n_shared_experts > 0:
+            mo = mo + L.mlp_apply(lp["shared"], h, cfg.mlp_act)
+        if cfg.moe_dense_residual:
+            mo = mo + L.mlp_apply(lp["dense"], h, cfg.mlp_act)
+        x = x + mo
+    else:
+        x = x + L.mlp_apply(lp["mlp"], h, cfg.mlp_act)
+    return x, new_cache, aux
+
+
+def _lm_hidden(params, cfg: ModelConfig, x, positions, remat: str):
+    """Run the layer stack in full-sequence (train/prefill-no-cache) mode."""
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _lm_layer(lp, x, cfg, positions=positions, cache=None)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_maybe_remat(body, remat), (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg.norm_type)
+    return x, aux
+
+
+def _embed_with_prefix(params, cfg: ModelConfig, batch, dtype):
+    """Token embeddings, with [vlm] patch prefix when provided."""
+    x = L.embed_tokens(params["emb"], batch["tokens"], cfg, dtype)
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(dtype), x], axis=1)
+    return x
+
+
+def _build_lm(cfg: ModelConfig, remat: str, xent_chunk: int) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        return _init_lm(key, cfg)
+
+    def loss_fn(params, batch):
+        x = _embed_with_prefix(params, cfg, batch, dtype)
+        S_total = x.shape[1]
+        positions = jnp.arange(S_total)
+        x, aux = _lm_hidden(params, cfg, x, positions, remat)
+        n_text = batch["tokens"].shape[1]
+        x = x[:, S_total - n_text :]
+        table = params["emb"].get("unembed", params["emb"]["embed"])
+        weights = batch.get("weights", jnp.ones((x.shape[0],), jnp.float32))
+        ce = L.chunked_xent_weighted(x, table, batch["labels"], weights, chunk=xent_chunk)
+        loss = ce + cfg.router_aux_coef * aux / max(cfg.n_layers, 1)
+        return loss, {"ce": ce, "aux": aux}
+
+    def init_cache(batch: int, max_len: int):
+        if cfg.attn_type == "mla":
+            return L.init_mla_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+        return L.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+
+    def _run_with_cache(params, x, cache):
+        pos = cache["pos"]
+        S = x.shape[1]
+        # scalar pos → (S,) positions; per-slot vector pos → (B, S)
+        positions = (pos[:, None] if pos.ndim == 1 else pos) + jnp.arange(S)
+
+        def body(carry, slices):
+            x, aux = carry
+            lp, lc = slices
+            lc = dict(lc, pos=pos)
+            x, new_lc, a = _lm_layer(lp, x, cfg, positions=positions, cache=lc)
+            new_lc.pop("pos")
+            return (x, aux + a), new_lc
+
+        layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+        (x, _), new_layer_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["layers"], layer_cache)
+        )
+        x = L.apply_norm(params["ln_f"], x, cfg.norm_type)
+        new_cache = dict(new_layer_cache, pos=pos + S)
+        return x, new_cache
+
+    def prefill(params, batch, cache):
+        x = _embed_with_prefix(params, cfg, batch, dtype)
+        x, cache = _run_with_cache(params, x, cache)
+        logits = L.logits_from_hidden(params["emb"], x[:, -1:], cfg)
+        return logits, cache
+
+    def decode_step(params, tokens, cache):
+        x = L.embed_tokens(params["emb"], tokens, cfg, dtype)
+        x, cache = _run_with_cache(params, x, cache)
+        logits = L.logits_from_hidden(params["emb"], x, cfg)
+        return logits, cache
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache, remat)
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2): norm → SSD block → residual, no MLP (per published config)
+# ---------------------------------------------------------------------------
+
+
+def _build_ssm(cfg: ModelConfig, remat: str, xent_chunk: int) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        keys = jax.random.split(key, 3)
+        p, s = {}, {}
+        p["emb"], s["emb"] = L.init_embeddings(keys[0], cfg)
+
+        def layer_init(k):
+            lp, ls = {}, {}
+            lp["ln"], ls["ln"] = L.init_norm(cfg)
+            lp["ssd"], ls["ssd"] = SSM.init_ssd(k, cfg)
+            return lp, ls
+
+        p["layers"], s["layers"] = _stack_init(keys[1], cfg.n_layers, layer_init)
+        p["ln_f"], s["ln_f"] = L.init_norm(cfg)
+        return p, s
+
+    def _hidden(params, x, cache):
+        pos = None if cache is None else cache["pos"]
+
+        def body(carry, slices):
+            x = carry
+            if cache is None:
+                lp = slices
+                h = L.apply_norm(lp["ln"], x, cfg.norm_type)
+                out, _ = SSM.ssd_apply(lp["ssd"], h, cfg, cache=None)
+                return x + out, None
+            lp, lc = slices
+            lc = dict(lc, pos=pos)
+            h = L.apply_norm(lp["ln"], x, cfg.norm_type)
+            out, new_lc = SSM.ssd_apply(lp["ssd"], h, cfg, cache=lc)
+            new_lc.pop("pos")
+            return x + out, new_lc
+
+        if cache is None:
+            x, _ = jax.lax.scan(_maybe_remat(lambda c, lp: body(c, lp), remat), x, params["layers"])
+            new_cache = None
+        else:
+            layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+            x, new_layer = jax.lax.scan(body, x, (params["layers"], layer_cache))
+            new_cache = dict(new_layer, pos=cache["pos"] + x.shape[1])
+        x = L.apply_norm(params["ln_f"], x, cfg.norm_type)
+        return x, new_cache
+
+    def loss_fn(params, batch):
+        x = L.embed_tokens(params["emb"], batch["tokens"], cfg, dtype)
+        x, _ = _hidden(params, x, None)
+        table = params["emb"].get("unembed", params["emb"]["embed"])
+        weights = batch.get("weights", jnp.ones((x.shape[0],), jnp.float32))
+        ce = L.chunked_xent_weighted(x, table, batch["labels"], weights, chunk=xent_chunk)
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def init_cache(batch: int, max_len: int):
+        return SSM.init_ssd_cache(cfg, batch, cfg.n_layers)
+
+    def prefill(params, batch, cache):
+        x = L.embed_tokens(params["emb"], batch["tokens"], cfg, dtype)
+        x, cache = _hidden(params, x, cache)
+        logits = L.logits_from_hidden(params["emb"], x[:, -1:], cfg)
+        return logits, cache
+
+    def decode_step(params, tokens, cache):
+        x = L.embed_tokens(params["emb"], tokens, cfg, dtype)
+        x, cache = _hidden(params, x, cache)
+        logits = L.logits_from_hidden(params["emb"], x, cfg)
+        return logits, cache
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache, remat)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (recurrentgemma): pattern-tiled super-blocks of {rec, attn} + MLP
+# ---------------------------------------------------------------------------
+
+
+def _build_hybrid(cfg: ModelConfig, remat: str, xent_chunk: int) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    pattern = cfg.block_pattern
+    plen = len(pattern)
+    n_groups, n_tail = divmod(cfg.n_layers, plen)
+    tail_pattern = pattern[:n_tail]
+
+    def _block_init(kind: str):
+        def init_one(k):
+            ks = jax.random.split(k, 2)
+            lp, ls = {}, {}
+            lp["ln_mix"], ls["ln_mix"] = L.init_norm(cfg)
+            lp["ln_mlp"], ls["ln_mlp"] = L.init_norm(cfg)
+            if kind == "rec":
+                lp["mix"], ls["mix"] = RG.init_rglru_block(ks[0], cfg)
+            else:
+                lp["mix"], ls["mix"] = L.init_attention(ks[0], cfg)
+            lp["mlp"], ls["mlp"] = L.init_mlp(ks[1], cfg)
+            return lp, ls
+
+        return init_one
+
+    def _group_init(k, pat):
+        ks = jax.random.split(k, len(pat))
+        p, s = {}, {}
+        for i, kind in enumerate(pat):
+            p[f"b{i}"], s[f"b{i}"] = _block_init(kind)(ks[i])
+        return p, s
+
+    def init(key):
+        keys = jax.random.split(key, 4)
+        p, s = {}, {}
+        p["emb"], s["emb"] = L.init_embeddings(keys[0], cfg)
+        p["groups"], s["groups"] = _stack_init(
+            keys[1], n_groups, lambda k: _group_init(k, pattern)
+        )
+        if n_tail:
+            p["tail"], s["tail"] = _group_init(keys[2], tail_pattern)
+        p["ln_f"], s["ln_f"] = L.init_norm(cfg)
+        return p, s
+
+    def _block_apply(kind, lp, x, positions, cache):
+        h = L.apply_norm(lp["ln_mix"], x, cfg.norm_type)
+        if kind == "rec":
+            out, new_cache = RG.rglru_block_apply(lp["mix"], h, cfg, cache=cache)
+        else:
+            out, new_cache = L.attention_apply(
+                lp["mix"], h, cfg, positions=positions, cache=cache, window=cfg.attn_window
+            )
+        x = x + out
+        h = L.apply_norm(lp["ln_mlp"], x, cfg.norm_type)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg.mlp_act)
+        return x, new_cache
+
+    def _group_apply(gp, x, positions, caches, pat):
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            c = None if caches is None else caches[f"b{i}"]
+            x, nc = _block_apply(kind, gp[f"b{i}"], x, positions, c)
+            if caches is not None:
+                new_caches[f"b{i}"] = nc
+        return x, (new_caches if caches is not None else None)
+
+    def _hidden(params, x, positions, cache):
+        if cache is None:
+            def body(x, gp):
+                x, _ = _group_apply(gp, x, positions, None, pattern)
+                return x, None
+
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["groups"])
+            if n_tail:
+                x, _ = _group_apply(params["tail"], x, positions, None, tail_pattern)
+            new_cache = None
+        else:
+            pos = cache["pos"]
+
+            def body(x, slices):
+                gp, gc = slices
+                gc = jax.tree.map(lambda v: v, gc)
+                for i in range(plen):
+                    gc[f"b{i}"] = dict(gc[f"b{i}"], pos=pos)
+                x, nc = _group_apply(gp, x, positions, gc, pattern)
+                for i in range(plen):
+                    nc[f"b{i}"].pop("pos")
+                return x, nc
+
+            group_cache = cache["groups"]
+            x, new_groups = jax.lax.scan(body, x, (params["groups"], group_cache))
+            new_cache = {"groups": new_groups, "pos": pos + x.shape[1]}
+            if n_tail:
+                tc = {
+                    f"b{i}": dict(cache["tail"][f"b{i}"], pos=pos) for i in range(n_tail)
+                }
+                x, ntc = _group_apply(params["tail"], x, positions, tc, tail_pattern)
+                for i in range(n_tail):
+                    ntc[f"b{i}"].pop("pos")
+                new_cache["tail"] = ntc
+        x = L.apply_norm(params["ln_f"], x, cfg.norm_type)
+        return x, new_cache
+
+    def loss_fn(params, batch):
+        x = L.embed_tokens(params["emb"], batch["tokens"], cfg, dtype)
+        positions = jnp.arange(batch["tokens"].shape[1])
+        x, _ = _hidden(params, x, positions, None)
+        table = params["emb"].get("unembed", params["emb"]["embed"])
+        weights = batch.get("weights", jnp.ones((x.shape[0],), jnp.float32))
+        ce = L.chunked_xent_weighted(x, table, batch["labels"], weights, chunk=xent_chunk)
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def _one_block_cache(kind, batch, max_len):
+        if kind == "rec":
+            c, s = RG.init_rglru_cache(cfg, batch, 1)
+        else:
+            window = cfg.attn_window or max_len
+            c, s = L.init_kv_cache(cfg, batch, min(window, max_len), 1, dtype)
+        c = {k: (v[0] if k != "pos" else v) for k, v in c.items()}
+        c.pop("pos")
+        s = {k: v for k, v in s.items() if k != "pos"}
+        s = jax.tree.map(lambda t: tuple(t[1:]), s, is_leaf=lambda t: isinstance(t, tuple))
+        return c, s
+
+    def init_cache(batch: int, max_len: int):
+        # stacked over groups for the scan; tail separate
+        caches, specs = {}, {}
+        gc, gs = {}, {}
+        for i, kind in enumerate(pattern):
+            c, s = _one_block_cache(kind, batch, max_len)
+            gc[f"b{i}"] = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (n_groups,) + v.shape), c)
+            gs[f"b{i}"] = jax.tree.map(
+                lambda t: ("layer",) + tuple(t), s, is_leaf=lambda t: isinstance(t, tuple)
+            )
+        caches["groups"], specs["groups"] = gc, gs
+        if n_tail:
+            tc, ts = {}, {}
+            for i, kind in enumerate(tail_pattern):
+                tc[f"b{i}"], ts[f"b{i}"] = _one_block_cache(kind, batch, max_len)
+            caches["tail"], specs["tail"] = tc, ts
+        caches["pos"] = jnp.zeros((), jnp.int32)
+        specs["pos"] = ()
+        return caches, specs
+
+    def prefill(params, batch, cache):
+        x = L.embed_tokens(params["emb"], batch["tokens"], cfg, dtype)
+        pos = cache["pos"]
+        positions = (pos[:, None] if pos.ndim == 1 else pos) + jnp.arange(batch["tokens"].shape[1])
+        x, cache = _hidden(params, x, positions, cache)
+        logits = L.logits_from_hidden(params["emb"], x[:, -1:], cfg)
+        return logits, cache
+
+    def decode_step(params, tokens, cache):
+        x = L.embed_tokens(params["emb"], tokens, cfg, dtype)
+        pos = cache["pos"]
+        positions = (pos[:, None] if pos.ndim == 1 else pos) + jnp.arange(tokens.shape[1])
+        x, cache = _hidden(params, x, positions, cache)
+        logits = L.logits_from_hidden(params["emb"], x, cfg)
+        return logits, cache
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache, remat)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper): bidirectional encoder + causal/cross decoder
+# ---------------------------------------------------------------------------
+
+
+def _build_encdec(cfg: ModelConfig, remat: str, xent_chunk: int) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        keys = jax.random.split(key, 5)
+        p, s = {}, {}
+        p["emb"], s["emb"] = L.init_embeddings(keys[0], cfg)
+
+        def enc_layer(k):
+            ks = jax.random.split(k, 2)
+            lp, ls = {}, {}
+            lp["ln_attn"], ls["ln_attn"] = L.init_norm(cfg)
+            lp["ln_mlp"], ls["ln_mlp"] = L.init_norm(cfg)
+            lp["attn"], ls["attn"] = L.init_attention(ks[0], cfg)
+            lp["mlp"], ls["mlp"] = L.init_mlp(ks[1], cfg)
+            return lp, ls
+
+        def dec_layer(k):
+            ks = jax.random.split(k, 3)
+            lp, ls = {}, {}
+            lp["ln_self"], ls["ln_self"] = L.init_norm(cfg)
+            lp["ln_cross"], ls["ln_cross"] = L.init_norm(cfg)
+            lp["ln_mlp"], ls["ln_mlp"] = L.init_norm(cfg)
+            lp["self"], ls["self"] = L.init_attention(ks[0], cfg)
+            lp["cross"], ls["cross"] = ED.init_cross_attention(ks[1], cfg)
+            lp["mlp"], ls["mlp"] = L.init_mlp(ks[2], cfg)
+            return lp, ls
+
+        p["enc"], s["enc"] = _stack_init(keys[1], cfg.n_enc_layers, enc_layer)
+        p["dec"], s["dec"] = _stack_init(keys[2], cfg.n_dec_layers, dec_layer)
+        p["ln_enc"], s["ln_enc"] = L.init_norm(cfg)
+        p["ln_dec"], s["ln_dec"] = L.init_norm(cfg)
+        return p, s
+
+    def encode(params, frames):
+        x = frames.astype(dtype) + ED.sinusoid_pos(frames.shape[1], cfg.d_model, dtype)[None]
+        positions = jnp.arange(frames.shape[1])
+
+        def body(x, lp):
+            h = L.apply_norm(lp["ln_attn"], x, cfg.norm_type)
+            a, _ = L.attention_apply(
+                lp["attn"], h, cfg, positions=positions, bidirectional=True, use_rope=False
+            )
+            x = x + a
+            h = L.apply_norm(lp["ln_mlp"], x, cfg.norm_type)
+            return x + L.mlp_apply(lp["mlp"], h, cfg.mlp_act), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["enc"])
+        return L.apply_norm(params["ln_enc"], x, cfg.norm_type)
+
+    def _dec_layer(lp, x, positions, self_cache, ck, cv):
+        h = L.apply_norm(lp["ln_self"], x, cfg.norm_type)
+        a, new_cache = L.attention_apply(
+            lp["self"], h, cfg, positions=positions, cache=self_cache, use_rope=False
+        )
+        x = x + a
+        h = L.apply_norm(lp["ln_cross"], x, cfg.norm_type)
+        x = x + ED.cross_attention_apply(lp["cross"], h, ck, cv, cfg)
+        h = L.apply_norm(lp["ln_mlp"], x, cfg.norm_type)
+        return x + L.mlp_apply(lp["mlp"], h, cfg.mlp_act), new_cache
+
+    def decode_hidden(params, tokens, memory_or_kv, cache):
+        x = L.embed_tokens(params["emb"], tokens, cfg, dtype)
+        S = tokens.shape[1]
+        if cache is None:
+            x = x + ED.sinusoid_pos(S, cfg.d_model, dtype)[None]
+            positions = jnp.arange(S)
+        else:
+            pos0 = cache["pos"]
+            pe = ED.sinusoid_pos(cfg.dec_max_len, cfg.d_model, dtype)
+            x = x + jax.lax.dynamic_slice_in_dim(pe, pos0, S, 0)[None]
+            positions = pos0 + jnp.arange(S)
+
+        if cache is None:
+            memory = memory_or_kv
+
+            def body(x, lp):
+                ck, cv = ED.cross_kv(lp["cross"], memory)
+                x, _ = _dec_layer(lp, x, positions, None, ck, cv)
+                return x, None
+
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["dec"])
+            new_cache = None
+        else:
+            def body(x, slices):
+                lp, lc = slices
+                sc = dict(lc["self"], pos=cache["pos"])
+                x, nsc = _dec_layer(lp, x, positions, sc, lc["cross_k"], lc["cross_v"])
+                nsc.pop("pos")
+                return x, {"self": nsc, "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+
+            layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+            x, new_layer = jax.lax.scan(body, x, (params["dec"], layer_cache))
+            new_cache = dict(new_layer, pos=cache["pos"] + S)
+        return L.apply_norm(params["ln_dec"], x, cfg.norm_type), new_cache
+
+    def loss_fn(params, batch):
+        memory = encode(params, batch["frames"])
+        x, _ = decode_hidden(params, batch["tokens"], memory, None)
+        table = params["emb"].get("unembed", params["emb"]["embed"])
+        weights = batch.get("weights", jnp.ones((x.shape[0],), jnp.float32))
+        ce = L.chunked_xent_weighted(x, table, batch["labels"], weights, chunk=xent_chunk)
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def init_cache(batch: int, max_len: int, enc_len: int | None = None):
+        enc_len = enc_len or max_len
+        dec_len = cfg.dec_max_len
+        Ld = cfg.n_dec_layers
+        c = {
+            "self": {
+                "k": jnp.zeros((Ld, batch, dec_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((Ld, batch, dec_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            },
+            "cross_k": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "cross_v": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        kvspec = ("layer", "batch", None, "kv", None)
+        seq = "seq_kv" if cfg.decode_seq_shard else None
+        crossspec = ("layer", "batch", seq, "kv", None)
+        s = {
+            "self": {"k": kvspec, "v": kvspec},
+            "cross_k": crossspec,
+            "cross_v": crossspec,
+            "pos": (),
+        }
+        return c, s
+
+    def prefill(params, batch, cache):
+        """Encode frames, install cross-KV, prefill the decoder prefix."""
+        memory = encode(params, batch["frames"])
+
+        def per_layer_kv(lp):
+            return ED.cross_kv(lp["cross"], memory)
+
+        ck, cv = jax.vmap(per_layer_kv)(params["dec"])
+        cache = dict(cache, cross_k=ck.astype(dtype), cross_v=cv.astype(dtype))
+        logits, cache = decode_step(params, batch["tokens"], cache)
+        return logits[:, -1:], cache
+
+    def decode_step(params, tokens, cache):
+        x, cache = decode_hidden(params, tokens, None, cache)
+        logits = L.logits_from_hidden(params["emb"], x, cfg)
+        return logits, cache
+
+    return Model(cfg, init, loss_fn, prefill, decode_step, init_cache, remat)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def shapes_and_specs(model: Model):
+    """(params ShapeDtypeStructs, logical specs) without allocating params.
+
+    ``model.init`` returns (params, specs); specs are plain-Python tuples, so
+    we capture them by side effect while eval_shape traces the array part.
+    """
+    box = {}
+
+    def f(key):
+        p, s = model.init(key)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def build_model(cfg: ModelConfig, remat: str = "none", xent_chunk: int = 512) -> Model:
+    if cfg.family in ("dense", "moe"):
+        return _build_lm(cfg, remat, xent_chunk)
+    if cfg.family == "ssm":
+        return _build_ssm(cfg, remat, xent_chunk)
+    if cfg.family == "hybrid":
+        return _build_hybrid(cfg, remat, xent_chunk)
+    if cfg.family == "encdec":
+        return _build_encdec(cfg, remat, xent_chunk)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,25 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    lion,
+    sgd,
+    chain,
+    clip_by_global_norm,
+    apply_updates,
+)
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "lion",
+    "sgd",
+    "chain",
+    "clip_by_global_norm",
+    "apply_updates",
+    "constant",
+    "cosine_warmup",
+    "linear_warmup",
+]

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step: int32 scalar → lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        frac = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.asarray(lr, jnp.float32) * frac
+
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+
+    return fn

@@ -1,0 +1,3 @@
+from repro.serve.engine import GenerationConfig, Request, ServeEngine
+
+__all__ = ["GenerationConfig", "Request", "ServeEngine"]

@@ -1,0 +1,10 @@
+from repro.train.state import TrainState, init_train_state
+from repro.train.trainer import make_train_step, make_serve_steps, shard_train_step
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_serve_steps",
+    "shard_train_step",
+]

@@ -1,0 +1,24 @@
+"""TrainState pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array       # scalar int32
+    params: Any
+    opt_state: Any
+
+    def replace(self, **kw) -> "TrainState":
+        return self._replace(**kw)
+
+
+def init_train_state(params, optimizer) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+    )

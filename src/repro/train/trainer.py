@@ -1,0 +1,150 @@
+"""Training / serving step builders with mesh-aware sharding.
+
+``make_train_step`` produces a jitted SPMD step:
+  * per-example weighted loss (coreset weights flow straight through)
+  * optional microbatch gradient accumulation (sequential lax.scan — the
+    standard memory/batch trade for the big configs)
+  * optimizer update (any repro.optim Optimizer)
+  * donated state for in-place HBM reuse
+
+``make_serve_steps`` builds prefill/decode for the serving shapes. Both honor
+logical sharding rules resolved against the active mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    batch_specs,
+    default_rules,
+    replicated,
+    resolve_tree,
+)
+from repro.optim import Optimizer, apply_updates
+from repro.train.state import TrainState, init_train_state
+
+PyTree = Any
+
+
+def loss_and_grads(model, params, batch):
+    (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+        params, batch
+    )
+    return loss, metrics, grads
+
+
+def make_train_step(
+    model,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    """Pure step function (jit/shard outside via `shard_train_step`)."""
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def accum_grads(params, batch):
+        """Split the global batch into microbatches and accumulate grads."""
+
+        def reshape(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(reshape, batch)
+
+        def body(carry, mbatch):
+            loss_acc, grads_acc = carry
+            loss, _, grads = single_grads(params, mbatch)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mb)
+        scale = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return loss * scale, {}, grads
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        fn = accum_grads if microbatches > 1 else single_grads
+        loss, metrics, grads = fn(state.params, batch)
+        updates, opt_state = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        params = apply_updates(state.params, updates)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "step": state.step}
+        return (
+            state.replace(step=state.step + 1, params=params, opt_state=opt_state),
+            out_metrics,
+        )
+
+    return train_step
+
+
+def shard_train_step(
+    train_step,
+    model,
+    optimizer,
+    mesh: Mesh,
+    rules: ShardingRules | None = None,
+    *,
+    params_shapes: PyTree | None = None,
+    specs: PyTree | None = None,
+    batch_shapes: dict | None = None,
+    donate: bool = True,
+):
+    """jit the step with NamedShardings resolved from logical specs.
+
+    Returns (jitted_step, state_shardings, batch_shardings).
+    """
+    rules = rules or default_rules(mesh)
+    if params_shapes is None or specs is None:
+        from repro.models.transformer import shapes_and_specs
+
+        params_shapes, specs = shapes_and_specs(model)
+    param_sh = resolve_tree(specs, params_shapes, mesh, rules)
+    opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+
+    if optimizer.state_specs is not None:
+        opt_specs = optimizer.state_specs(specs, params_shapes)
+        opt_sh = resolve_tree(opt_specs, opt_shapes, mesh, rules)
+    else:
+        opt_sh = jax.tree.map(lambda _: replicated(mesh), opt_shapes)
+    state_sh = TrainState(step=replicated(mesh), params=param_sh, opt_state=opt_sh)
+    if batch_shapes is not None:
+        batch_sh = batch_specs(batch_shapes, mesh, rules)
+    else:
+        batch_sh = None
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, state_sh, batch_sh
+
+
+def make_serve_steps(model):
+    """(prefill_fn, decode_fn) pure functions ready for jit with shardings."""
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    def decode(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return prefill, decode

@@ -1,0 +1,11 @@
+from repro.utils.tree import tree_size, tree_bytes, tree_allclose, tree_norm
+from repro.utils.prng import key_iter, fold_in_str
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_allclose",
+    "tree_norm",
+    "key_iter",
+    "fold_in_str",
+]

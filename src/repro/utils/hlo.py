@@ -1,0 +1,77 @@
+"""HLO text analysis: collective wire bytes + op census for the roofline.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+compiled module text and sum the *result* buffer sizes of every collective
+op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, including their async -start forms). Result-bytes is a
+consistent proxy for wire bytes per device (all-reduce rings move ~2× the
+buffer, all-gather exactly the result minus the local shard); we keep one
+convention across all measurements so §Perf deltas are meaningful.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum bytes over every shape literal in an HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<type>\(?[^=]*?\)?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\("
+)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """{'total_bytes', 'by_op': {op: {'count', 'bytes'}}} from HLO text.
+
+    Bytes are the *result* buffer size of each collective in the per-device
+    program (async ops counted once at their -start/plain form).
+    """
+    by_op: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        b = shape_bytes(m.group("type"))
+        by_op[op]["count"] += 1
+        by_op[op]["bytes"] += b
+    total = sum(v["bytes"] for v in by_op.values())
+    return {"total_bytes": total, "by_op": dict(by_op)}
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    """Best-effort trip counts of while loops (for scan-aware flop scaling)."""
+    return [int(m) for m in re.findall(r"trip_count=(\d+)", hlo_text)]

@@ -1,0 +1,19 @@
+"""PRNG helpers: deterministic named key derivation for reproducible pipelines."""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+
+def fold_in_str(key: jax.Array, name: str) -> jax.Array:
+    """Deterministically fold a string tag into a PRNG key."""
+    h = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def key_iter(key: jax.Array):
+    """Infinite iterator of fresh subkeys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bernstein import (
+    DataScaler,
+    bernstein_design,
+    bernstein_deriv_design,
+    binomial_coefficients,
+    monotone_theta,
+    monotone_theta_inverse,
+)
+
+
+@pytest.mark.parametrize("degree", [1, 3, 6, 10])
+def test_partition_of_unity(degree):
+    t = jnp.linspace(0, 1, 101)
+    basis = bernstein_design(t, degree)
+    assert basis.shape == (101, degree + 1)
+    np.testing.assert_allclose(np.asarray(basis.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(basis) >= -1e-6).all()
+
+
+@pytest.mark.parametrize("degree", [2, 6])
+def test_derivative_matches_finite_difference(degree):
+    t = jnp.linspace(0.05, 0.95, 37)
+    eps = 1e-4
+    d_analytic = bernstein_deriv_design(t, degree)
+    d_numeric = (bernstein_design(t + eps, degree) - bernstein_design(t - eps, degree)) / (
+        2 * eps
+    )
+    np.testing.assert_allclose(np.asarray(d_analytic), np.asarray(d_numeric), atol=1e-2)
+
+
+def test_binomial_coefficients():
+    np.testing.assert_allclose(binomial_coefficients(4), [1, 4, 6, 4, 1])
+
+
+@given(st.lists(st.floats(-3, 3), min_size=2, max_size=9))
+@settings(max_examples=30, deadline=None)
+def test_monotone_reparam_strictly_increasing(raw):
+    theta = monotone_theta(jnp.asarray(raw, jnp.float32))
+    diffs = np.diff(np.asarray(theta))
+    assert (diffs > 0).all()
+
+
+def test_monotone_reparam_roundtrip():
+    theta = jnp.asarray([-1.0, 0.0, 0.7, 2.0, 5.0])
+    raw = monotone_theta_inverse(theta)
+    back = monotone_theta(raw)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(theta), rtol=1e-4, atol=1e-4)
+
+
+def test_monotone_transform_has_positive_derivative_everywhere():
+    key = jax.random.PRNGKey(0)
+    raw = jax.random.normal(key, (7,))
+    theta = monotone_theta(raw)
+    t = jnp.linspace(0, 1, 200)
+    deriv = bernstein_deriv_design(t, 6) @ theta
+    assert (np.asarray(deriv) > 0).all()
+
+
+def test_scaler_maps_to_unit_interval():
+    rng = np.random.default_rng(0)
+    Y = rng.normal(3.0, 10.0, (500, 3))
+    sc = DataScaler.fit(Y)
+    T = np.asarray(sc.transform(jnp.asarray(Y)))
+    assert (T > 0).all() and (T < 1).all()

@@ -1,0 +1,65 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)), "b": jnp.zeros((8,))},
+        "opt": {"m": jnp.ones((8, 8)), "step": jnp.asarray(5, jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(10, state)
+    restored = mgr.restore(jax.tree.map(np.zeros_like, state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for s in (1, 2):
+        mgr.save(s, {"x": jnp.full((3,), float(s))})
+    out = mgr.restore({"x": np.zeros(3)}, step=1)
+    np.testing.assert_array_equal(out["x"], np.ones(3))
+
+
+def test_crash_mid_save_leaves_previous_intact(tmp_path):
+    """A stray .tmp dir (simulated crash) must not corrupt restore."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1))
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert mgr.latest_step() == 1
+    restored = mgr.restore(jax.tree.map(np.zeros_like, _state(1)))
+    assert restored is not None
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        mgr.restore({"x": np.zeros((5,))})
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(7, _state(7), block=False)
+    mgr.wait()
+    assert mgr.latest_step() == 7

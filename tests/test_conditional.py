@@ -1,0 +1,69 @@
+"""Conditional MCTM (paper §4 extension): recovery + conditional coreset."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.conditional import (
+    CMCTMConfig,
+    build_conditional_coreset,
+    cnll,
+    conditional_coreset_scores,
+    fit_cmctm,
+)
+
+
+@pytest.fixture(scope="module")
+def cond_data():
+    rng = np.random.default_rng(0)
+    n, F = 4000, 2
+    X = rng.standard_normal((n, F))
+    beta_true = np.array([[1.5, -0.5], [0.3, 0.8]])
+    eps = rng.standard_normal((n, 2)) @ np.linalg.cholesky(
+        np.array([[1, 0.6], [0.6, 1]])
+    ).T
+    Y = X @ beta_true.T + eps
+    return X, Y, beta_true
+
+
+def test_conditional_fit_recovers_shift(cond_data):
+    X, Y, beta_true = cond_data
+    cfg = CMCTMConfig(J=2, n_features=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    fit = fit_cmctm(cfg, scaler, Y, X, steps=900)
+    # conditional NLL should beat the unconditional fit by ≈ the explained var
+    uncond = M.fit_mctm(cfg.base, scaler, Y, steps=900)
+    assert fit.final_nll < uncond.final_nll - 0.2 * Y.shape[0]
+    # β enters through the monotone transform scale; check the *direction*
+    b = np.asarray(fit.params.beta)
+    corr0 = np.corrcoef(b[0], beta_true[0])[0, 1]
+    assert abs(corr0) > 0.9
+
+
+def test_conditional_coreset_scores_dimension(cond_data):
+    X, Y, _ = cond_data
+    cfg = CMCTMConfig(J=2, n_features=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    s = conditional_coreset_scores(cfg, scaler, Y, X)
+    assert s.shape == (Y.shape[0],)
+    assert (s > 0).all()
+    # Σ leverage ≤ rank(dJ + F) + uniform part
+    assert s.sum() <= 2 * 6 + 2 + 1 + 1e-3
+
+
+def test_conditional_coreset_fit_close_to_full(cond_data):
+    X, Y, _ = cond_data
+    cfg = CMCTMConfig(J=2, n_features=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    full = fit_cmctm(cfg, scaler, Y, X, steps=800)
+    idx, w = build_conditional_coreset(
+        cfg, scaler, Y, X, k=200, key=jax.random.PRNGKey(1)
+    )
+    cs = fit_cmctm(cfg, scaler, Y[idx], X[idx], weights=w, steps=800)
+    A, Ap = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
+    Xj = jnp.asarray(X, jnp.float32)
+    nll_full = float(cnll(cfg, full.params, A, Ap, Xj))
+    nll_cs = float(cnll(cfg, cs.params, A, Ap, Xj))
+    assert nll_cs <= nll_full + 0.1 * abs(nll_full)

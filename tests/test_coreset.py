@@ -1,0 +1,99 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.coreset import CORESET_METHODS, build_coreset, evaluate_coreset
+from repro.core.sensitivity import sensitivity_sample, sample_size_bound
+from repro.data.dgp import generate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    Y = generate("bivariate_normal", 2000, seed=0)
+    cfg = M.MCTMConfig(J=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    return cfg, scaler, Y
+
+
+@pytest.mark.parametrize("method", CORESET_METHODS)
+def test_methods_produce_valid_coresets(setup, method):
+    cfg, scaler, Y = setup
+    cs = build_coreset(cfg, scaler, Y, k=50, method=method, key=jax.random.PRNGKey(0))
+    assert cs.size >= 40
+    assert (cs.weights > 0).all()
+    assert (cs.indices >= 0).all() and (cs.indices < Y.shape[0]).all()
+
+
+def test_uniform_weights_are_n_over_k(setup):
+    cfg, scaler, Y = setup
+    cs = build_coreset(cfg, scaler, Y, k=100, method="uniform", key=jax.random.PRNGKey(1))
+    np.testing.assert_allclose(cs.weights, Y.shape[0] / 100)
+
+
+def test_sampled_nll_is_unbiased_estimator(setup):
+    """E[weighted coreset NLL] = full NLL — average over repeated draws."""
+    cfg, scaler, Y = setup
+    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    params = M.init_params(jax.random.PRNGKey(7), cfg)
+    full = float(M.nll(cfg, params, A, Ap))
+    ests = []
+    for i in range(30):
+        cs = build_coreset(
+            cfg, scaler, Y, k=200, method="l2-only", key=jax.random.PRNGKey(i)
+        )
+        As, Aps = M.basis_features(cfg, scaler, jnp.asarray(Y[cs.indices]))
+        ests.append(float(M.nll(cfg, params, As, Aps, jnp.asarray(cs.weights, jnp.float32))))
+    assert np.mean(ests) == pytest.approx(full, rel=0.05)
+
+
+def test_coreset_epsilon_approximation(setup):
+    """Empirical (1±ε): the hybrid coreset's weighted NLL is within a small
+    multiplicative band of the full NLL across random feasible parameters."""
+    cfg, scaler, Y = setup
+    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    cs = build_coreset(cfg, scaler, Y, k=600, method="l2-hull", key=jax.random.PRNGKey(3))
+    As, Aps = M.basis_features(cfg, scaler, jnp.asarray(Y[cs.indices]))
+    w = jnp.asarray(cs.weights, jnp.float32)
+    rels = []
+    for seed in range(20):
+        params = M.init_params(jax.random.PRNGKey(seed), cfg)
+        full = float(M.nll(cfg, params, A, Ap))
+        approx = float(M.nll(cfg, params, As, Aps, w))
+        rels.append(abs(approx - full) / abs(full))
+    assert np.median(rels) < 0.15
+    assert np.max(rels) < 0.6
+
+
+def test_end_to_end_coreset_beats_tiny_uniform_on_complex_dgp():
+    """Paper's qualitative claim on a complex DGP at small k (averaged)."""
+    Y = generate("copula_complex", 4000, seed=1)
+    cfg = M.MCTMConfig(J=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    full = M.fit_mctm(cfg, scaler, Y, steps=600)
+    lr_hull, lr_unif = [], []
+    for s in range(3):
+        ev_h = evaluate_coreset(
+            cfg, scaler, Y, full, k=40, method="l2-hull", key=jax.random.PRNGKey(s), steps=600
+        )
+        ev_u = evaluate_coreset(
+            cfg, scaler, Y, full, k=40, method="uniform", key=jax.random.PRNGKey(100 + s), steps=600
+        )
+        lr_hull.append(abs(ev_h.likelihood_ratio - 1))
+        lr_unif.append(abs(ev_u.likelihood_ratio - 1))
+    assert np.mean(lr_hull) <= np.mean(lr_unif) * 1.5  # robust, not flaky-tight
+
+
+def test_sensitivity_sample_weights():
+    scores = np.array([1.0, 1.0, 2.0, 4.0])
+    s = sensitivity_sample(jax.random.PRNGKey(0), scores, k=100)
+    assert s.indices.shape == (100,)
+    # weight · prob · k == 1 per draw
+    np.testing.assert_allclose(s.weights * s.probs[s.indices] * 100, 1.0, rtol=1e-6)
+
+
+def test_sample_size_bound_monotone_in_eps():
+    assert sample_size_bound(10, 5, 0.1) > sample_size_bound(10, 5, 0.5)

@@ -1,0 +1,165 @@
+"""Distributed primitives on multi-device CPU meshes (subprocess-isolated:
+device count is fixed at first jax init, so these spawn fresh interpreters
+with XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_distributed_leverage_matches_local():
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed_coreset import distributed_leverage, distributed_gram
+        from repro.core.leverage import leverage_scores_qr
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.standard_normal((640, 12)), jnp.float32)
+        u_dist = np.asarray(distributed_leverage(X, mesh))
+        u_loc = np.asarray(leverage_scores_qr(X))
+        np.testing.assert_allclose(u_dist, u_loc, rtol=1e-3, atol=1e-4)
+        G = np.asarray(distributed_gram(X, mesh))
+        np.testing.assert_allclose(G, np.asarray(X.T @ X), rtol=1e-4, atol=1e-3)
+        print("OK")
+        """
+    )
+
+
+def test_distributed_direction_argmax():
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed_coreset import distributed_direction_argmax
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(1)
+        P = jnp.asarray(rng.standard_normal((160, 5)), jnp.float32)
+        dirs = jnp.asarray(rng.standard_normal((12, 5)), jnp.float32)
+        got = np.asarray(distributed_direction_argmax(P, dirs, mesh))
+        want = np.argmax(np.asarray(P) @ np.asarray(dirs).T, axis=0)
+        np.testing.assert_array_equal(got, want)
+        print("OK")
+        """
+    )
+
+
+def test_quantized_psum_and_error_feedback():
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.collectives import psum_quantized
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+        fn = shard_map(lambda xs: psum_quantized(xs[0], "data", bits=8)[None],
+                       mesh=mesh, in_specs=(P("data", None),), out_specs=P("data", None))
+        got = np.asarray(fn(x))[0]
+        want = np.asarray(x).sum(0)
+        scale = np.abs(want).max()
+        np.testing.assert_allclose(got, want, atol=0.1 * scale)
+        print("OK")
+        """
+    )
+
+
+def test_ring_allgather_matmul():
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.collectives import ring_allgather_matmul, reduce_scatter_matmul
+        mesh = jax.make_mesh((8,), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(3)
+        X = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)   # sharded K dim
+        W = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+        got = np.asarray(ring_allgather_matmul(X, W, mesh, "model"))
+        want = np.asarray(X) @ np.asarray(W)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+        got2 = np.asarray(reduce_scatter_matmul(X, W, mesh, "model"))
+        np.testing.assert_allclose(got2, want, rtol=1e-4, atol=1e-3)
+        print("OK")
+        """
+    )
+
+
+def test_dryrun_single_cell_multipod():
+    """End-to-end miniature of the 512-device dry-run (8 fake devices)."""
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_reduced_config
+        from repro.models import build_model
+        from repro.models.transformer import shapes_and_specs
+        from repro.distributed.sharding import default_rules, resolve_tree, batch_specs
+        from repro.train.trainer import make_train_step
+        from repro.train.state import TrainState
+        from repro.optim import adamw
+        from repro.distributed.sharding import replicated
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        cfg = get_reduced_config("tinyllama_1b")
+        model = build_model(cfg, remat="full", xent_chunk=8)
+        rules = default_rules(mesh)
+        params_shapes, specs = shapes_and_specs(model)
+        param_sh = resolve_tree(specs, params_shapes, mesh, rules)
+        opt = adamw(1e-3)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_sh = resolve_tree(opt.state_specs(specs, params_shapes), opt_shapes, mesh, rules)
+        state_shapes = TrainState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                                  params=params_shapes, opt_state=opt_shapes)
+        state_sh = TrainState(step=replicated(mesh), params=param_sh, opt_state=opt_sh)
+        b = {
+            "tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+            "weights": jax.ShapeDtypeStruct((8,), jnp.float32),
+        }
+        b_sh = batch_specs(b, mesh, rules)
+        step = make_train_step(model, opt, microbatches=2)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(state_sh, b_sh),
+                              out_shardings=(state_sh, None)).lower(state_shapes, b)
+            compiled = lowered.compile()
+        assert compiled.cost_analysis() is not None
+        ma = compiled.memory_analysis()
+        assert ma.temp_size_in_bytes >= 0
+        print("OK")
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

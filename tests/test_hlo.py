@@ -1,0 +1,38 @@
+from repro.utils.hlo import collective_stats, shape_bytes
+
+SAMPLE = """
+HloModule test
+%all-reduce.10 = f32[128,1,128]{2,1,0} all-reduce(%fusion.6), channel_id=6, replica_groups=[16,16]<=[256]
+%all-gather.32 = bf16[1,2048]{0,1} all-gather(%slice.1), channel_id=1, dimensions={1}
+%all-gather-start.2 = (f32[4,4]{1,0}, f32[8,4]{1,0}) all-gather-start(%p), channel_id=2
+%all-gather-done.2 = f32[8,4]{1,0} all-gather-done(%all-gather-start.2)
+%rs = f32[16]{0} reduce-scatter(%x), channel_id=3
+%cp = s32[8,1,1]{2,1,0} collective-permute(%y), source_target_pairs={{0,1}}
+%a2a = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-to-all(%z, %w), channel_id=9
+%add.1 = f32[100]{0} add(%a, %b)
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,1,128]{2,1,0}") == 128 * 128 * 4
+    assert shape_bytes("bf16[1,2048]") == 2 * 2048
+    assert shape_bytes("(f32[4,4], f32[8,4])") == (16 + 32) * 4
+    assert shape_bytes("pred[]") == 1
+
+
+def test_collective_stats_counts_and_bytes():
+    stats = collective_stats(SAMPLE)
+    ops = stats["by_op"]
+    assert ops["all-reduce"]["count"] == 1
+    assert ops["all-reduce"]["bytes"] == 128 * 128 * 4
+    # -start counted once, -done ignored
+    assert ops["all-gather"]["count"] == 2
+    assert ops["reduce-scatter"]["count"] == 1
+    assert ops["collective-permute"]["count"] == 1
+    assert ops["all-to-all"]["count"] == 1
+    assert stats["total_bytes"] > 0
+
+
+def test_non_collective_lines_ignored():
+    stats = collective_stats("%add = f32[4]{0} add(%a, %b)")
+    assert stats["total_bytes"] == 0

@@ -1,0 +1,47 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hull import epsilon_kernel_indices, greedy_hull_projection, hull_distance
+
+
+def test_interior_point_distance_zero():
+    rng = np.random.default_rng(0)
+    P = jnp.asarray(rng.standard_normal((200, 2)), jnp.float32)
+    q = jnp.zeros((2,))  # mean region — interior w.h.p.
+    assert hull_distance(P, q, eps=1e-3, max_iter=256) < 5e-2
+
+
+def test_exterior_point_distance_positive():
+    rng = np.random.default_rng(0)
+    P = jnp.asarray(rng.random((200, 2)), jnp.float32)  # inside unit square
+    q = jnp.asarray([3.0, 3.0])
+    d = hull_distance(P, q, eps=1e-3, max_iter=128)
+    true = np.linalg.norm([3 - 1, 3 - 1])
+    assert d == pytest.approx(true, abs=0.2)
+
+
+def test_projection_support_are_valid_indices():
+    rng = np.random.default_rng(1)
+    P = jnp.asarray(rng.standard_normal((64, 3)), jnp.float32)
+    t, support, _ = greedy_hull_projection(P, jnp.asarray([5.0, 0.0, 0.0]))
+    s = np.asarray(support)
+    assert ((s >= -1) & (s < 64)).all()
+
+
+def test_epsilon_kernel_recovers_square_corners():
+    corners = np.array([[0, 0], [0, 1], [1, 0], [1, 1]], dtype=np.float32)
+    rng = np.random.default_rng(2)
+    interior = rng.random((500, 2)).astype(np.float32) * 0.6 + 0.2
+    P = np.concatenate([interior, corners])
+    idx = epsilon_kernel_indices(P, k=16, key=jax.random.PRNGKey(0))
+    got = set(idx.tolist())
+    # all four corners are extremal in some direction → must be selected
+    assert {500, 501, 502, 503} <= got
+
+
+def test_epsilon_kernel_small_n_returns_all():
+    P = np.eye(3, dtype=np.float32)
+    idx = epsilon_kernel_indices(P, k=10, key=jax.random.PRNGKey(0))
+    assert sorted(idx.tolist()) == [0, 1, 2]

@@ -1,0 +1,127 @@
+"""Per-kernel allclose sweeps (interpret=True) against the jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bernstein.ops import bernstein_basis_deriv
+from repro.kernels.bernstein.ref import bernstein_basis_deriv_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gram.ops import gram_matrix
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.ssd.ops import ssd_chunked
+from repro.kernels.ssd.ref import ssd_ref
+
+
+# ---------------------------------------------------------------- bernstein
+
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 2049])
+@pytest.mark.parametrize("degree", [1, 4, 7])
+def test_bernstein_kernel_sweep(n, degree):
+    rng = np.random.default_rng(n * 10 + degree)
+    t = jnp.asarray(rng.random(n), jnp.float32)
+    basis, deriv = bernstein_basis_deriv(t, degree)
+    bref, dref = bernstein_basis_deriv_ref(t, degree)
+    np.testing.assert_allclose(np.asarray(basis), np.asarray(bref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(deriv), np.asarray(dref), atol=1e-4)
+
+
+# --------------------------------------------------------------------- gram
+
+
+@pytest.mark.parametrize("shape", [(64, 4), (777, 14), (1024, 128), (300, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_kernel_sweep(shape, dtype):
+    rng = np.random.default_rng(shape[0])
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    got = np.asarray(gram_matrix(x))
+    ref = np.asarray(gram_ref(x))
+    tol = 1e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol * np.abs(ref).max())
+
+
+# ----------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize(
+    "B,S,H,KV,d", [(1, 128, 2, 2, 32), (2, 256, 4, 2, 64), (1, 512, 8, 1, 64)]
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, KV, d, causal):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    g = H // KV
+    kq, vq = jnp.repeat(k, g, 2), jnp.repeat(v, g, 2)
+
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+
+    ref = attention_ref(flat(q), flat(kq), flat(vq), causal=causal)
+    ref = ref.reshape(B, H, S, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(2, 128, 64)
+
+    ref = attention_ref(flat(q), flat(k), flat(v))
+    ref = ref.reshape(1, 2, 128, 64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2
+    )
+
+
+# ---------------------------------------------------------------------- ssd
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (100, 32), (256, 128), (31, 32)])
+@pytest.mark.parametrize("P,N", [(16, 8), (64, 32)])
+def test_ssd_kernel_sweep(T, chunk, P, N):
+    rng = np.random.default_rng(T + P)
+    BH = 3
+    x = jnp.asarray(rng.standard_normal((BH, T, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((BH, T)) * 0.5 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random((BH,)) * 2 - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((BH, T, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((BH, T, N)), jnp.float32)
+    y = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    yr = ssd_ref(x, dt[..., None], A[:, None], Bm, Cm)
+    scale = float(jnp.abs(yr).max())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4 * max(scale, 1))
+
+
+def test_ssd_matches_model_chunked_path():
+    """kernel vs the model's _ssd_chunked lax implementation (same math)."""
+    from repro.models.ssm import _ssd_chunked
+
+    rng = np.random.default_rng(7)
+    B, T, H, P, N = 2, 64, 4, 16, 8
+    x = jnp.asarray(rng.standard_normal((B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((B, T, H)) * 0.5 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random((H,)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, T, 1, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, T, 1, N)), jnp.float32)
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    y_model, _ = _ssd_chunked(x, dt, A, Bm, Cm, state0, chunk=16)
+
+    # kernel layout: fold (B,H) → BH, broadcast Bm/Cm per head
+    xk = x.transpose(0, 2, 1, 3).reshape(B * H, T, P)
+    dtk = dt.transpose(0, 2, 1).reshape(B * H, T)
+    Ak = jnp.tile(A, (B,))
+    Bk = jnp.repeat(Bm[:, :, 0, :][:, None], H, 1).reshape(B * H, T, N)
+    Ck = jnp.repeat(Cm[:, :, 0, :][:, None], H, 1).reshape(B * H, T, N)
+    y_kernel = ssd_chunked(xk, dtk, Ak, Bk, Ck, chunk=16)
+    y_kernel = y_kernel.reshape(B, H, T, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model), atol=1e-4)

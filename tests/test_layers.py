@@ -1,0 +1,133 @@
+"""Layer-level property tests: CE chunking, RoPE, GQA, MoE dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced_config
+from repro.models.layers import (
+    chunked_xent_weighted,
+    moe_apply,
+    init_moe,
+    rope,
+    softmax_xent_weighted,
+    _sdpa,
+    causal_mask,
+)
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (30, 7), (16, 64)])
+def test_chunked_xent_equals_full(S, chunk):
+    rng = np.random.default_rng(0)
+    B, D, V = 3, 8, 32
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    table = jnp.asarray(rng.standard_normal((V, D)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    w = jnp.asarray(rng.random(B) + 0.5, jnp.float32)
+    full = softmax_xent_weighted(jnp.einsum("bsd,vd->bsv", x, table), labels, w)
+    chunked = chunked_xent_weighted(x, table, labels, w, chunk=chunk)
+    np.testing.assert_allclose(float(chunked), float(full), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """⟨rope(q,p), rope(k,p+Δ)⟩ depends only on Δ (per position pair)."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+
+    def score(p_q, p_k):
+        qr = rope(q, jnp.asarray([p_q]), 10_000.0)
+        kr = rope(k, jnp.asarray([p_k]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert score(3, 7) == pytest.approx(score(103, 107), abs=1e-3)
+    assert score(0, 5) == pytest.approx(score(50, 55), abs=1e-3)
+    assert score(0, 5) != pytest.approx(score(0, 9), abs=1e-3)
+
+
+def test_gqa_equals_expanded_mha():
+    """GQA with kv broadcast == MHA with explicitly repeated kv heads."""
+    rng = np.random.default_rng(2)
+    B, S, H, KV, hd = 2, 16, 8, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    mask = causal_mask(S, S)
+    out_gqa = _sdpa(q, k, v, mask)
+    out_mha = _sdpa(q, jnp.repeat(k, H // KV, 2), jnp.repeat(v, H // KV, 2), mask)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha), atol=1e-5)
+
+
+def test_moe_dispatch_equals_dense_reference():
+    """Scatter-based top-k dispatch == dense per-expert einsum reference
+    (capacity high enough that nothing drops)."""
+    cfg = get_reduced_config("qwen2_moe_a2_7b").replace(capacity_factor=16.0)
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)
+    y, _ = moe_apply(params, x, cfg, cfg.mlp_act)
+
+    # dense reference: every expert processes every token, combine by top-k
+    T = 16
+    xt = x.reshape(T, cfg.d_model)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["wi_gate"]))
+    h = h * jnp.einsum("td,edf->tef", xt, params["wi_up"])
+    y_all = jnp.einsum("tef,efd->ted", h, params["wo"])  # (T, E, D)
+    combine = jnp.zeros((T, y_all.shape[1]))
+    combine = combine.at[jnp.arange(T)[:, None], top_e].set(top_p)
+    ref = jnp.einsum("te,ted->td", combine, y_all).reshape(2, 8, cfg.d_model)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+
+@given(st.floats(0.1, 10.0), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_xent_weight_scale_invariance(scale, seed):
+    """Mean-normalized weighted CE is invariant to uniform weight scaling."""
+    rng = np.random.default_rng(seed)
+    B, S, D, V = 2, 8, 4, 16
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    table = jnp.asarray(rng.standard_normal((V, D)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    w = jnp.asarray(rng.random(B) + 0.1, jnp.float32)
+    a = chunked_xent_weighted(x, table, labels, w, chunk=4)
+    b = chunked_xent_weighted(x, table, labels, w * scale, chunk=4)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4)
+
+
+@pytest.mark.parametrize("S,blk", [(64, 16), (100, 32), (48, 16)])
+def test_blocked_causal_attention_equals_dense(S, blk):
+    from repro.models.layers import blocked_causal_attention
+
+    rng = np.random.default_rng(S)
+    B, H, KV, hd = 2, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    a = blocked_causal_attention(q, k, v, block=blk)
+    b = _sdpa(q, k, v, causal_mask(S, S))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_prefill_flash_block_is_numerically_neutral():
+    """prefill_flash_block only changes the attention *algorithm*, not math:
+    prefill logits and subsequent decode must match the baseline path."""
+    from repro.models import build_model
+
+    cfg = get_reduced_config("tinyllama_1b")
+    cfg_f = cfg.replace(prefill_flash_block=8)
+    rng = np.random.default_rng(9)
+    tokens = rng.integers(0, cfg.vocab_size, (2, 24)).astype(np.int32)
+    model_a, model_b = build_model(cfg), build_model(cfg_f)
+    params, _ = model_a.init(jax.random.PRNGKey(0))
+    outs = []
+    for model in (model_a, model_b):
+        cache, _ = model.init_cache(2, 32)
+        logits, cache = model.prefill(params, {"tokens": tokens}, cache)
+        logits2, _ = model.decode_step(params, tokens[:, :1], cache)
+        outs.append((np.asarray(logits, np.float32), np.asarray(logits2, np.float32)))
+    np.testing.assert_allclose(outs[1][0], outs[0][0], atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(outs[1][1], outs[0][1], atol=2e-2, rtol=2e-2)

@@ -1,0 +1,105 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bernstein import DataScaler
+from repro.core.leverage import (
+    block_B_matrix,
+    flatten_features,
+    leverage_from_gram,
+    leverage_scores_gram,
+    leverage_scores_qr,
+    ridge_leverage_scores,
+    root_leverage_scores,
+    sketched_leverage,
+)
+from repro.core.mctm import MCTMConfig, basis_features
+
+
+def _features(n=64, J=2, degree=4, seed=0):
+    rng = np.random.default_rng(seed)
+    Y = rng.standard_normal((n, J))
+    cfg = MCTMConfig(J=J, degree=degree)
+    scaler = DataScaler.fit(Y)
+    A, _ = basis_features(cfg, scaler, jnp.asarray(Y))
+    return np.asarray(A)
+
+
+def test_block_B_equivalence():
+    """Paper identity: leverage of B-row (i,j) == leverage of Ã-row i, ∀j.
+
+    Uses the Gram/pinv form — Bernstein features are rank-deficient (each
+    j-block is a partition of unity), where QR-based leverage is ill-defined.
+    """
+    A = _features(n=32, J=3, degree=3)
+    X = A.reshape(32, -1)
+    u_small = np.asarray(leverage_scores_gram(jnp.asarray(X)))
+    B = block_B_matrix(A)
+    u_B = np.asarray(leverage_scores_gram(jnp.asarray(B)))  # (n·J,)
+    u_B = u_B.reshape(32, 3)
+    for j in range(3):
+        np.testing.assert_allclose(u_B[:, j], u_small, rtol=1e-3, atol=1e-4)
+
+
+def test_leverage_range_and_sum():
+    X = jnp.asarray(_features().reshape(64, -1))
+    u = np.asarray(leverage_scores_gram(X))
+    assert (u >= -1e-6).all() and (u <= 1 + 1e-6).all()
+    # Σu = numerical rank; the Bernstein Gram has near-zero modes that f32
+    # may count or drop — allow ±1.5 around the f64 rank.
+    rank = np.linalg.matrix_rank(np.asarray(X, np.float64))
+    assert rank - 1.5 <= u.sum() <= rank + 0.1
+
+
+def test_gram_vs_qr_full_rank():
+    """On full-rank inputs the QR and Gram/pinv forms agree."""
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(leverage_scores_gram(X)),
+        np.asarray(leverage_scores_qr(X)),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+def test_sketched_leverage_constant_factor():
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.standard_normal((512, 8)), jnp.float32)
+    exact = np.asarray(leverage_scores_qr(X))
+    approx = np.asarray(sketched_leverage(X, jax.random.PRNGKey(0), 256))
+    ratio = approx / np.maximum(exact, 1e-9)
+    # constant-factor approximation for the bulk of points
+    assert np.median(ratio) == pytest.approx(1.0, abs=0.5)
+
+
+def test_ridge_leverage_below_plain():
+    X = jnp.asarray(_features().reshape(64, -1))
+    plain = np.asarray(leverage_scores_gram(X))
+    ridge = np.asarray(ridge_leverage_scores(X, reg=10.0))
+    assert (ridge <= plain + 1e-5).all()
+
+
+def test_root_leverage_is_sqrt():
+    X = jnp.asarray(_features().reshape(64, -1))
+    np.testing.assert_allclose(
+        np.asarray(root_leverage_scores(X)) ** 2,
+        np.clip(np.asarray(leverage_scores_gram(X)), 0, None),
+        rtol=1e-3,
+        atol=1e-5,
+    )
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_leverage_invariant_under_row_scaling_of_others(seed):
+    """Leverage of a row depends only on the spanned subspace geometry."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((32, 4)).astype(np.float32)
+    u = np.asarray(leverage_scores_qr(jnp.asarray(X)))
+    # rotating the feature space leaves leverage unchanged
+    Q, _ = np.linalg.qr(rng.standard_normal((4, 4)))
+    u_rot = np.asarray(leverage_scores_qr(jnp.asarray(X @ Q.astype(np.float32))))
+    np.testing.assert_allclose(u, u_rot, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,85 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+
+
+@pytest.fixture(scope="module")
+def gaussian_fit():
+    rng = np.random.default_rng(0)
+    rho = 0.7
+    L = np.linalg.cholesky(np.array([[1, rho], [rho, 1]]))
+    Y = rng.standard_normal((3000, 2)) @ L.T
+    cfg = M.MCTMConfig(J=2, degree=6)
+    scaler = DataScaler.fit(Y)
+    fit = M.fit_mctm(cfg, scaler, Y, steps=800)
+    return cfg, scaler, Y, fit
+
+
+def test_fit_reaches_gaussian_entropy(gaussian_fit):
+    cfg, scaler, Y, fit = gaussian_fit
+    per_point = fit.final_nll / Y.shape[0]
+    rho = 0.7
+    entropy = np.log(2 * np.pi * np.e) + 0.5 * np.log(1 - rho**2)
+    # MLE should approach the differential entropy of the generator
+    assert per_point == pytest.approx(entropy, abs=0.05)
+
+
+def test_loss_decreases(gaussian_fit):
+    _, _, _, fit = gaussian_fit
+    assert fit.losses[-1] < fit.losses[0]
+
+
+def test_nll_parts_consistency(gaussian_fit):
+    cfg, scaler, Y, fit = gaussian_fit
+    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    parts = M.loss_parts(cfg, fit.params, A, Ap)
+    total = M.nll(cfg, fit.params, A, Ap)
+    n, J = Y.shape
+    const = 0.5 * np.log(2 * np.pi) * n * J
+    recomposed = parts["f1"] - parts["f2"] + parts["f3"] + const
+    np.testing.assert_allclose(float(recomposed), float(total), rtol=1e-4)
+
+
+def test_weighted_nll_equals_scaled(gaussian_fit):
+    cfg, scaler, Y, fit = gaussian_fit
+    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    w = jnp.full((Y.shape[0],), 2.0)
+    np.testing.assert_allclose(
+        float(M.nll(cfg, fit.params, A, Ap, w)),
+        2 * float(M.nll(cfg, fit.params, A, Ap)),
+        rtol=1e-5,
+    )
+
+
+def test_sampling_roundtrip_moments(gaussian_fit):
+    cfg, scaler, Y, fit = gaussian_fit
+    samples = np.asarray(M.sample(cfg, fit.params, scaler, jax.random.PRNGKey(0), 4000))
+    assert np.isfinite(samples).all()
+    # first two moments of the fitted model match the training data loosely
+    np.testing.assert_allclose(samples.mean(0), Y.mean(0), atol=0.15)
+    np.testing.assert_allclose(samples.std(0), Y.std(0), rtol=0.15)
+    corr_fit = np.corrcoef(samples.T)[0, 1]
+    corr_true = np.corrcoef(np.asarray(Y).T)[0, 1]
+    assert corr_fit == pytest.approx(corr_true, abs=0.1)
+
+
+def test_log_density_integrates_to_one_2d(gaussian_fit):
+    cfg, scaler, Y, fit = gaussian_fit
+    g = np.linspace(-4, 4, 80)
+    xx, yy = np.meshgrid(g, g)
+    pts = jnp.asarray(np.stack([xx.ravel(), yy.ravel()], 1))
+    dens = np.exp(np.asarray(M.log_density(cfg, fit.params, scaler, pts)))
+    integral = dens.sum() * (g[1] - g[0]) ** 2
+    assert integral == pytest.approx(1.0, abs=0.1)
+
+
+def test_lambda_recovers_dependence(gaussian_fit):
+    cfg, scaler, Y, fit = gaussian_fit
+    # for a gaussian copula with rho=0.7: Λ = [[1,0],[λ,1]], λ = −ρ/√(1−ρ²)
+    lam = float(fit.params.lam[0])
+    expected = -0.7 / np.sqrt(1 - 0.49)
+    assert lam == pytest.approx(expected, abs=0.2)

@@ -1,0 +1,89 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    cosine_warmup,
+    lion,
+    sgd,
+)
+from repro.utils.tree import tree_bytes
+
+
+def _optimize(opt, steps=300):
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray([[1.0, 1.0], [1.0, 1.0]])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum((p["b"] - 0.5) ** 2)
+
+    for i in range(steps):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params, jnp.asarray(i))
+        params = apply_updates(params, updates)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [
+        adamw(5e-2),
+        # sign-scale optimizers need a decaying lr to settle on a quadratic
+        adafactor(cosine_warmup(0.5, 5, 300, final_frac=0.001)),
+        lion(cosine_warmup(6e-2, 5, 300, final_frac=0.001)),
+        sgd(5e-2),
+        sgd(5e-2, momentum=0.9),
+    ],
+    ids=["adamw", "adafactor", "lion", "sgd", "sgd-mom"],
+)
+def test_optimizers_minimize_quadratic(opt):
+    assert _optimize(opt) < 0.05
+
+
+def test_adafactor_state_is_factored():
+    params = {"big": jnp.zeros((256, 512))}
+    a_state = adafactor(1e-2).init(params)
+    m_state = adamw(1e-2).init(params)
+    assert tree_bytes(a_state) < tree_bytes(m_state) / 50
+
+
+def test_adafactor_state_specs_match_structure():
+    params = {"w": jnp.zeros((8, 16)), "s": jnp.zeros((8,))}
+    specs = {"w": ("embed", "mlp"), "s": ("embed",)}
+    opt = adafactor(1e-2)
+    st = opt.init(params)
+    sp = opt.state_specs(specs, params)
+    assert jax.tree.structure(st) == jax.tree.structure(
+        sp, is_leaf=lambda s: isinstance(s, tuple)
+    )
+    assert sp["w"]["vr"] == ("embed",)
+    assert sp["w"]["vc"] == ("mlp",)
+
+
+def test_clip_by_global_norm():
+    opt = clip_by_global_norm(1.0)
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    u, _ = opt.update(g, {}, g, jnp.asarray(0))
+    np.testing.assert_allclose(float(jnp.linalg.norm(u["a"])), 1.0, rtol=1e-5)
+
+
+def test_chain_composes():
+    opt = chain(clip_by_global_norm(1.0), sgd(1.0))
+    params = {"a": jnp.asarray([3.0, 4.0])}
+    state = opt.init(params)
+    u, _ = opt.update(params, state, params, jnp.asarray(0))
+    # clipped to unit norm then scaled by −lr=−1
+    np.testing.assert_allclose(float(jnp.linalg.norm(u["a"])), 1.0, rtol=1e-5)
+
+
+def test_cosine_warmup_schedule():
+    s = cosine_warmup(1.0, warmup=10, total=100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)

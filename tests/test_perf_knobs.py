@@ -1,0 +1,131 @@
+"""Correctness of the §Perf optimization knobs: every perf variant must be
+numerically equivalent to the baseline path (they only change sharding or
+padding, never math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.models.layers import init_moe, moe_apply
+
+
+def test_moe_expert_padding_is_equivalent():
+    """Padded (dummy) experts never receive tokens → identical outputs."""
+    cfg = get_reduced_config("qwen2_moe_a2_7b")  # E=8
+    cfg_pad = cfg.replace(moe_pad_experts=12)
+    key = jax.random.PRNGKey(0)
+    p_base, _ = init_moe(key, cfg)
+    p_pad, _ = init_moe(key, cfg_pad)
+    # copy the real experts' weights into the padded params
+    for name in ("wi_gate", "wi_up", "wo"):
+        p_pad[name] = p_pad[name].at[: cfg.n_experts].set(p_base[name])
+    p_pad["router"] = p_pad["router"].at[:, : cfg.n_experts].set(p_base["router"])
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    y_base, aux_base = moe_apply(p_base, x, cfg, cfg.mlp_act)
+    y_pad, aux_pad = moe_apply(p_pad, x, cfg_pad, cfg.mlp_act)
+    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_base), atol=1e-5)
+    np.testing.assert_allclose(float(aux_pad), float(aux_base), rtol=1e-5)
+
+
+def test_decode_seq_shard_flag_is_numerically_neutral():
+    """With activation constraints disabled (tests), decode_seq_shard changes
+    nothing numerically — it only alters sharding hints."""
+    cfg = get_reduced_config("tinyllama_1b")
+    model_a = build_model(cfg)
+    model_b = build_model(cfg.replace(decode_seq_shard=True))
+    params, _ = model_a.init(jax.random.PRNGKey(0))
+    tokens = np.asarray([[1, 2, 3, 4, 5, 6]], np.int32)
+    outs = []
+    for model in (model_a, model_b):
+        cache, _ = model.init_cache(1, 16)
+        _, cache = model.prefill(params, {"tokens": tokens[:, :5]}, cache)
+        logits, _ = model.decode_step(params, tokens[:, 5:6], cache)
+        outs.append(np.asarray(logits, np.float32))
+    np.testing.assert_allclose(outs[1], outs[0], atol=1e-6)
+
+
+def test_scan_dtype_bf16_close_to_f32():
+    from repro.models.rglru import init_rglru_block, rglru_block_apply
+
+    cfg = get_reduced_config("recurrentgemma_2b")
+    p, _ = init_rglru_block(jax.random.PRNGKey(0), cfg)
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model), jnp.float32)
+    y32, _ = rglru_block_apply(p, x, cfg)
+    y16, _ = rglru_block_apply(p, x, cfg.replace(scan_dtype="bfloat16"))
+    scale = float(jnp.abs(y32).max())
+    np.testing.assert_allclose(
+        np.asarray(y16, np.float32), np.asarray(y32, np.float32), atol=0.03 * max(scale, 1e-3)
+    )
+
+
+def test_ring_cache_matches_linear_cache():
+    """Windowed ring cache decode ≡ linear cache with window mask."""
+    from repro.models.layers import attention_apply, init_attention
+
+    cfg = get_reduced_config("recurrentgemma_2b").replace(attn_window=8)
+    params, _ = init_attention(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 14
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model), jnp.bfloat16) * 0.3
+
+    # linear cache of the full length (window enforced via mask)
+    lin_cache = {
+        "k": jnp.zeros((B, T, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jnp.zeros((B, T, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    # ring cache of exactly window size
+    ring_cache = {
+        "k": jnp.zeros((B, 8, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jnp.zeros((B, 8, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    outs_lin, outs_ring = [], []
+    for t in range(T):
+        xt = x[:, t : t + 1]
+        pos = jnp.arange(t, t + 1)
+        o_lin, lin_cache = attention_apply(
+            params, xt, cfg, positions=pos, cache=lin_cache, window=8
+        )
+        o_ring, ring_cache = attention_apply(
+            params, xt, cfg, positions=pos, cache=ring_cache, window=8
+        )
+        outs_lin.append(np.asarray(o_lin, np.float32))
+        outs_ring.append(np.asarray(o_ring, np.float32))
+    np.testing.assert_allclose(
+        np.concatenate(outs_ring, 1), np.concatenate(outs_lin, 1), atol=2e-2
+    )
+
+
+def test_ring_prefill_then_decode_matches_full_window_attention():
+    """Prefill S > window into a ring cache, then one decode step — must equal
+    the windowed attention computed over the whole sequence at once."""
+    from repro.models.layers import attention_apply, init_attention, local_attention_chunked
+
+    cfg = get_reduced_config("recurrentgemma_2b").replace(attn_window=8)
+    params, _ = init_attention(jax.random.PRNGKey(2), cfg)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S + 1, cfg.d_model), jnp.float32) * 0.3
+
+    ring = {
+        "k": jnp.zeros((B, 8, cfg.n_kv_heads, cfg.head_dim), jnp.float32),
+        "v": jnp.zeros((B, 8, cfg.n_kv_heads, cfg.head_dim), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    _, ring = attention_apply(
+        params, x[:, :S], cfg, positions=jnp.arange(S), cache=ring, window=8
+    )
+    o_dec, _ = attention_apply(
+        params, x[:, S:], cfg, positions=jnp.arange(S, S + 1), cache=ring, window=8
+    )
+    # reference: full-sequence windowed attention, take the last position
+    o_full, _ = attention_apply(
+        params, x, cfg, positions=jnp.arange(S + 1), cache=None, window=8
+    )
+    np.testing.assert_allclose(
+        np.asarray(o_dec[:, 0], np.float32),
+        np.asarray(o_full[:, -1], np.float32),
+        atol=2e-3,
+    )

@@ -1,0 +1,96 @@
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (
+    CoresetSelector,
+    DGP_NAMES,
+    ShardedLoader,
+    TokenStreamConfig,
+    generate,
+    generate_covertype,
+    generate_equity_returns,
+    sample_batch,
+    subset_loader,
+)
+
+
+def test_dgps_all_generate():
+    for name in DGP_NAMES:
+        Y = generate(name, 500, seed=3)
+        assert Y.shape == (500, 2)
+        assert np.isfinite(Y).all(), name
+    assert len(DGP_NAMES) == 14  # the paper's 14 processes
+
+
+def test_covertype_shape_and_bounds():
+    X = generate_covertype(2000, seed=0)
+    assert X.shape == (2000, 10)
+    hillshade = X[:, 6:9]
+    assert (hillshade >= 0).all() and (hillshade <= 254).all()
+
+
+def test_equity_heavy_tails():
+    R = generate_equity_returns(5000, 10, seed=0)
+    assert R.shape == (5000, 10)
+    kurt = ((R - R.mean(0)) ** 4).mean(0) / (R.var(0) ** 2)
+    assert (kurt > 4).all()  # heavier than gaussian (3)
+
+
+def test_token_stream_deterministic_and_resumable():
+    cfg = TokenStreamConfig(vocab_size=512, seq_len=16)
+    a = sample_batch(cfg, batch=4, step=7)
+    b = sample_batch(cfg, batch=4, step=7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = sample_batch(cfg, batch=4, step=8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_sharded_loader_prefetch_and_resume():
+    cfg = TokenStreamConfig(vocab_size=128, seq_len=8)
+    loader = ShardedLoader(lambda step: sample_batch(cfg, 2, step), start_step=5)
+    it = iter(loader)
+    batches = list(itertools.islice(it, 3))
+    assert [int(b["_step"]) for b in batches] == [5, 6, 7]
+    # resume from saved state
+    state = loader.state_dict(int(batches[-1]["_step"]) + 1)
+    loader2 = ShardedLoader(lambda step: sample_batch(cfg, 2, step), **state)
+    nxt = next(iter(loader2))
+    assert int(nxt["_step"]) == 8
+    np.testing.assert_array_equal(
+        nxt["tokens"], sample_batch(cfg, 2, 8)["tokens"]
+    )
+
+
+def test_coreset_selector_weights_unbiased():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((500, 6)).astype(np.float32)
+    sel = CoresetSelector(featurize=lambda e: e, method="l2-hull")
+    sub = sel.select(X, k=100, key=jax.random.PRNGKey(0))
+    assert sub.size == 100
+    assert (sub.weights > 0).all()
+    # sum of weights ≈ n for the sampled part + hull points count
+    assert sub.weights.sum() == pytest.approx(500, rel=0.5)
+
+
+def test_coreset_selector_uniform():
+    X = np.random.default_rng(1).standard_normal((100, 3)).astype(np.float32)
+    sel = CoresetSelector(featurize=lambda e: e, method="uniform")
+    sub = sel.select(X, k=10, key=jax.random.PRNGKey(1))
+    assert len(set(sub.indices.tolist())) == 10  # without replacement
+    np.testing.assert_allclose(sub.weights, 10.0)
+
+
+def test_subset_loader_emits_weights():
+    data = {"x": np.arange(50, dtype=np.float32)}
+    sel = CoresetSelector(
+        featurize=lambda e: np.stack([e, np.ones_like(e)], axis=1), method="l2-only"
+    )
+    sub = sel.select(data["x"], k=20, key=jax.random.PRNGKey(2))
+    fn = subset_loader(data, sub, batch=8)
+    b0, b0b = fn(0), fn(0)
+    np.testing.assert_array_equal(b0["x"], b0b["x"])  # deterministic
+    assert b0["weights"].shape == (8,)
+    assert set(b0["x"].tolist()) <= set(data["x"][sub.indices].tolist())

@@ -1,0 +1,49 @@
+"""GPipe pipeline-parallel forward ≡ sequential forward (subprocess, 8 devs)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_pipeline_forward_matches_sequential():
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.pipeline_parallel import pipeline_forward, split_stages
+
+        mesh = jax.make_mesh((4, 2), ("stage", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        L, D = 8, 16
+        rng = np.random.default_rng(0)
+        layer_w = jnp.asarray(rng.standard_normal((L, D, D)) * 0.1, jnp.float32)
+
+        def layer_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        n_micro, mb, S = 4, 2, 4
+        x = jnp.asarray(rng.standard_normal((n_micro, mb, S, D)), jnp.float32)
+
+        # sequential reference
+        def seq(x):
+            def body(h, w):
+                return layer_fn(w, h), None
+            h, _ = jax.lax.scan(body, x, layer_w)
+            return h
+        ref = jax.vmap(seq)(x)
+
+        stages = split_stages(layer_w, 4)
+        out = pipeline_forward(x, stages, layer_fn, mesh)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+        print("OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,82 @@
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.distributed.sharding import ShardingRules, default_rules, resolve_spec
+
+
+class FakeMesh:
+    """Minimal mesh stub (axis_names + shape dict) for rule resolution."""
+
+    def __init__(self, shape: dict):
+        self._shape = shape
+
+    @property
+    def shape(self):
+        return self._shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _rules(mesh):
+    multi_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        {
+            "batch": batch_axes,
+            "embed": ("data",),
+            "heads": ("model",),
+            "kv": ("model",),
+            "mlp": ("model",),
+            "vocab": ("model",),
+            "expert": ("model",),
+            "lru": ("model",),
+            "state": None,
+            "layer": None,
+            None: None,
+        }
+    )
+
+
+def test_divisible_dims_shard():
+    spec = resolve_spec(("embed", "heads"), (2048, 4096), MESH, _rules(MESH))
+    assert spec == PartitionSpec("data", "model")
+
+
+def test_non_divisible_falls_back_to_replicated():
+    # MQA: kv=1 can't shard over model=16
+    spec = resolve_spec(("layer", "batch", None, "kv", None), (18, 128, 32768, 1, 256), MESH, _rules(MESH))
+    assert spec == PartitionSpec(None, "data", None, None, None)
+
+
+def test_multi_pod_batch_axes():
+    spec = resolve_spec(("batch", None), (512, 4096), MESH_MP, _rules(MESH_MP))
+    assert spec == PartitionSpec(("pod", "data"), None)
+
+
+def test_batch_not_divisible_by_pod_product():
+    spec = resolve_spec(("batch", None), (100, 4), MESH_MP, _rules(MESH_MP))
+    assert spec == PartitionSpec(None, None)
+
+
+def test_axis_used_once():
+    # both dims map to 'model' → second occurrence dropped
+    rules = ShardingRules({"a": ("model",), "b": ("model",), None: None})
+    spec = resolve_spec(("a", "b"), (64, 64), MESH, rules)
+    assert spec == PartitionSpec("model", None)
+
+
+def test_default_rules_real_mesh():
+    # exercise the real default_rules against a real (tiny) mesh
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = default_rules(mesh)
+    assert rules.get("batch") == ("data",)
+    assert rules.get("heads") == ("model",)

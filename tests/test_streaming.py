@@ -1,0 +1,49 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.streaming import MergeReduceCoreset, WeightedSet
+from repro.data.dgp import generate
+
+
+def test_merge_reduce_tracks_stream():
+    Y = generate("normal_mixture", 4096, seed=0)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    mr = MergeReduceCoreset(cfg, scaler, k=128, key=jax.random.PRNGKey(0))
+    for i in range(0, 4096, 512):
+        mr.push(Y[i : i + 512])
+    assert mr.n_seen == 4096
+    res = mr.result()
+    assert 0 < res.size <= 128
+    # total weight ≈ n (unbiased representation of the stream)
+    assert res.weights.sum() == pytest.approx(4096, rel=0.35)
+
+
+def test_streaming_nll_close_to_full(monkeypatch):
+    Y = generate("bivariate_normal", 2048, seed=1)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    mr = MergeReduceCoreset(cfg, scaler, k=256, key=jax.random.PRNGKey(1))
+    for i in range(0, 2048, 256):
+        mr.push(Y[i : i + 256])
+    res = mr.result()
+    params = M.init_params(jax.random.PRNGKey(5), cfg)
+    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    As, Aps = M.basis_features(cfg, scaler, jnp.asarray(res.Y))
+    full = float(M.nll(cfg, params, A, Ap))
+    approx = float(M.nll(cfg, params, As, Aps, jnp.asarray(res.weights, jnp.float32)))
+    assert approx == pytest.approx(full, rel=0.3)
+
+
+def test_bucket_structure_is_logarithmic():
+    Y = generate("bivariate_normal", 8192, seed=2)
+    cfg = M.MCTMConfig(J=2, degree=3)
+    scaler = DataScaler.fit(Y)
+    mr = MergeReduceCoreset(cfg, scaler, k=64, key=jax.random.PRNGKey(2))
+    for i in range(0, 8192, 256):
+        mr.push(Y[i : i + 256])
+    assert len(mr._buckets) <= int(np.log2(8192 / 256)) + 2

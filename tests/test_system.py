@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's pipeline: large dataset → Algorithm-1 ℓ2-hull coreset → weighted
+MCTM fit ≈ full-data fit. Plus the framework-level integration: coreset data
+selection feeding a weighted-loss LM training loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.coreset import build_coreset, evaluate_coreset
+from repro.data import CoresetSelector, generate, subset_loader
+from repro.data.synthetic_lm import TokenStreamConfig, sample_batch
+
+
+def test_paper_pipeline_end_to_end():
+    """Fit on a 30-point ℓ2-hull coreset of 10k points ≈ full-data fit
+    (paper Table 1 setting, relaxed thresholds for CI robustness)."""
+    Y = generate("bivariate_normal", 10_000, seed=0)
+    cfg = M.MCTMConfig(J=2, degree=6)
+    scaler = DataScaler.fit(Y)
+    full = M.fit_mctm(cfg, scaler, Y, steps=700)
+    ev = evaluate_coreset(
+        cfg, scaler, Y, full, k=30, method="l2-hull", key=jax.random.PRNGKey(0), steps=700
+    )
+    assert ev.k >= 25
+    assert ev.likelihood_ratio < 1.6  # paper reports 1.54±0.29 at k=30
+    assert np.isfinite(ev.param_l2)
+
+
+def test_coreset_fit_likelihood_converges_with_k():
+    Y = generate("hourglass", 8_000, seed=1)
+    cfg = M.MCTMConfig(J=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    full = M.fit_mctm(cfg, scaler, Y, steps=600)
+    lrs = []
+    for k in (30, 300):
+        evs = [
+            evaluate_coreset(
+                cfg, scaler, Y, full, k=k, method="l2-hull",
+                key=jax.random.PRNGKey(100 * k + s), steps=600,
+            ).likelihood_ratio
+            for s in range(2)
+        ]
+        lrs.append(np.mean([abs(lr - 1) for lr in evs]))
+    assert lrs[1] <= lrs[0] + 0.02  # larger coresets are no worse
+
+
+def test_lm_coreset_training_end_to_end():
+    """Framework integration: select a coreset of a token corpus by embedding
+    leverage, train with per-example weights, loss decreases."""
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_reduced_config("olmo_1b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    # corpus of 256 examples
+    stream = TokenStreamConfig(vocab_size=cfg.vocab_size, seq_len=16)
+    corpus = [sample_batch(stream, batch=32, step=i) for i in range(8)]
+    data = {k: np.concatenate([c[k] for c in corpus]) for k in ("tokens", "labels")}
+
+    # featurize by embedding-pooling with the proxy (init) model
+    emb = np.asarray(params["emb"]["embed"], np.float32)
+
+    def featurize(tokens):
+        return emb[tokens].mean(axis=1)
+
+    sel = CoresetSelector(featurize=lambda ex: featurize(ex), method="l2-hull")
+    subset = sel.select(data["tokens"], k=64, key=jax.random.PRNGKey(1))
+    assert subset.size == 64
+
+    fn = subset_loader(data, subset, batch=16)
+    opt = adamw(3e-3)
+    state = init_train_state(params, opt)
+    step = jax.jit(make_train_step(model, opt))
+    losses = []
+    for i in range(25):
+        state, metrics = step(state, fn(i))
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
