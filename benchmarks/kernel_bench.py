@@ -1,12 +1,25 @@
-"""Kernel-path micro-benchmarks.
+"""Kernel-path micro-benchmarks + the chunked scoring-engine benchmark.
 
 On this CPU container the Pallas kernels run in interpret mode (not
 representative of TPU wall time), so the timed numbers here are the XLA-CPU
 oracle paths — used to sanity-track the compute shapes. Kernel↔oracle
 numerical agreement is asserted in tests/test_kernels.py; TPU timings come
 from the roofline model (§Roofline).
+
+``scoring_bench`` times the full pre-sampling phase of Algorithm 1 two ways —
+the dense seed pipeline (two full basis evaluations, one-shot Gram, (n·J, m)
+hull score matrix) against the chunked two-pass ``ScoringEngine`` — and
+records speedup + peak memory into BENCH_scoring.json at the repo root.
+
+``--smoke`` shrinks every size so the whole bench path runs in seconds
+(exercised by tier-1 tests).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
 
 import jax
 import jax.numpy as jnp
@@ -18,33 +31,136 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gram.ref import gram_ref
 from repro.kernels.ssd.ref import ssd_ref
 
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 
-def run():
+
+def _rss_mb() -> float:
+    """Process high-water RSS in MiB (monotone — sample in ascending phases)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
+    """Chunked ScoringEngine vs the dense seed scoring pipeline.
+
+    Uses the paper's bivariate config (J=2, degree 6) on uniform data — every
+    Bernstein basis function is well-supported, so the Gram spectrum is
+    f32-resolvable and the two paths must agree to atol 1e-5.
+    """
+    from repro.core import mctm as M
+    from repro.core.bernstein import DataScaler
+    from repro.core.hull import epsilon_kernel_indices
+    from repro.core.leverage import flatten_features, leverage_scores_gram
+    from repro.core.scoring import ScoringEngine
+
+    n = 30_000 if smoke else 250_000
+    k_hull = 16 if smoke else 40          # build_coreset's k2 at k=200, α=0.8
+    chunk = 8192 if smoke else 32_768
+    J, degree = 2, 6
+    rng = np.random.default_rng(0)
+    Y = rng.random((n, J)).astype(np.float32)
+    cfg = M.MCTMConfig(J=J, degree=degree)
+    scaler = DataScaler.fit(Y)
+    key = jax.random.PRNGKey(0)
+
+    def dense_seed_path():
+        """The pre-engine scoring phase: basis evaluated twice, dense hull."""
+        A, _ = M.basis_features(cfg, scaler, jnp.asarray(Y))
+        u = np.asarray(leverage_scores_gram(flatten_features(A)))
+        scores = u + 1.0 / n
+        _, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+        P = np.asarray(Ap).reshape(n * cfg.J, cfg.d)
+        hull = epsilon_kernel_indices(P, k_hull, key)
+        return scores, hull
+
+    engine = ScoringEngine(cfg, scaler, chunk_size=chunk)
+
+    def chunked_path():
+        res = engine.score(
+            jnp.asarray(Y), method="l2-hull", hull_k=k_hull, hull_key=key
+        )
+        return res.scores, res.hull_rows
+
+    rss0 = _rss_mb()
+    # chunked first: ru_maxrss is monotone, so its reading upper-bounds the
+    # chunked phase only if taken before the dense phase runs
+    scores_c, hull_c = chunked_path()  # warmup/compile
+    us_chunked = time_call(chunked_path, repeats=1 if smoke else 3)
+    rss_chunked = _rss_mb()
+    scores_d, hull_d = dense_seed_path()  # warmup/compile
+    us_dense = time_call(dense_seed_path, repeats=1 if smoke else 3)
+    rss_dense = _rss_mb()
+
+    max_diff = float(np.abs(scores_c - scores_d).max())
+    overlap = len(set(hull_c.tolist()) & set(hull_d.tolist())) / max(len(hull_d), 1)
+    d = cfg.d
+    m_dirs = max(4 * k_hull, 8) + 2 * d
+    rec = {
+        "n": n,
+        "J": J,
+        "degree": degree,
+        "k_hull": k_hull,
+        "chunk_size": chunk,
+        "smoke": smoke,
+        "dense_s": us_dense / 1e6,
+        "chunked_s": us_chunked / 1e6,
+        "speedup": us_dense / us_chunked,
+        "max_abs_score_diff": max_diff,
+        "hull_overlap": overlap,
+        # analytic peak working sets (bytes) of the scoring phase
+        "dense_bytes": 2 * n * J * d * 4 * 2 + n * J * m_dirs * 4,
+        "chunked_bytes": 2 * chunk * J * d * 4 + chunk * J * m_dirs * 4,
+        # monotone process high-water marks (MiB) per phase, in run order
+        "rss_mb": {"start": rss0, "after_chunked": rss_chunked, "after_dense": rss_dense},
+    }
+    emit(
+        f"scoring/n{n}_J{J}_d{d}/chunk{chunk}",
+        us_chunked,
+        f"dense={rec['dense_s']:.2f}s chunked={rec['chunked_s']:.2f}s "
+        f"speedup={rec['speedup']:.2f}x maxdiff={max_diff:.1e}",
+    )
+    if out_path is None:
+        # smoke runs land in results/ so they don't churn the committed
+        # full-scale artifact at the repo root
+        if smoke:
+            from benchmarks.common import bench_dir
+
+            out_path = os.path.join(bench_dir("bench"), "BENCH_scoring_smoke.json")
+        else:
+            out_path = os.path.join(REPO_ROOT, "BENCH_scoring.json")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
 
     # bernstein basis path at coreset-scoring scale
-    t = jnp.asarray(rng.random(200_000), jnp.float32)
+    nb = 20_000 if smoke else 200_000
+    t = jnp.asarray(rng.random(nb), jnp.float32)
     f = jax.jit(lambda t: (bernstein_design(t, 6), bernstein_deriv_design(t, 6)))
     f(t)  # compile
     us = time_call(f, t)
-    emit("kernel/bernstein_ref/n200k_d7", us, f"{200_000 * 14 / (us / 1e6) / 1e9:.2f} Gelem/s")
+    emit(f"kernel/bernstein_ref/n{nb}_d7", us, f"{nb * 14 / (us / 1e6) / 1e9:.2f} Gelem/s")
 
     # gram at leverage scale
-    X = jnp.asarray(rng.standard_normal((100_000, 70)), jnp.float32)
+    ng = 10_000 if smoke else 100_000
+    X = jnp.asarray(rng.standard_normal((ng, 70)), jnp.float32)
     g = jax.jit(gram_ref)
     g(X)
     us = time_call(g, X)
-    emit("kernel/gram_ref/100kx70", us, f"{2 * 100_000 * 70 * 70 / (us / 1e6) / 1e9:.1f} GFLOP/s")
+    emit(f"kernel/gram_ref/{ng}x70", us, f"{2 * ng * 70 * 70 / (us / 1e6) / 1e9:.1f} GFLOP/s")
 
     # attention at test scale
-    q = jnp.asarray(rng.standard_normal((8, 512, 64)), jnp.bfloat16)
+    S = 128 if smoke else 512
+    q = jnp.asarray(rng.standard_normal((8, S, 64)), jnp.bfloat16)
     a = jax.jit(lambda q: attention_ref(q, q, q))
     a(q)
     us = time_call(a, q)
-    emit("kernel/attention_ref/8x512x64", us, "oracle path")
+    emit(f"kernel/attention_ref/8x{S}x64", us, "oracle path")
 
     # ssd at test scale
-    BH, T, P, N = 16, 512, 64, 32
+    BH, T, P, N = (4, 128, 64, 32) if smoke else (16, 512, 64, 32)
     x = jnp.asarray(rng.standard_normal((BH, T, P)), jnp.float32)
     dt = jnp.asarray(rng.random((BH, T, 1)) * 0.5 + 0.01, jnp.float32)
     A = jnp.asarray(-rng.random((BH, 1)) - 0.1, jnp.float32)
@@ -53,11 +169,17 @@ def run():
     s = jax.jit(ssd_ref)
     s(x, dt, A, Bm, Cm)
     us = time_call(s, x, dt, A, Bm, Cm)
-    emit("kernel/ssd_ref/16x512", us, "oracle sequential scan")
+    emit(f"kernel/ssd_ref/{BH}x{T}", us, "oracle sequential scan")
 
 
 def main():
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true", help="tiny sizes — seconds, for CI"
+    )
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    scoring_bench(smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines. Sub-benchmarks:
   table5   — Tables 5/6: equity panels (10/20 stocks)
   fig9     — timing vs n (speedup headline)
   kernels  — kernel-path micro-benchmarks
+  scoring  — chunked ScoringEngine vs dense seed pipeline → BENCH_scoring.json
   roofline — §Roofline aggregation of the dry-run artifacts
 
 ``python -m benchmarks.run [--quick] [--only table1,roofline]``
@@ -49,7 +50,8 @@ def main() -> None:
         "fig9": lambda: fig9_timing.run(
             sizes=(10_000, 50_000) if q else (10_000, 50_000, 200_000)
         ),
-        "kernels": kernel_bench.run,
+        "kernels": lambda: kernel_bench.run(smoke=q),
+        "scoring": lambda: kernel_bench.scoring_bench(smoke=q),
         "roofline": roofline_table.main,
     }
     selected = args.only.split(",") if args.only else list(benches)

@@ -42,5 +42,6 @@ from repro.core.mctm import (
     nll_terms,
     sample,
 )
+from repro.core.scoring import ScoringEngine, ScoringResult, score_chunks
 from repro.core.sensitivity import sensitivity_sample
 from repro.core.streaming import MergeReduceCoreset, WeightedSet

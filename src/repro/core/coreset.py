@@ -24,14 +24,7 @@ import numpy as np
 
 from repro.core import mctm as M
 from repro.core.bernstein import DataScaler
-from repro.core.hull import epsilon_kernel_indices
-from repro.core.leverage import (
-    flatten_features,
-    leverage_scores_gram,
-    ridge_leverage_scores,
-    root_leverage_scores,
-    sketched_leverage,
-)
+from repro.core.scoring import DEFAULT_CHUNK, ScoringEngine
 
 Method = Literal["uniform", "l2-only", "l2-hull", "ridge-lss", "root-l2"]
 
@@ -62,25 +55,30 @@ def coreset_scores(
     sketch_size: int = 0,
     key: jax.Array | None = None,
     ridge_reg: float = 1.0,
+    chunk_size: int | None = DEFAULT_CHUNK,
 ) -> np.ndarray:
-    """Per-point sampling scores s_i (sensitivity proxies) for each method."""
-    A, _ = M.basis_features(cfg, scaler, jnp.asarray(Y))
-    X = flatten_features(A)
-    n = X.shape[0]
+    """Per-point sampling scores s_i (sensitivity proxies) for each method.
+
+    Backed by the chunked ``ScoringEngine``: inputs larger than ``chunk_size``
+    are streamed with O(chunk·J·d) peak memory instead of materializing the
+    (n, J, d) basis tensor.
+    """
+    n = np.asarray(Y).shape[0]
     if method == "uniform":
         return np.full(n, 1.0 / n)
-    if method in ("l2-only", "l2-hull"):
-        if sketch_size > 0:
-            assert key is not None
-            u = sketched_leverage(X, key, sketch_size)
-        else:
-            u = leverage_scores_gram(X)
-        return np.asarray(u) + 1.0 / n
-    if method == "ridge-lss":
-        return np.asarray(ridge_leverage_scores(X, ridge_reg)) + 1.0 / n
-    if method == "root-l2":
-        return np.asarray(root_leverage_scores(X)) + 1.0 / n
-    raise ValueError(f"unknown coreset method: {method}")
+    if method not in CORESET_METHODS:
+        raise ValueError(f"unknown coreset method: {method}")
+    if sketch_size > 0:
+        assert key is not None
+    engine = ScoringEngine(cfg, scaler, chunk_size=chunk_size)
+    res = engine.score(
+        jnp.asarray(Y),
+        method=method,
+        key=key,
+        sketch_size=sketch_size,
+        ridge_reg=ridge_reg,
+    )
+    return res.scores
 
 
 def build_coreset(
@@ -93,8 +91,15 @@ def build_coreset(
     key: jax.Array,
     alpha: float = 0.8,
     sketch_size: int = 0,
+    chunk_size: int | None = DEFAULT_CHUNK,
 ) -> CoresetResult:
-    """Paper Algorithm 1 (and its baselines). Returns indices + weights."""
+    """Paper Algorithm 1 (and its baselines). Returns indices + weights.
+
+    The whole pre-sampling phase (leverage + hull extremes) runs as ONE
+    two-pass sweep of the ``ScoringEngine``: the basis is evaluated at most
+    once per chunk per pass — the dense path evaluates it exactly once — and
+    nothing of size (n, J, d) is materialized when ``n > chunk_size``.
+    """
     t0 = time.perf_counter()
     Y = np.asarray(Y)
     n = Y.shape[0]
@@ -108,23 +113,28 @@ def build_coreset(
         w = np.full(k, n / k)
         return CoresetResult(idx, w, None, method, time.perf_counter() - t0)
 
-    k_score, k_hull_key = jax.random.split(key)
-    scores = coreset_scores(
-        cfg, scaler, Y, method, sketch_size=sketch_size, key=k_score
+    # independent streams from the parent key: scoring (sketch), hull
+    # directions, and the sample draw (k_draw must NOT be re-derived from
+    # k_score — the sketch already consumed it)
+    k_score, k_hull_key, k_draw = jax.random.split(key, 3)
+    engine = ScoringEngine(cfg, scaler, chunk_size=chunk_size)
+    res = engine.score(
+        jnp.asarray(Y),
+        method=method,
+        key=k_score,
+        sketch_size=sketch_size,
+        hull_k=k_hull,
+        hull_key=k_hull_key,
     )
+    scores = res.scores
     probs = scores / scores.sum()
-    k_draw, _ = jax.random.split(k_score)
     idx = np.asarray(
         jax.random.choice(k_draw, n, shape=(k_sample,), replace=True, p=jnp.asarray(probs))
     )
     w = 1.0 / (k_sample * probs[idx])
 
     if method == "l2-hull" and k_hull > 0:
-        _, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
-        P = np.asarray(Ap).reshape(n * cfg.J, cfg.d)
-        hull_rows = epsilon_kernel_indices(P, k_hull, k_hull_key)
-        hull_pts = np.unique(hull_rows // cfg.J)  # row (i, j) → point i
-        hull_pts = hull_pts[: k_hull]
+        hull_pts = res.hull_points[:k_hull]  # row (i, j) → point i, dedup'd
         hull_w = np.ones(hull_pts.shape[0])
         idx = np.concatenate([idx, hull_pts])
         w = np.concatenate([w, hull_w])

@@ -1,34 +1,40 @@
 """Distributed coreset construction over a device mesh (shard_map).
 
-The scalable realization of the paper's Algorithm 1 on a TPU pod:
+The scalable realization of the paper's Algorithm 1 on a TPU pod — the
+sharded counterpart of ``repro.core.scoring.ScoringEngine``'s pass 1/2:
 
   1. Every data shard holds a slice of the basis matrix Ã (rows b_i).
   2. Gram accumulation: G = Σ_shards Ã_sᵀÃ_s via ``psum`` over the data axis —
-     one (dJ)² all-reduce, independent of n.
-  3. Each shard computes its rows' leverage u_i = Ã_i G⁺ Ã_iᵀ locally.
+     one (dJ)² all-reduce, independent of n. The per-shard Gram goes through
+     ``gram_matrix`` (compiled Pallas kernel on TPU, XLA oracle elsewhere).
+  3. Each shard computes its rows' leverage u_i = Ã_i G⁺ Ã_iᵀ locally from
+     the shared ``gram_projection`` factorization.
   4. Directional hull queries: per-shard argmax ⟨p, v⟩ → global max via
      all_gather of (score, index) candidates.
+
+``distributed_scoring_stats`` is the one-collective psum of the scoring
+engine's full pass-1 state (Gram + hull moments) — the building block for
+running pass 1 sharded *and* chunked per shard (see ROADMAP open items).
 
 The same Gram-psum pattern powers the LM-pipeline coreset stage
 (`repro.data.pipeline.CoresetSelector`) with model-embedding features.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.leverage import leverage_from_gram
+from repro.core.scoring import gram_projection
+from repro.kernels.gram.ops import gram_matrix
+from repro.utils.compat import shard_map
 
 __all__ = [
     "distributed_gram",
     "distributed_leverage",
     "distributed_direction_argmax",
     "distributed_coreset_scores",
+    "distributed_scoring_stats",
 ]
 
 
@@ -36,7 +42,7 @@ def distributed_gram(X: jax.Array, mesh: Mesh, axis: str = "data") -> jax.Array:
     """G = XᵀX with X row-sharded over `axis`; result replicated."""
 
     def shard_fn(xs):
-        return jax.lax.psum(xs.T @ xs, axis)
+        return jax.lax.psum(gram_matrix(xs), axis)
 
     spec_in = P(axis, None)
     spec_out = P(None, None)
@@ -48,13 +54,38 @@ def distributed_leverage(X: jax.Array, mesh: Mesh, axis: str = "data") -> jax.Ar
     """Leverage scores with X row-sharded: one psum + local projections."""
 
     def shard_fn(xs):
-        G = jax.lax.psum(xs.T @ xs, axis)
-        return leverage_from_gram(xs, G)
+        G = jax.lax.psum(gram_matrix(xs), axis)
+        V, inv = gram_projection(G)
+        return jnp.sum(jnp.square(xs @ V) * inv, axis=1)
 
     fn = shard_map(
         shard_fn, mesh=mesh, in_specs=(P(axis, None),), out_specs=P(axis)
     )
     return fn(X)
+
+
+def distributed_scoring_stats(
+    X: jax.Array, P_pts: jax.Array, mesh: Mesh, axis: str = "data"
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pass-1 sufficient statistics of the scoring engine, one psum each.
+
+    Returns (G = XᵀX, Σp, Σppᵀ) replicated — everything needed to build the
+    leverage projection and the hull direction net without gathering data.
+    """
+
+    def shard_fn(xs, ps):
+        G = jax.lax.psum(gram_matrix(xs), axis)
+        s1 = jax.lax.psum(jnp.sum(ps, axis=0), axis)
+        s2 = jax.lax.psum(ps.T @ ps, axis)
+        return G, s1, s2
+
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None)),
+        out_specs=(P(None, None), P(None), P(None, None)),
+    )
+    return fn(X, P_pts)
 
 
 def distributed_direction_argmax(
@@ -63,7 +94,9 @@ def distributed_direction_argmax(
     """Global argmax_i ⟨p_i, v⟩ per direction, points row-sharded over `axis`.
 
     Returns global row indices, shape (m,). Implemented as a per-shard argmax
-    followed by a cross-shard max over (score, global_index) pairs.
+    followed by a cross-shard max over (score, global_index) pairs — the same
+    running-extreme reduction the chunked engine's pass 2 performs over
+    chunks, here over shards.
     """
     n = P_pts.shape[0]
     shards = mesh.shape[axis]
@@ -83,8 +116,8 @@ def distributed_direction_argmax(
     fn = shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(jax.sharding.PartitionSpec(axis, None), jax.sharding.PartitionSpec(None, None)),
-        out_specs=jax.sharding.PartitionSpec(None),
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(None),
         check_vma=False,  # all_gather+argmax makes the output replicated
     )
     return fn(P_pts, dirs)

@@ -22,7 +22,9 @@ import numpy as np
 __all__ = [
     "greedy_hull_projection",
     "epsilon_kernel_indices",
+    "hull_directions",
     "hull_distance",
+    "stable_first_unique",
 ]
 
 
@@ -69,18 +71,38 @@ def hull_distance(P: jax.Array, q: jax.Array, eps: float = 1e-3, max_iter: int =
     return float(jnp.linalg.norm(q - t))
 
 
-def _spread_directions(key: jax.Array, P: np.ndarray, m: int) -> np.ndarray:
-    """Random unit directions + principal axes + mean-centered far points."""
-    d = P.shape[1]
+def hull_directions(key: jax.Array, cov: np.ndarray, m: int) -> np.ndarray:
+    """Direction net: m random unit directions + ±principal axes of ``cov``.
+
+    ``cov`` is the (d, d) covariance of the point cloud — the only data
+    statistic the net needs, which is what lets the chunked scoring engine
+    build the identical net from streamed second moments.
+    """
+    d = cov.shape[0]
     g = np.array(jax.random.normal(key, (m, d), dtype=jnp.float32))
     g /= np.maximum(np.linalg.norm(g, axis=1, keepdims=True), 1e-12)
-    mu = P.mean(axis=0)
-    Pc = P - mu
     # principal axes (d is small: basis dimension)
-    cov = Pc.T @ Pc / max(P.shape[0], 1)
     _, V = np.linalg.eigh(cov)
-    dirs = [g, V.T, -V.T]
-    return np.concatenate(dirs, axis=0)
+    return np.concatenate([g, V.T, -V.T], axis=0)
+
+
+def _spread_directions(key: jax.Array, P: np.ndarray, m: int) -> np.ndarray:
+    """Random unit directions + principal axes of the centered point cloud."""
+    Pc = P - P.mean(axis=0)
+    cov = Pc.T @ Pc / max(P.shape[0], 1)
+    return hull_directions(key, cov, m)
+
+
+def stable_first_unique(cand: np.ndarray, k: int) -> np.ndarray:
+    """First k distinct values of ``cand`` in order of first occurrence.
+
+    Vectorized replacement for the quadratic ``if i not in seen`` scan: one
+    ``np.unique`` for the distinct values, re-sorted by first-occurrence
+    position.
+    """
+    uniq, first = np.unique(cand, return_index=True)
+    order = np.argsort(first, kind="stable")
+    return uniq[order][:k].astype(np.int64)
 
 
 def epsilon_kernel_indices(
@@ -88,27 +110,24 @@ def epsilon_kernel_indices(
     k: int,
     key: jax.Array,
     oversample: int = 4,
+    dirs: np.ndarray | None = None,
 ) -> np.ndarray:
     """Select ≤ k extremal (hull) indices of P via directional queries.
 
     Matches the role of the η-kernel in Theorem 2.4: the selected set touches
     every direction's extreme within the resolution of the direction net. With
     `oversample·k` directions the dedup'd argmaxes cover the hull densely for
-    the mild (low-d) data the paper targets.
+    the mild (low-d) data the paper targets. Pass ``dirs`` to reuse a
+    precomputed net (e.g. the scoring engine's moment-derived one).
     """
     P_np = np.asarray(P, dtype=np.float32)
     n = P_np.shape[0]
     if n <= k:
         return np.arange(n)
-    dirs = _spread_directions(key, P_np, m=max(oversample * k, 8))
+    if dirs is None:
+        dirs = _spread_directions(key, P_np, m=max(oversample * k, 8))
     scores = P_np @ dirs.T  # (n, m)
     cand = np.argmax(scores, axis=0)
     # also take per-direction minima (extreme in −v comes for free)
     cand = np.concatenate([cand, np.argmin(scores, axis=0)])
-    seen: list[int] = []
-    for i in cand:
-        if i not in seen:
-            seen.append(int(i))
-        if len(seen) >= k:
-            break
-    return np.asarray(seen[:k], dtype=np.int64)
+    return stable_first_unique(cand, k)

@@ -64,11 +64,17 @@ def leverage_scores_qr(X: jax.Array) -> jax.Array:
 
 
 @jax.jit
-def leverage_from_gram(X: jax.Array, G: jax.Array, rcond: float = 1e-10) -> jax.Array:
+def leverage_from_gram(X: jax.Array, G: jax.Array, rcond: float = 1e-6) -> jax.Array:
     """u_i = X_i G⁺ X_iᵀ given a (possibly psum-accumulated) Gram G = XᵀX.
 
     Eigendecomposition pseudo-inverse handles rank deficiency (e.g. Bernstein
     bases are a partition of unity, so intercept columns introduce collinearity).
+
+    ``rcond`` must sit ABOVE the f32 summation noise floor (~1e-8·λmax): an
+    exactly-null mode surfaces from eigh at ±O(1e-8)·λmax, and a threshold
+    below that would include it — with an enormous 1/λ weight — depending on
+    nothing but accumulation order (dense vs chunked vs psum grams would
+    disagree wildly).
     """
     w, V = jnp.linalg.eigh(G)
     wmax = jnp.max(jnp.abs(w))

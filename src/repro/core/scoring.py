@@ -1,0 +1,469 @@
+"""Chunked two-pass scoring engine for Algorithm 1's pre-sampling phase.
+
+The paper's construction must score *all n* points before it ever samples:
+leverage scores u_i of the flattened basis matrix X̃ ∈ R^{n×Jd}, plus the
+directional hull extremes of the derivative rows {a'_ij} ⊂ R^d that feed the
+ε-kernel augmentation. The naive realization materializes the full (n, J, d)
+basis tensor (twice — once for scores, once for the hull) and computes the
+Gram in one dense shot, so peak memory grows linearly in n. This engine
+replaces that with a streaming pipeline whose peak memory is O(chunk·J·d):
+
+  Pass 1 — statistics. Stream row-chunks of Y through the fused Bernstein
+    basis+derivative evaluation and accumulate three small sufficient
+    statistics: the Gram G = X̃ᵀX̃ ∈ R^{Jd×Jd} (via the tiled Pallas
+    ``gram_kernel`` when compiled on TPU, the XLA oracle elsewhere — see
+    ``repro.kernels.gram.ops.gram_matrix``), and the first/second moments of
+    the derivative rows P (Σp, Σppᵀ) from which the hull direction net's PCA
+    axes are derived. With ``sketch_size > 0`` the Gram is replaced by the
+    CountSketch Gram (SX)ᵀ(SX) (Woodruff 2014 Thm 2.13), still accumulated
+    chunk-by-chunk. Everything kept across chunks is O((Jd)²).
+
+  Between passes — tiny host-side algebra: one eigh of G gives the projection
+    (V, w⁺) such that u_i = ‖X̃_i V‖²_{w⁺}; the direction net (random +
+    ±principal axes, exactly ``hull.hull_directions``) is built from the
+    accumulated P moments.
+
+  Pass 2 — scores. Re-stream the same chunks to emit leverage scores
+    u_i = Σ_m (X̃_i V)²_m · w⁺_m and, fused into the same sweep, the running
+    per-direction max/min of ⟨p, v⟩ with first-occurrence argmax semantics —
+    the chunked equivalent of ``hull.epsilon_kernel_indices``. No (n, Jd) or
+    (n·J, m) array is ever materialized.
+
+When the input fits in a single chunk the engine takes a dense fast path that
+evaluates the basis exactly once and shares it between both "passes" (the
+recompute-over-store tradeoff only pays off once n exceeds the chunk size).
+
+Weighted inputs (Merge & Reduce streaming buckets) scale X̃ rows by √w —
+leverage of the weighted matrix — while the hull operates on the raw
+derivative rows, matching the batch construction.
+
+Follow-ons this engine is shaped for (see ROADMAP): per-shard pass-1 psum
+(the chunk loop becomes a shard_map body; G, Σp, Σppᵀ are psum-able), and a
+sketched pass 1 that avoids the second data sweep entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hull import hull_directions, stable_first_unique
+from repro.kernels.gram.ops import gram_matrix
+
+__all__ = [
+    "ScoringEngine",
+    "ScoringResult",
+    "score_chunks",
+    "gram_projection",
+    "DEFAULT_CHUNK",
+]
+
+DEFAULT_CHUNK = 65_536
+
+SCORE_METHODS = ("l2-only", "l2-hull", "ridge-lss", "root-l2")
+
+
+def _spectrum_inverse(w, *, ridge_reg: float, rcond: float, xp):
+    """Inverted eigenvalue weights shared by every projection variant.
+
+    ``xp`` is the array module (np or jnp) so the jitted distributed path and
+    the engine's f64 host path stay threshold-identical by construction.
+    """
+    if ridge_reg > 0.0:
+        return 1.0 / (xp.maximum(w, 0.0) + ridge_reg)
+    wmax = xp.max(xp.abs(w))
+    return xp.where(w > rcond * wmax, 1.0 / xp.maximum(w, 1e-30), 0.0)
+
+
+def gram_projection(
+    G: jax.Array, *, ridge_reg: float = 0.0, rcond: float = 1e-6
+) -> tuple[jax.Array, jax.Array]:
+    """Factor G into (V, inv) with u_i = Σ_m (X_i V)²_m · inv_m.
+
+    ``ridge_reg == 0`` reproduces ``leverage.leverage_from_gram``'s eigh
+    pseudo-inverse (rank-deficient Bernstein Grams); ``ridge_reg > 0`` gives
+    ridge leverage scores u_i(λ) = X_i (G + λI)⁻¹ X_iᵀ through the same
+    eigenbasis (G and G + λI commute). ``rcond`` sits above the f32 noise
+    floor so exactly-null modes are excluded regardless of how G was
+    accumulated (see ``leverage_from_gram``).
+    """
+    w, V = jnp.linalg.eigh(G)
+    return V, _spectrum_inverse(w, ridge_reg=ridge_reg, rcond=rcond, xp=jnp)
+
+
+@dataclasses.dataclass
+class ScoringResult:
+    """Everything the sampling step of Algorithm 1 needs, for n points."""
+
+    scores: np.ndarray             # (n,) sampling scores s_i (method-dependent)
+    leverage: np.ndarray           # (n,) raw leverage-type scores u_i
+    gram: np.ndarray               # (D, D) accumulated (possibly sketched) Gram
+    hull_rows: np.ndarray | None   # ordered extremal row ids into the (n·r) P rows
+    hull_points: np.ndarray | None  # unique point ids hit by hull_rows (sorted)
+    n: int
+    n_chunks: int
+
+    @property
+    def hull_candidates(self) -> np.ndarray | None:
+        """Alias for ``hull_rows`` (the ε-kernel candidate set)."""
+        return self.hull_rows
+
+
+# jitted featurize closures keyed on (cfg, scaler bounds): build_coreset /
+# coreset_scores construct a fresh engine per call, and without this cache
+# each engine would carry its own empty jit trace cache and recompile the
+# fused basis evaluation every call
+_MCTM_FEATURIZE_CACHE: dict = {}
+
+
+def _mctm_featurize(cfg, scaler) -> Callable[[jax.Array], tuple[jax.Array, jax.Array]]:
+    """Fused basis+derivative evaluation for one chunk of Y.
+
+    Returns (X̃ chunk (c, J·d), P chunk (c·J, d)). Single jitted trace per
+    distinct chunk length; the math is exactly ``mctm.basis_features``.
+    """
+    from repro.core import mctm as M
+
+    cache_key = (
+        cfg,
+        np.asarray(scaler.low).tobytes(),
+        np.asarray(scaler.high).tobytes(),
+    )
+    cached = _MCTM_FEATURIZE_CACHE.get(cache_key)
+    if cached is not None:
+        return cached
+
+    @jax.jit
+    def featurize(Yc: jax.Array) -> tuple[jax.Array, jax.Array]:
+        A, Ap = M.basis_features(cfg, scaler, Yc)
+        c = A.shape[0]
+        return A.reshape(c, cfg.J * cfg.d), Ap.reshape(c * cfg.J, cfg.d)
+
+    if len(_MCTM_FEATURIZE_CACHE) > 64:  # bound growth across many configs
+        _MCTM_FEATURIZE_CACHE.clear()
+    _MCTM_FEATURIZE_CACHE[cache_key] = featurize
+    return featurize
+
+
+# --------------------------------------------------------------------------
+# jitted per-chunk steps (module-level so all engines share trace caches)
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def _acc_stats(G, s1, s2, X, P, sw):
+    """Pass-1 accumulation: Gram of √w-scaled rows + P first/second moments."""
+    Xw = X * sw[:, None]
+    G = G + gram_matrix(Xw)
+    if P is not None:
+        s1 = s1 + jnp.sum(P, axis=0)
+        s2 = s2 + P.T @ P
+    return G, s1, s2
+
+
+@jax.jit
+def _acc_sketch(SX, s1, s2, X, P, sw, rows, signs):
+    """Pass-1 CountSketch accumulation: SX += S_chunk · (√w·X) chunk."""
+    Xw = X * sw[:, None]
+    SX = SX.at[rows].add(signs[:, None] * Xw)
+    if P is not None:
+        s1 = s1 + jnp.sum(P, axis=0)
+        s2 = s2 + P.T @ P
+    return SX, s1, s2
+
+
+@jax.jit
+def _leverage_chunk(X, sw, V, inv):
+    Xw = X * sw[:, None]
+    return jnp.sum(jnp.square(Xw @ V) * inv, axis=1)
+
+
+@jax.jit
+def _hull_chunk(P, dirs):
+    """Per-chunk directional extremes: (max, argmax, min, argmin) per direction.
+
+    Laid out (m, c·r) so the reductions run along the contiguous last axis —
+    axis-0 argmax over a (c·r, m) matrix is an order of magnitude slower on
+    CPU (strided) and tiles badly on TPU (sublane reduction).
+    """
+    S = dirs @ P.T  # (m, c·r) — chunk-local only, never (n·r, m)
+    imax = jnp.argmax(S, axis=1)
+    imin = jnp.argmin(S, axis=1)
+    # gather the extreme values instead of separate max/min passes — argmax
+    # and argmin are the only full sweeps over S
+    vmax = jnp.take_along_axis(S, imax[:, None], axis=1)[:, 0]
+    vmin = jnp.take_along_axis(S, imin[:, None], axis=1)[:, 0]
+    return vmax, imax, vmin, imin
+
+
+class ScoringEngine:
+    """Drives the pre-sampling phase of Algorithm 1 with O(chunk) memory.
+
+    Parameters
+    ----------
+    cfg, scaler: the MCTM model config and data scaler. The default featurizer
+        is the fused Bernstein basis+derivative evaluation.
+    featurize: optional override ``Y_chunk -> (X_chunk (c, D), P_chunk or
+        None)`` for non-MCTM workloads (e.g. embedding features in the LM data
+        pipeline; pass ``P_chunk = X_chunk`` to run hull selection on the
+        feature rows themselves).
+    chunk_size: rows of Y per chunk. Inputs with ``n <= chunk_size`` take the
+        dense fast path (single basis evaluation). ``None``/0 → never chunk.
+    rows_per_point: how many P rows each input point contributes (J for the
+        MCTM derivative rows, 1 for generic features).
+    """
+
+    def __init__(
+        self,
+        cfg=None,
+        scaler=None,
+        *,
+        featurize: Callable | None = None,
+        chunk_size: int | None = DEFAULT_CHUNK,
+        rows_per_point: int | None = None,
+        hull_oversample: int = 4,
+    ):
+        if featurize is None:
+            if cfg is None or scaler is None:
+                raise ValueError("either (cfg, scaler) or featurize is required")
+            featurize = _mctm_featurize(cfg, scaler)
+            rows_per_point = cfg.J
+        self.cfg = cfg
+        self.scaler = scaler
+        self.featurize = featurize
+        self.chunk_size = int(chunk_size) if chunk_size else 0
+        self.rows_per_point = int(rows_per_point or 1)
+        self.hull_oversample = hull_oversample
+
+    # ---------------------------------------------------------------- public
+
+    def score(
+        self,
+        Y,
+        *,
+        method: str = "l2-hull",
+        weights=None,
+        key: jax.Array | None = None,
+        sketch_size: int = 0,
+        ridge_reg: float = 1.0,
+        hull_k: int = 0,
+        hull_key: jax.Array | None = None,
+    ) -> ScoringResult:
+        """Score all n points (and optionally select hull candidates).
+
+        ``method`` follows ``coreset.CORESET_METHODS`` minus "uniform" (which
+        needs no scoring pass). ``weights`` (n,) triggers the √w-scaled
+        leverage of Merge & Reduce reductions. ``hull_k > 0`` additionally
+        returns ≤ hull_k ε-kernel candidate rows (requires ``hull_key``).
+        """
+        if method not in SCORE_METHODS:
+            raise ValueError(f"unknown scoring method: {method}")
+        Y = jnp.asarray(Y)
+        n = int(Y.shape[0])
+        if n == 0:
+            raise ValueError("cannot score an empty dataset")
+        if hull_k > 0 and hull_key is None:
+            raise ValueError("hull_k > 0 requires hull_key")
+        if sketch_size > 0 and key is None:
+            raise ValueError("sketch_size > 0 requires key")
+        sqrt_w = (
+            jnp.sqrt(jnp.asarray(weights, jnp.float32)) if weights is not None else None
+        )
+
+        chunk = self.chunk_size if self.chunk_size > 0 else n
+        if n <= chunk:
+            out = self._score_dense(
+                Y, sqrt_w, n, method, key, sketch_size, ridge_reg, hull_k, hull_key
+            )
+        else:
+            out = self._score_chunked(
+                Y, sqrt_w, n, chunk, method, key, sketch_size, ridge_reg, hull_k, hull_key
+            )
+        return out
+
+    # --------------------------------------------------------------- helpers
+
+    def _sketch_plan(self, key, n: int, sketch_size: int):
+        """CountSketch rows/signs for all n rows — identical draws to
+        ``leverage.sketched_leverage`` so the two paths are comparable."""
+        k1, k2 = jax.random.split(key)
+        rows = jax.random.randint(k1, (n,), 0, sketch_size)
+        signs = jax.random.rademacher(k2, (n,), dtype=jnp.float32)
+        return rows, signs
+
+    def _finalize(self, n, n_chunks, method, G, u, hull_rows) -> ScoringResult:
+        u = np.asarray(u)
+        if method == "root-l2":
+            lev = np.sqrt(np.clip(u, 0.0, None))
+        else:
+            lev = u
+        scores = lev + 1.0 / n
+        hull_points = None
+        if hull_rows is not None:
+            hull_points = np.unique(hull_rows // self.rows_per_point)
+        return ScoringResult(
+            scores=scores,
+            leverage=lev,
+            gram=np.asarray(G),
+            hull_rows=hull_rows,
+            hull_points=hull_points,
+            n=n,
+            n_chunks=n_chunks,
+        )
+
+    def _projection(self, G, method, ridge_reg, rcond=1e-6):
+        """(V, inv) via float64 host eigh — same thresholds as
+        ``gram_projection`` but solver noise far below the f32 Gram's own
+        accumulation error, so leverage is stable across chunk sizes.
+
+        G is (Jd)², so the f64 eigh costs microseconds regardless of n.
+        """
+        G = np.asarray(G, np.float64)
+        w, V = np.linalg.eigh(G)
+        reg = ridge_reg if method == "ridge-lss" else 0.0
+        inv = _spectrum_inverse(w, ridge_reg=reg, rcond=rcond, xp=np)
+        return jnp.asarray(V, jnp.float32), jnp.asarray(inv, jnp.float32)
+
+    def _directions(self, hull_key, s1, s2, n_rows: int, hull_k: int) -> np.ndarray:
+        """Direction net from the accumulated P moments (cov = E[ppᵀ] − μμᵀ)."""
+        s1 = np.asarray(s1, np.float64)
+        s2 = np.asarray(s2, np.float64)
+        mu = s1 / max(n_rows, 1)
+        cov = s2 / max(n_rows, 1) - np.outer(mu, mu)
+        m = max(self.hull_oversample * hull_k, 8)
+        return hull_directions(hull_key, cov, m).astype(np.float32)
+
+    # ----------------------------------------------------------- dense path
+
+    def _score_dense(
+        self, Y, sqrt_w, n, method, key, sketch_size, ridge_reg, hull_k, hull_key
+    ) -> ScoringResult:
+        X, P = self.featurize(Y)
+        if hull_k > 0 and P is None:
+            raise ValueError("hull_k > 0 requires a featurize that returns P rows")
+        if hull_k == 0:
+            P = None  # no hull stage → don't pay for the P moment gram
+        sw = sqrt_w if sqrt_w is not None else jnp.ones((n,), jnp.float32)
+        zeros = self._zero_stats(X, P)
+        if sketch_size > 0:
+            rows, signs = self._sketch_plan(key, n, sketch_size)
+            SX = jnp.zeros((sketch_size, X.shape[1]), jnp.float32)
+            SX, s1, s2 = _acc_sketch(SX, zeros[1], zeros[2], X, P, sw, rows, signs)
+            G = SX.T @ SX
+        else:
+            G, s1, s2 = _acc_stats(zeros[0], zeros[1], zeros[2], X, P, sw)
+        V, inv = self._projection(G, method, ridge_reg)
+        u = _leverage_chunk(X, sw, V, inv)
+        hull_rows = None
+        if hull_k > 0:
+            dirs = jnp.asarray(
+                self._directions(hull_key, s1, s2, int(P.shape[0]), hull_k)
+            )
+            bmax, imax, bmin, imin = _hull_chunk(P, dirs)
+            cand = np.concatenate([np.asarray(imax), np.asarray(imin)])
+            hull_rows = stable_first_unique(cand, hull_k)
+        return self._finalize(n, 1, method, G, u, hull_rows)
+
+    # --------------------------------------------------------- chunked path
+
+    def _score_chunked(
+        self, Y, sqrt_w, n, chunk, method, key, sketch_size, ridge_reg, hull_k, hull_key
+    ) -> ScoringResult:
+        featurize = self.featurize
+        r = self.rows_per_point
+        n_chunks = (n + chunk - 1) // chunk
+
+        def chunk_iter():
+            for lo in range(0, n, chunk):
+                hi = min(lo + chunk, n)
+                Xc, Pc = featurize(Y[lo:hi])
+                if hull_k == 0:
+                    Pc = None  # no hull stage → skip the P moment gram
+                swc = (
+                    sqrt_w[lo:hi]
+                    if sqrt_w is not None
+                    else jnp.ones((hi - lo,), jnp.float32)
+                )
+                yield lo, hi, Xc, Pc, swc
+
+        # ---- pass 1: Gram (or sketch) + P moments, O((Jd)²) carried state
+        if sketch_size > 0:
+            rows_all, signs_all = self._sketch_plan(key, n, sketch_size)
+        G = s1 = s2 = SX = None
+        for lo, hi, Xc, Pc, swc in chunk_iter():
+            if G is None and SX is None:
+                if hull_k > 0 and Pc is None:
+                    raise ValueError(
+                        "hull_k > 0 requires a featurize that returns P rows"
+                    )
+                zG, zs1, zs2 = self._zero_stats(Xc, Pc)
+                if sketch_size > 0:
+                    SX = jnp.zeros((sketch_size, Xc.shape[1]), jnp.float32)
+                else:
+                    G = zG
+                s1, s2 = zs1, zs2
+            if sketch_size > 0:
+                SX, s1, s2 = _acc_sketch(
+                    SX, s1, s2, Xc, Pc, swc, rows_all[lo:hi], signs_all[lo:hi]
+                )
+            else:
+                G, s1, s2 = _acc_stats(G, s1, s2, Xc, Pc, swc)
+        if sketch_size > 0:
+            G = SX.T @ SX
+
+        # ---- between passes: (Jd)² algebra only
+        V, inv = self._projection(G, method, ridge_reg)
+        dirs = None
+        if hull_k > 0:
+            dirs = jnp.asarray(self._directions(hull_key, s1, s2, n * r, hull_k))
+            m = int(dirs.shape[0])
+            best_max = np.full(m, -np.inf, np.float32)
+            best_min = np.full(m, np.inf, np.float32)
+            best_imax = np.zeros(m, np.int64)
+            best_imin = np.zeros(m, np.int64)
+
+        # ---- pass 2: leverage emission + fused directional hull extremes
+        u = np.empty(n, np.float32)
+        for lo, hi, Xc, Pc, swc in chunk_iter():
+            u[lo:hi] = np.asarray(_leverage_chunk(Xc, swc, V, inv))
+            if dirs is not None:
+                bmax, imax, bmin, imin = _hull_chunk(Pc, dirs)
+                bmax, imax = np.asarray(bmax), np.asarray(imax) + lo * r
+                bmin, imin = np.asarray(bmin), np.asarray(imin) + lo * r
+                # strict comparison keeps the first-occurrence argmax semantics
+                # of the dense np.argmax over the full score matrix
+                upd = bmax > best_max
+                best_max[upd], best_imax[upd] = bmax[upd], imax[upd]
+                upd = bmin < best_min
+                best_min[upd], best_imin[upd] = bmin[upd], imin[upd]
+
+        hull_rows = None
+        if dirs is not None:
+            cand = np.concatenate([best_imax, best_imin])
+            hull_rows = stable_first_unique(cand, hull_k)
+        return self._finalize(n, n_chunks, method, G, u, hull_rows)
+
+    @staticmethod
+    def _zero_stats(X, P):
+        D = X.shape[1]
+        if P is None:
+            return jnp.zeros((D, D), jnp.float32), None, None
+        p = P.shape[1]
+        return (
+            jnp.zeros((D, D), jnp.float32),
+            jnp.zeros((p,), jnp.float32),
+            jnp.zeros((p, p), jnp.float32),
+        )
+
+
+def score_chunks(cfg, scaler, Y, **kwargs) -> ScoringResult:
+    """Functional one-shot entry: ``ScoringEngine(cfg, scaler).score(Y, ...)``.
+
+    ``chunk_size`` may be passed alongside the ``score`` kwargs.
+    """
+    chunk_size = kwargs.pop("chunk_size", DEFAULT_CHUNK)
+    engine = ScoringEngine(cfg, scaler, chunk_size=chunk_size)
+    return engine.score(Y, **kwargs)

@@ -16,8 +16,7 @@ import numpy as np
 
 from repro.core import mctm as M
 from repro.core.bernstein import DataScaler
-from repro.core.hull import epsilon_kernel_indices
-from repro.core.leverage import flatten_features, leverage_scores_gram
+from repro.core.scoring import DEFAULT_CHUNK, ScoringEngine
 
 __all__ = ["WeightedSet", "MergeReduceCoreset"]
 
@@ -49,6 +48,7 @@ class MergeReduceCoreset:
         k: int,
         key: jax.Array,
         alpha: float = 0.8,
+        chunk_size: int | None = DEFAULT_CHUNK,
     ):
         self.cfg = cfg
         self.scaler = scaler
@@ -57,6 +57,8 @@ class MergeReduceCoreset:
         self._key = key
         self._buckets: list[WeightedSet | None] = []
         self.n_seen = 0
+        # one engine for every reduce: shares the jitted featurize traces
+        self._engine = ScoringEngine(cfg, scaler, chunk_size=chunk_size)
 
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
@@ -66,23 +68,29 @@ class MergeReduceCoreset:
         """Weighted hybrid (ℓ2-hull) reduction of a weighted set to ≤ k points."""
         if ws.size <= self.k:
             return ws
-        cfg, scaler = self.cfg, self.scaler
-        A, Ap = M.basis_features(cfg, scaler, jnp.asarray(ws.Y))
-        X = flatten_features(A) * jnp.sqrt(jnp.asarray(ws.weights, jnp.float32))[:, None]
-        u = np.asarray(leverage_scores_gram(X))
-        scores = u + 1.0 / ws.size
-        probs = scores / scores.sum()
         k1 = int(np.floor(self.alpha * self.k))
         k2 = self.k - k1
+        # one engine sweep: √w-weighted leverage + hull extremes, chunked —
+        # merged buckets larger than chunk_size never materialize (m, J, d)
+        draw_key = self._next_key()
+        res = self._engine.score(
+            jnp.asarray(ws.Y),
+            method="l2-hull",
+            weights=ws.weights,
+            hull_k=k2,
+            hull_key=self._next_key(),
+        )
+        scores = res.scores
+        probs = scores / scores.sum()
         idx = np.asarray(
             jax.random.choice(
-                self._next_key(), ws.size, shape=(k1,), replace=True, p=jnp.asarray(probs)
+                draw_key, ws.size, shape=(k1,), replace=True, p=jnp.asarray(probs)
             )
         )
         w = ws.weights[idx] / (k1 * probs[idx])
-        P = np.asarray(Ap).reshape(ws.size * cfg.J, cfg.d)
-        hull_rows = epsilon_kernel_indices(P, k2, self._next_key())
-        hull_pts = np.unique(hull_rows // cfg.J)[:k2]
+        hull_pts = (
+            res.hull_points[:k2] if k2 > 0 else np.zeros(0, np.int64)
+        )  # α=1.0 → pure sampling, no hull stage
         hull_w = ws.weights[hull_pts]
         # conserve total mass across reduce levels: rescale the sampled part
         # so Σw_out = Σw_in (hull weights kept exact, bias doesn't compound)

@@ -22,8 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hull import epsilon_kernel_indices
-from repro.core.leverage import leverage_scores_gram
+from repro.core.scoring import DEFAULT_CHUNK, ScoringEngine
 
 __all__ = ["ShardedLoader", "CoresetSelector", "WeightedSubset"]
 
@@ -78,6 +77,11 @@ class CoresetSelector:
 
     featurize: (examples) -> (n, D) feature matrix. For LM data this is an
     embedding-pool of a proxy model; for MCTM it is the Bernstein basis.
+    featurize must be ROW-WISE (each output row a function of its input row
+    only): inputs beyond ``chunk_size`` are featurized chunk-by-chunk, so
+    whole-batch statistics inside featurize would become chunk-local. Pass
+    ``chunk_size=None`` to keep single-call semantics for batch-dependent
+    featurizers.
     """
 
     def __init__(
@@ -86,12 +90,23 @@ class CoresetSelector:
         *,
         alpha: float = 0.8,
         method: str = "l2-hull",
+        chunk_size: int | None = DEFAULT_CHUNK,
     ):
         if method not in ("l2-hull", "l2-only", "uniform"):
             raise ValueError(method)
         self.featurize = featurize
         self.alpha = alpha
         self.method = method
+
+        def _feat(Yc):
+            F = jnp.asarray(self.featurize(np.asarray(Yc)), jnp.float32)
+            return F, F  # hull queries run on the feature rows themselves
+
+        # chunked two-pass scorer: examples beyond chunk_size stream through
+        # featurize in O(chunk) memory instead of one giant feature matrix
+        self._engine = ScoringEngine(
+            featurize=_feat, chunk_size=chunk_size, rows_per_point=1
+        )
 
     def select(self, examples: np.ndarray, k: int, key: jax.Array) -> WeightedSubset:
         n = examples.shape[0]
@@ -100,18 +115,19 @@ class CoresetSelector:
             idx = np.asarray(jax.random.choice(key, n, shape=(k,), replace=False))
             return WeightedSubset(idx, np.full(k, n / k, np.float32))
 
-        X = jnp.asarray(self.featurize(examples), jnp.float32)
-        u = np.asarray(leverage_scores_gram(X))
-        scores = u + 1.0 / n
-        probs = scores / scores.sum()
         k1 = int(np.floor(self.alpha * k)) if self.method == "l2-hull" else k
+        k2 = k - k1 if self.method == "l2-hull" else 0
         k_draw, k_hull = jax.random.split(key)
+        res = self._engine.score(
+            examples, method="l2-only", hull_k=k2, hull_key=k_hull
+        )
+        probs = res.scores / res.scores.sum()
         idx = np.asarray(
             jax.random.choice(k_draw, n, shape=(k1,), replace=True, p=jnp.asarray(probs))
         )
         w = (1.0 / (k1 * probs[idx])).astype(np.float32)
-        if self.method == "l2-hull" and k - k1 > 0:
-            hull = epsilon_kernel_indices(np.asarray(X), k - k1, k_hull)
+        if k2 > 0:
+            hull = res.hull_rows  # rows == example ids (rows_per_point=1)
             idx = np.concatenate([idx, hull])
             w = np.concatenate([w, np.ones(hull.shape[0], np.float32)])
         return WeightedSubset(idx.astype(np.int64), w)

@@ -17,7 +17,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["ring_allgather_matmul", "reduce_scatter_matmul", "psum_quantized"]

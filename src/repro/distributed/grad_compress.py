@@ -12,7 +12,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.collectives import psum_quantized

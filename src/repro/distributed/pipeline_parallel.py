@@ -19,7 +19,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["pipeline_forward", "split_stages"]

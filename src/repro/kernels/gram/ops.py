@@ -1,4 +1,10 @@
-"""jit'd wrapper: arbitrary (n, D) → exact (D, D) Gram with padding."""
+"""Backend-dispatching wrapper: arbitrary (n, D) → exact (D, D) Gram.
+
+``gram_matrix`` picks the execution path per backend: the tiled Pallas kernel
+compiled on TPU, the XLA oracle (`gram_ref`) elsewhere. Interpret-mode Pallas
+is a *debug* path (orders of magnitude slower than XLA on CPU) and is only
+used when explicitly requested — it must never be a silent default.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,18 +13,49 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.gram.kernel import DEFAULT_BLOCK_ROWS, gram_kernel
+from repro.kernels.gram.ref import gram_ref
 
 LANE = 128
 
 
+def default_gram_backend() -> str:
+    """'pallas' (compiled kernel) on TPU, 'jnp' (XLA oracle) elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
 @partial(jax.jit, static_argnames=("interpret", "block_rows"))
-def gram_matrix(
-    x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True
+def _gram_pallas(
+    x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = False
 ) -> jax.Array:
-    """G = XᵀX. Zero-pads rows (no effect on the sum) and lanes (sliced off)."""
+    """Zero-pads rows (no effect on the sum) and lanes (sliced off)."""
     n, D = x.shape
     n_pad = (n + block_rows - 1) // block_rows * block_rows
     d_pad = (D + LANE - 1) // LANE * LANE
     xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :D].set(x)
     G = gram_kernel(xp, block_rows=block_rows, interpret=interpret)
     return G[:D, :D]
+
+
+def gram_matrix(
+    x: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    backend: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """G = XᵀX, f32.
+
+    backend: None → ``default_gram_backend()``; "pallas" → tiled Pallas
+    kernel; "jnp" → XLA oracle. ``interpret=True`` forces the Pallas
+    interpreter (kernel validation on CPU — slow, debug only) and implies
+    ``backend="pallas"``.
+    """
+    if interpret and backend is None:
+        backend = "pallas"
+    if backend is None:
+        backend = default_gram_backend()
+    if backend == "jnp":
+        return gram_ref(x)
+    if backend != "pallas":
+        raise ValueError(f"unknown gram backend: {backend}")
+    return _gram_pallas(x, block_rows=block_rows, interpret=bool(interpret))

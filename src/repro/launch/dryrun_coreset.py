@@ -22,7 +22,7 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.leverage import leverage_from_gram

@@ -8,18 +8,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Tiny mesh over the actually-available devices (tests / examples)."""
     n = len(jax.devices())
-    axes = ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((n // model, model), axes, axis_types=types)
+    return make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,51 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The code is written against current jax (`jax.shard_map`, `jax.make_mesh`
+with ``axis_types``, ``check_vma``); CI images may carry an older 0.4.x where
+those names live elsewhere or don't exist. Import the symbols from here so
+every module (and the subprocess-isolated distributed tests) resolves them
+uniformly.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["shard_map", "make_mesh"]
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep → check_vma independently
+# of where shard_map lives, so probe the signature rather than the import path
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """`jax.shard_map` with the replication-check kwarg renamed per version."""
+    kw = {}
+    if check_vma is not None:
+        kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """`jax.make_mesh` requesting Auto axis types where supported.
+
+    Older jax has no ``axis_types`` kwarg (Auto is the only behavior); newer
+    jax defaults to Auto unless ``explicit``.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    kind = axis_type.Explicit if explicit else axis_type.Auto
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names), axis_types=(kind,) * len(axis_names)
+    )

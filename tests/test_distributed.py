@@ -31,10 +31,10 @@ def test_distributed_leverage_matches_local():
     run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
         from repro.core.distributed_coreset import distributed_leverage, distributed_gram
         from repro.core.leverage import leverage_scores_qr
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         X = jnp.asarray(rng.standard_normal((640, 12)), jnp.float32)
         u_dist = np.asarray(distributed_leverage(X, mesh))
@@ -51,9 +51,9 @@ def test_distributed_direction_argmax():
     run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
         from repro.core.distributed_coreset import distributed_direction_argmax
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(1)
         P = jnp.asarray(rng.standard_normal((160, 5)), jnp.float32)
         dirs = jnp.asarray(rng.standard_normal((12, 5)), jnp.float32)
@@ -65,15 +65,35 @@ def test_distributed_direction_argmax():
     )
 
 
+def test_distributed_scoring_stats_match_local():
+    """Sharded pass-1 statistics (Gram + hull moments) ≡ local computation."""
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core.distributed_coreset import distributed_scoring_stats
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(7)
+        X = jnp.asarray(rng.standard_normal((320, 12)), jnp.float32)
+        P = jnp.asarray(rng.standard_normal((320, 5)), jnp.float32)
+        G, s1, s2 = distributed_scoring_stats(X, P, mesh)
+        np.testing.assert_allclose(np.asarray(G), np.asarray(X.T @ X), rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(P).sum(0), rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(P).T @ np.asarray(P), rtol=1e-4, atol=1e-3)
+        print("OK")
+        """
+    )
+
+
 def test_quantized_psum_and_error_feedback():
     run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        from repro.utils.compat import make_mesh
+        from repro.utils.compat import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import psum_quantized
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(2)
         x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
         fn = shard_map(lambda xs: psum_quantized(xs[0], "data", bits=8)[None],
@@ -91,9 +111,9 @@ def test_ring_allgather_matmul():
     run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
         from repro.distributed.collectives import ring_allgather_matmul, reduce_scatter_matmul
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         rng = np.random.default_rng(3)
         X = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)   # sharded K dim
         W = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
@@ -113,6 +133,7 @@ def test_dryrun_single_cell_multipod():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
         from repro.configs import get_reduced_config
         from repro.models import build_model
         from repro.models.transformer import shapes_and_specs
@@ -122,8 +143,7 @@ def test_dryrun_single_cell_multipod():
         from repro.optim import adamw
         from repro.distributed.sharding import replicated
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_reduced_config("tinyllama_1b")
         model = build_model(cfg, remat="full", xent_chunk=8)
         rules = default_rules(mesh)

@@ -10,10 +10,10 @@ REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 def test_pipeline_forward_matches_sequential():
     code = """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
         from repro.distributed.pipeline_parallel import pipeline_forward, split_stages
 
-        mesh = jax.make_mesh((4, 2), ("stage", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("stage", "data"))
         L, D = 8, 16
         rng = np.random.default_rng(0)
         layer_w = jnp.asarray(rng.standard_normal((L, D, D)) * 0.1, jnp.float32)

@@ -1,0 +1,205 @@
+"""Chunked ScoringEngine ≡ dense oracles (leverage, hull, variants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.hull import epsilon_kernel_indices
+from repro.core.leverage import (
+    flatten_features,
+    leverage_scores_gram,
+    ridge_leverage_scores,
+    root_leverage_scores,
+    sketched_leverage,
+)
+from repro.core.scoring import ScoringEngine, score_chunks
+
+# chunk sizes chosen so n=503 exercises: dense fast path, even chunks with a
+# ragged tail, chunk == n, and tiny many-chunk streaming
+CHUNKS = [0, 503, 128, 100, 7]
+
+
+def _setup(n=503, J=2, degree=5, seed=0, uniform=True):
+    rng = np.random.default_rng(seed)
+    Y = rng.random((n, J)) if uniform else rng.standard_normal((n, J))
+    cfg = M.MCTMConfig(J=J, degree=degree)
+    scaler = DataScaler.fit(Y)
+    return cfg, scaler, Y
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_leverage_matches_dense_oracle(chunk):
+    cfg, scaler, Y = _setup()
+    A, _ = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    u_ref = np.asarray(leverage_scores_gram(flatten_features(A)))
+    res = ScoringEngine(cfg, scaler, chunk_size=chunk).score(
+        jnp.asarray(Y), method="l2-only"
+    )
+    assert res.n_chunks == (1 if chunk in (0, 503) else -(-503 // chunk))
+    # uniform data → well-conditioned Gram → tight f32 agreement
+    np.testing.assert_allclose(res.leverage, u_ref, atol=1e-5)
+    np.testing.assert_allclose(res.scores, u_ref + 1.0 / 503, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS[1:])
+def test_chunked_matches_dense_engine_gaussian(chunk):
+    """Gaussian data (ill-conditioned tails): chunking must still not move
+    scores beyond f32 Gram-accumulation noise."""
+    cfg, scaler, Y = _setup(uniform=False)
+    dense = ScoringEngine(cfg, scaler, chunk_size=0).score(
+        jnp.asarray(Y), method="l2-only"
+    )
+    res = ScoringEngine(cfg, scaler, chunk_size=chunk).score(
+        jnp.asarray(Y), method="l2-only"
+    )
+    np.testing.assert_allclose(res.leverage, dense.leverage, atol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_hull_candidates_cover_dense_epsilon_kernel(chunk):
+    """Engine hull candidates ⊇ the dense ε-kernel (shared direction net)."""
+    cfg, scaler, Y = _setup(seed=1)
+    k = 20
+    key = jax.random.PRNGKey(3)
+    engine = ScoringEngine(cfg, scaler, chunk_size=chunk)
+    # oversample the engine's candidate budget so the dense first-k prefix of
+    # the same candidate stream must be contained in it
+    res = engine.score(jnp.asarray(Y), method="l2-hull", hull_k=2 * k, hull_key=key)
+    _, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    P = np.asarray(Ap).reshape(-1, cfg.d)
+    dirs = engine._directions(
+        key,
+        P.sum(axis=0),
+        P.T.astype(np.float64) @ P.astype(np.float64),
+        P.shape[0],
+        2 * k,
+    )
+    dense = epsilon_kernel_indices(P, k, key, dirs=dirs)
+    assert set(dense.tolist()) <= set(res.hull_rows.tolist())
+    # and the derived unique point set covers the dense selection's points
+    assert set((dense // cfg.J).tolist()) <= set(res.hull_points.tolist())
+
+
+def test_hull_exact_match_with_engine_directions():
+    """Same k, same net → byte-identical candidate selection at small n."""
+    cfg, scaler, Y = _setup(seed=2)
+    key = jax.random.PRNGKey(5)
+    dense = ScoringEngine(cfg, scaler, chunk_size=0).score(
+        jnp.asarray(Y), method="l2-hull", hull_k=16, hull_key=key
+    )
+    chunked = ScoringEngine(cfg, scaler, chunk_size=64).score(
+        jnp.asarray(Y), method="l2-hull", hull_k=16, hull_key=key
+    )
+    np.testing.assert_array_equal(dense.hull_rows, chunked.hull_rows)
+
+
+@pytest.mark.parametrize("chunk", [0, 100])
+def test_ridge_root_sketch_variants(chunk):
+    cfg, scaler, Y = _setup(seed=3)
+    A, _ = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    X = flatten_features(A)
+    engine = ScoringEngine(cfg, scaler, chunk_size=chunk)
+
+    ridge = engine.score(jnp.asarray(Y), method="ridge-lss", ridge_reg=1.0)
+    np.testing.assert_allclose(
+        ridge.leverage, np.asarray(ridge_leverage_scores(X, 1.0)), atol=1e-5
+    )
+
+    root = engine.score(jnp.asarray(Y), method="root-l2")
+    np.testing.assert_allclose(
+        root.leverage, np.asarray(root_leverage_scores(X)), atol=1e-4
+    )
+
+    key = jax.random.PRNGKey(11)
+    sk = engine.score(jnp.asarray(Y), method="l2-only", key=key, sketch_size=256)
+    np.testing.assert_allclose(
+        sk.leverage, np.asarray(sketched_leverage(X, key, 256)), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("chunk", [0, 100])
+def test_weighted_leverage_matches_manual(chunk):
+    """√w-scaled leverage (the Merge & Reduce reduction) vs manual dense."""
+    cfg, scaler, Y = _setup(seed=4)
+    rng = np.random.default_rng(4)
+    w = rng.random(503) * 3.0 + 0.1
+    A, _ = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    Xw = flatten_features(A) * jnp.sqrt(jnp.asarray(w, jnp.float32))[:, None]
+    u_ref = np.asarray(leverage_scores_gram(Xw))
+    res = ScoringEngine(cfg, scaler, chunk_size=chunk).score(
+        jnp.asarray(Y), method="l2-only", weights=w
+    )
+    np.testing.assert_allclose(res.leverage, u_ref, atol=1e-4)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_leverage_sums_to_rank(seed):
+    """Σu_i = rank(X̃) — the defining property of leverage scores."""
+    cfg, scaler, Y = _setup(n=192, seed=seed)
+    res = ScoringEngine(cfg, scaler, chunk_size=50).score(
+        jnp.asarray(Y), method="l2-only"
+    )
+    A, _ = M.basis_features(cfg, scaler, jnp.asarray(Y))
+    rank = np.linalg.matrix_rank(np.asarray(flatten_features(A), np.float64))
+    # f32 may drop near-null modes the f64 rank counts — allow slack below
+    assert rank - 1.5 <= res.leverage.sum() <= rank + 0.1
+    assert (res.leverage >= -1e-6).all() and (res.leverage <= 1 + 1e-5).all()
+
+
+def test_featurize_called_once_dense_and_chunk_bounded():
+    """The engine's memory contract: one featurize call on the dense path,
+    never more than chunk_size rows at a time when chunking."""
+    calls = []
+
+    def featurize(Yc):
+        calls.append(int(Yc.shape[0]))
+        F = jnp.asarray(Yc, jnp.float32)
+        return F, F
+
+    engine = ScoringEngine(featurize=featurize, chunk_size=0, rows_per_point=1)
+    rng = np.random.default_rng(0)
+    Y = rng.standard_normal((200, 6)).astype(np.float32)
+    engine.score(Y, method="l2-only")
+    assert calls == [200]  # dense fast path: exactly one evaluation
+
+    calls.clear()
+    engine = ScoringEngine(featurize=featurize, chunk_size=64, rows_per_point=1)
+    engine.score(Y, method="l2-only", hull_k=4, hull_key=jax.random.PRNGKey(0))
+    assert max(calls) <= 64          # O(chunk) working set
+    assert len(calls) == 2 * 4       # two passes over ⌈200/64⌉ chunks
+
+
+def test_score_chunks_functional_entry():
+    cfg, scaler, Y = _setup(seed=6)
+    res = score_chunks(cfg, scaler, jnp.asarray(Y), method="l2-only", chunk_size=100)
+    assert res.scores.shape == (503,)
+    assert res.n_chunks == 6
+
+
+def test_engine_validates_arguments():
+    cfg, scaler, Y = _setup()
+    engine = ScoringEngine(cfg, scaler)
+    with pytest.raises(ValueError):
+        engine.score(jnp.asarray(Y), method="uniform")
+    with pytest.raises(ValueError):
+        engine.score(jnp.asarray(Y), method="l2-hull", hull_k=4)  # no hull_key
+    with pytest.raises(ValueError):
+        engine.score(jnp.asarray(Y), method="l2-only", sketch_size=64)  # no key
+    with pytest.raises(ValueError):
+        ScoringEngine()  # neither (cfg, scaler) nor featurize
+
+
+def test_kernel_bench_smoke(tmp_path):
+    """CI hook for the bench path: --smoke sizes, artifact written, paths agree."""
+    from benchmarks.kernel_bench import scoring_bench
+
+    out = tmp_path / "BENCH_scoring.json"
+    rec = scoring_bench(smoke=True, out_path=str(out))
+    assert out.exists()
+    assert rec["smoke"] is True
+    assert rec["max_abs_score_diff"] < 1e-5
+    assert rec["chunked_bytes"] < rec["dense_bytes"]

@@ -4,6 +4,7 @@ import pytest
 from jax.sharding import PartitionSpec
 
 from repro.distributed.sharding import ShardingRules, default_rules, resolve_spec
+from repro.utils.compat import make_mesh
 
 
 class FakeMesh:
@@ -75,8 +76,7 @@ def test_axis_used_once():
 
 def test_default_rules_real_mesh():
     # exercise the real default_rules against a real (tiny) mesh
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = default_rules(mesh)
     assert rules.get("batch") == ("data",)
     assert rules.get("heads") == ("model",)

@@ -39,6 +39,20 @@ def test_streaming_nll_close_to_full(monkeypatch):
     assert approx == pytest.approx(full, rel=0.3)
 
 
+def test_alpha_one_disables_hull_stage():
+    """α=1.0 → pure importance sampling, no hull points (regression: the
+    engine returns hull_points=None when no hull stage is requested)."""
+    Y = generate("bivariate_normal", 1024, seed=3)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    mr = MergeReduceCoreset(cfg, scaler, k=64, key=jax.random.PRNGKey(3), alpha=1.0)
+    for i in range(0, 1024, 256):
+        mr.push(Y[i : i + 256])
+    res = mr.result()
+    assert 0 < res.size <= 64
+    assert res.weights.sum() == pytest.approx(1024, rel=0.35)
+
+
 def test_bucket_structure_is_logarithmic():
     Y = generate("bivariate_normal", 8192, seed=2)
     cfg = M.MCTMConfig(J=2, degree=3)
