@@ -11,6 +11,11 @@ the dense seed pipeline (two full basis evaluations, one-shot Gram, (n·J, m)
 hull score matrix) against the chunked two-pass ``ScoringEngine`` — and
 records speedup + peak memory into BENCH_scoring.json at the repo root.
 
+``dist_scoring_bench`` times the sharded chunked ``DistributedScoringEngine``
+against the single-host engine on an 8-fake-device CPU mesh (subprocess: the
+device count is fixed at first jax init) with a deliberately ragged n, and
+records timings + max-abs score agreement into BENCH_dist_scoring.json.
+
 ``--smoke`` shrinks every size so the whole bench path runs in seconds
 (exercised by tier-1 tests).
 """
@@ -20,6 +25,8 @@ import argparse
 import json
 import os
 import resource
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +139,114 @@ def scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
     return rec
 
 
+def _dist_scoring_child(smoke: bool, out_path: str) -> None:
+    """Body of the dist_scoring bench — runs inside a subprocess whose
+    XLA_FLAGS force 8 fake CPU devices (set by ``dist_scoring_bench``)."""
+    from repro.core import mctm as M
+    from repro.core.bernstein import DataScaler
+    from repro.core.distributed_coreset import DistributedScoringEngine
+    from repro.core.scoring import ScoringEngine
+    from repro.utils.compat import make_mesh
+
+    devices = len(jax.devices())
+    mesh = make_mesh((devices,), ("data",))
+    # ragged on purpose: n % devices != 0 exercises the padding/masking path
+    n = 30_001 if smoke else 250_001
+    k_hull = 16 if smoke else 40
+    chunk = 2048 if smoke else 8192
+    # degree 5: every Gram eigenvalue sits above the f32 noise floor, so the
+    # two engines are comparable to ~1e-8 (degree 6's starved edge bases put
+    # genuine modes at the rcond cutoff — see the ROADMAP f32 item)
+    J, degree = 2, 5
+    rng = np.random.default_rng(0)
+    Y = rng.random((n, J)).astype(np.float32)
+    cfg = M.MCTMConfig(J=J, degree=degree)
+    scaler = DataScaler.fit(Y)
+    key = jax.random.PRNGKey(0)
+
+    single = ScoringEngine(cfg, scaler, chunk_size=chunk)
+    dist = DistributedScoringEngine(cfg, scaler, mesh=mesh, chunk_size=chunk)
+
+    from repro.core.coreset import exact_hull_points
+
+    def single_path():
+        res = single.score(
+            jnp.asarray(Y), method="l2-hull", hull_k=k_hull, hull_key=key
+        )
+        return res.scores, exact_hull_points(res, res.scores, k_hull)
+
+    def dist_path():
+        res = dist.score(
+            jnp.asarray(Y), method="l2-hull", hull_k=k_hull, hull_key=key
+        )
+        return res.scores, exact_hull_points(res, res.scores, k_hull)
+
+    scores_d, hull_d = dist_path()  # warmup/compile
+    us_dist = time_call(dist_path, repeats=1 if smoke else 3)
+    scores_s, hull_s = single_path()
+    us_single = time_call(single_path, repeats=1 if smoke else 3)
+
+    rec = {
+        "n": n,
+        "J": J,
+        "degree": degree,
+        "k_hull": k_hull,
+        "chunk_size": chunk,
+        "devices": devices,
+        "smoke": smoke,
+        "single_host_s": us_single / 1e6,
+        "dist_s": us_dist / 1e6,
+        "speedup": us_single / us_dist,
+        "max_abs_score_diff": float(np.abs(scores_s - scores_d).max()),
+        # the k_hull hull POINTS the coreset consumes (exact_hull_points) —
+        # raw candidate tails can flip on near-tied argmaxes across layouts
+        "hull_points_equal": bool(np.array_equal(hull_s, hull_d)),
+        # per-chip analytic peak working set of the sharded engine (bytes):
+        # one (chunk, J, d) basis block + O((Jd)²) pass-1 state
+        "dist_chip_bytes": 2 * chunk * J * cfg.d * 4 + (J * cfg.d) ** 2 * 4,
+    }
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def dist_scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
+    """Sharded chunked DistributedScoringEngine vs single-host ScoringEngine.
+
+    Spawns a fresh interpreter with ``--xla_force_host_platform_device_count=8``
+    (device count is fixed at first jax init, and the parent may already have
+    initialized jax) and reads back the JSON record it writes.
+    """
+    if out_path is None:
+        if smoke:
+            from benchmarks.common import bench_dir
+
+            out_path = os.path.join(bench_dir("bench"), "BENCH_dist_scoring_smoke.json")
+        else:
+            out_path = os.path.join(REPO_ROOT, "BENCH_dist_scoring.json")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [REPO_ROOT, os.path.join(REPO_ROOT, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    cmd = [sys.executable, "-m", "benchmarks.kernel_bench", "--dist-child", "--out", out_path]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"dist_scoring child failed:\n{proc.stderr[-3000:]}")
+    with open(out_path) as f:
+        rec = json.load(f)
+    emit(
+        f"dist_scoring/n{rec['n']}_J{rec['J']}_d{rec['degree'] + 1}/dev{rec['devices']}",
+        rec["dist_s"] * 1e6,
+        f"single={rec['single_host_s']:.2f}s dist={rec['dist_s']:.2f}s "
+        f"speedup={rec['speedup']:.2f}x maxdiff={rec['max_abs_score_diff']:.1e}",
+    )
+    return rec
+
+
 def run(smoke: bool = False):
     rng = np.random.default_rng(0)
 
@@ -177,9 +292,15 @@ def main():
     ap.add_argument(
         "--smoke", action="store_true", help="tiny sizes — seconds, for CI"
     )
+    ap.add_argument("--dist-child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.dist_child:
+        _dist_scoring_child(args.smoke, args.out)
+        return
     run(smoke=args.smoke)
     scoring_bench(smoke=args.smoke)
+    dist_scoring_bench(smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -5,13 +5,17 @@
 The paper notes the coreset extension "only increases the dimension
 dependence by the number of features conditioned on": the leverage feature
 row becomes (b_i, x_i) ∈ R^{dJ+F}, everything else (sensitivity proxy,
-hull on a'(y)) is unchanged — which is exactly what
-:func:`conditional_coreset_scores` implements.
+hull on a'(y)) is unchanged. ``conditional_coreset_scores`` realizes this
+through the chunked ``ScoringEngine`` with a custom featurize that emits the
+augmented row (b_i, x_i) AND the derivative rows in one fused evaluation —
+the basis is computed once per chunk per pass (once total on the dense
+path), and inputs beyond ``chunk_size`` stream in O(chunk·(dJ+F)) memory.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import time
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +23,8 @@ import numpy as np
 
 from repro.core import mctm as M
 from repro.core.bernstein import DataScaler, monotone_theta
-from repro.core.hull import epsilon_kernel_indices
-from repro.core.leverage import leverage_scores_gram
+from repro.core.coreset import coreset_from_scoring
+from repro.core.scoring import DEFAULT_CHUNK, ScoringEngine
 
 __all__ = [
     "CMCTMConfig",
@@ -28,6 +32,7 @@ __all__ = [
     "init_cparams",
     "cnll",
     "fit_cmctm",
+    "conditional_scoring_engine",
     "conditional_coreset_scores",
     "build_conditional_coreset",
 ]
@@ -115,36 +120,112 @@ def fit_cmctm(
 # ---------------------------------------------------------------------------
 
 
+# jitted featurize closures keyed on (cfg, scaler bounds) — same rationale as
+# scoring._MCTM_FEATURIZE_CACHE: each build constructs a fresh engine, and an
+# uncached closure would recompile the fused basis evaluation every call
+_COND_FEATURIZE_CACHE: dict = {}
+
+
+def _conditional_featurize(cfg: CMCTMConfig, scaler: DataScaler) -> Callable:
+    """Fused featurize for the engine: one basis evaluation per chunk emits
+    both the augmented leverage row (b_i, x_i) ∈ R^{dJ+F} and the derivative
+    rows {a'_ij} the hull stage queries.
+
+    The engine streams a single array per chunk, so Y and X travel
+    concatenated column-wise: input rows are (y_i ∈ R^J, x_i ∈ R^F).
+    """
+    cache_key = (
+        cfg,
+        np.asarray(scaler.low).tobytes(),
+        np.asarray(scaler.high).tobytes(),
+    )
+    cached = _COND_FEATURIZE_CACHE.get(cache_key)
+    if cached is not None:
+        return cached
+
+    base = cfg.base
+
+    @jax.jit
+    def featurize(YX: jax.Array) -> tuple[jax.Array, jax.Array]:
+        Yc, Xc = YX[:, : cfg.J], YX[:, cfg.J :]
+        A, Ap = M.basis_features(base, scaler, Yc)
+        c = A.shape[0]
+        feats = jnp.concatenate([A.reshape(c, base.J * base.d), Xc], axis=1)
+        return feats, Ap.reshape(c * cfg.J, cfg.d)
+
+    if len(_COND_FEATURIZE_CACHE) > 64:  # bound growth across many configs
+        _COND_FEATURIZE_CACHE.clear()
+    _COND_FEATURIZE_CACHE[cache_key] = featurize
+    return featurize
+
+
+def conditional_scoring_engine(
+    cfg: CMCTMConfig, scaler: DataScaler, chunk_size: int | None = DEFAULT_CHUNK
+) -> ScoringEngine:
+    """Chunked scoring engine over the augmented conditional feature rows."""
+    return ScoringEngine(
+        featurize=_conditional_featurize(cfg, scaler),
+        chunk_size=chunk_size,
+        rows_per_point=cfg.J,
+    )
+
+
+def _stack_yx(cfg: CMCTMConfig, Y, X) -> jnp.ndarray:
+    YX = np.concatenate(
+        [np.asarray(Y, np.float32), np.asarray(X, np.float32)], axis=1
+    )
+    assert YX.shape[1] == cfg.J + cfg.n_features
+    return jnp.asarray(YX)
+
+
 def conditional_coreset_scores(
-    cfg: CMCTMConfig, scaler: DataScaler, Y, X
+    cfg: CMCTMConfig,
+    scaler: DataScaler,
+    Y,
+    X,
+    *,
+    chunk_size: int | None = DEFAULT_CHUNK,
 ) -> np.ndarray:
-    A, _ = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
-    n = A.shape[0]
-    feats = jnp.concatenate(
-        [A.reshape(n, -1), jnp.asarray(X, jnp.float32)], axis=1
-    )  # (n, dJ + F)
-    u = np.asarray(leverage_scores_gram(feats))
-    return u + 1.0 / n
+    """s_i = u_i + 1/n over the augmented rows (b_i, x_i), chunked."""
+    engine = conditional_scoring_engine(cfg, scaler, chunk_size)
+    return engine.score(_stack_yx(cfg, Y, X), method="l2-only").scores
 
 
 def build_conditional_coreset(
-    cfg: CMCTMConfig, scaler: DataScaler, Y, X, k: int, *, key, alpha: float = 0.8
+    cfg: CMCTMConfig,
+    scaler: DataScaler,
+    Y,
+    X,
+    k: int,
+    *,
+    key,
+    alpha: float = 0.8,
+    chunk_size: int | None = DEFAULT_CHUNK,
 ):
-    """Algorithm-1 hybrid for the conditional model; returns (idx, weights)."""
+    """Algorithm-1 hybrid for the conditional model; returns (idx, weights).
+
+    One engine sweep produces both the sampling scores and the hull
+    candidates (the basis is evaluated once on the dense path). The result
+    always has exactly ``min(k, n)`` entries: when the ε-kernel candidate
+    rows dedup to fewer than k − k1 distinct points (low-diversity hulls),
+    the shortfall is topped up from the next-ranked points by sampling
+    score, keeping the log-term guard deterministic.
+    """
+    t0 = time.perf_counter()
     Y = np.asarray(Y)
     n = Y.shape[0]
-    scores = conditional_coreset_scores(cfg, scaler, Y, X)
-    probs = scores / scores.sum()
-    k1 = int(np.floor(alpha * k))
+    k = min(k, n)
+    k2 = k - int(np.floor(alpha * k))
     k_draw, k_hull = jax.random.split(key)
-    idx = np.asarray(
-        jax.random.choice(k_draw, n, shape=(k1,), replace=True, p=jnp.asarray(probs))
+
+    engine = conditional_scoring_engine(cfg, scaler, chunk_size)
+    res = engine.score(
+        _stack_yx(cfg, Y, X),
+        method="l2-hull" if k2 > 0 else "l2-only",
+        hull_k=k2,
+        hull_key=k_hull if k2 > 0 else None,
     )
-    w = 1.0 / (k1 * probs[idx])
-    _, Ap = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
-    P = np.asarray(Ap).reshape(n * cfg.J, cfg.d)
-    hull_rows = epsilon_kernel_indices(P, k - k1, k_hull)
-    hull_pts = np.unique(hull_rows // cfg.J)[: k - k1]
-    idx = np.concatenate([idx, hull_pts])
-    w = np.concatenate([w, np.ones(hull_pts.shape[0])])
-    return idx, w
+    cs = coreset_from_scoring(
+        res, n, k, "l2-hull" if k2 > 0 else "l2-only", alpha, k_draw, t0
+    )
+    return cs.indices, cs.weights

@@ -24,11 +24,19 @@ import numpy as np
 
 from repro.core import mctm as M
 from repro.core.bernstein import DataScaler
+from repro.core.hull import stable_first_unique
 from repro.core.scoring import DEFAULT_CHUNK, ScoringEngine
 
 Method = Literal["uniform", "l2-only", "l2-hull", "ridge-lss", "root-l2"]
 
-__all__ = ["CoresetResult", "build_coreset", "coreset_scores", "CORESET_METHODS"]
+__all__ = [
+    "CoresetResult",
+    "build_coreset",
+    "coreset_scores",
+    "coreset_from_scoring",
+    "exact_hull_points",
+    "CORESET_METHODS",
+]
 
 CORESET_METHODS: tuple[str, ...] = ("uniform", "l2-only", "l2-hull", "ridge-lss", "root-l2")
 
@@ -81,6 +89,69 @@ def coreset_scores(
     return res.scores
 
 
+def exact_hull_points(res, scores: np.ndarray, k_hull: int) -> np.ndarray:
+    """Exactly ``k_hull`` distinct point ids from a ``ScoringResult``'s hull
+    candidates, in first-occurrence (direction-priority) order.
+
+    The ε-kernel candidate rows can dedup to fewer than ``k_hull`` distinct
+    points (low-diversity hulls: many directions extremized by the same
+    point); the shortfall is topped up deterministically from the next-ranked
+    points by sampling score so callers always get the size they asked for.
+    Requires ``k_hull ≤ n``.
+    """
+    r = res.rows_per_point
+    pts = (
+        stable_first_unique(np.asarray(res.hull_rows) // r, k_hull)
+        if res.hull_rows is not None
+        else np.zeros(0, np.int64)
+    )
+    short = k_hull - pts.shape[0]
+    if short > 0:
+        chosen = set(pts.tolist())
+        ranked = np.argsort(-scores, kind="stable")
+        extra = np.fromiter(
+            (i for i in ranked if i not in chosen), dtype=np.int64, count=short
+        )
+        pts = np.concatenate([pts, extra])
+    return pts
+
+
+def coreset_from_scoring(
+    res,
+    n: int,
+    k: int,
+    method: str,
+    alpha: float,
+    key_draw: jax.Array,
+    t0: float,
+) -> CoresetResult:
+    """Sampling + hull-union step of Algorithm 1 from a ``ScoringResult``.
+
+    Shared by ``build_coreset`` and the sharded
+    ``distributed_coreset.distributed_build_coreset`` — both engines emit the
+    same ``ScoringResult`` contract, so the post-scoring assembly is one code
+    path. Always returns exactly ``k`` points (hull shortfall topped up — see
+    ``exact_hull_points``).
+    """
+    k_sample = int(np.floor(alpha * k)) if method == "l2-hull" else k
+    k_hull = k - k_sample if method == "l2-hull" else 0
+    scores = res.scores
+    probs = scores / scores.sum()
+    idx = np.asarray(
+        jax.random.choice(
+            key_draw, n, shape=(k_sample,), replace=True, p=jnp.asarray(probs)
+        )
+    )
+    w = 1.0 / (k_sample * probs[idx])
+
+    if method == "l2-hull" and k_hull > 0:
+        hull_pts = exact_hull_points(res, scores, k_hull)
+        idx = np.concatenate([idx, hull_pts])
+        w = np.concatenate([w, np.ones(k_hull)])
+
+    return CoresetResult(idx, w, scores, method, time.perf_counter() - t0)
+
+
 def build_coreset(
     cfg: M.MCTMConfig,
     scaler: DataScaler,
@@ -104,9 +175,7 @@ def build_coreset(
     Y = np.asarray(Y)
     n = Y.shape[0]
     k = min(k, n)
-    k_sample, k_hull = (int(np.floor(alpha * k)), 0) if method == "l2-hull" else (k, 0)
-    if method == "l2-hull":
-        k_hull = k - k_sample
+    k_hull = k - int(np.floor(alpha * k)) if method == "l2-hull" else 0
 
     if method == "uniform":
         idx = np.asarray(jax.random.choice(key, n, shape=(k,), replace=False))
@@ -126,20 +195,7 @@ def build_coreset(
         hull_k=k_hull,
         hull_key=k_hull_key,
     )
-    scores = res.scores
-    probs = scores / scores.sum()
-    idx = np.asarray(
-        jax.random.choice(k_draw, n, shape=(k_sample,), replace=True, p=jnp.asarray(probs))
-    )
-    w = 1.0 / (k_sample * probs[idx])
-
-    if method == "l2-hull" and k_hull > 0:
-        hull_pts = res.hull_points[:k_hull]  # row (i, j) → point i, dedup'd
-        hull_w = np.ones(hull_pts.shape[0])
-        idx = np.concatenate([idx, hull_pts])
-        w = np.concatenate([w, hull_w])
-
-    return CoresetResult(idx, w, scores, method, time.perf_counter() - t0)
+    return coreset_from_scoring(res, n, k, method, alpha, k_draw, t0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,31 +1,70 @@
 """Distributed coreset construction over a device mesh (shard_map).
 
 The scalable realization of the paper's Algorithm 1 on a TPU pod — the
-sharded counterpart of ``repro.core.scoring.ScoringEngine``'s pass 1/2:
+sharded counterpart of ``repro.core.scoring.ScoringEngine``. Two layers:
 
-  1. Every data shard holds a slice of the basis matrix Ã (rows b_i).
-  2. Gram accumulation: G = Σ_shards Ã_sᵀÃ_s via ``psum`` over the data axis —
-     one (dJ)² all-reduce, independent of n. The per-shard Gram goes through
-     ``gram_matrix`` (compiled Pallas kernel on TPU, XLA oracle elsewhere).
-  3. Each shard computes its rows' leverage u_i = Ã_i G⁺ Ã_iᵀ locally from
-     the shared ``gram_projection`` factorization.
-  4. Directional hull queries: per-shard argmax ⟨p, v⟩ → global max via
-     all_gather of (score, index) candidates.
+Primitive collectives (building blocks, whole-shard bodies):
+  * ``distributed_gram`` / ``distributed_leverage`` — per-shard Gram, one
+    (dJ)² psum, local projections.
+  * ``distributed_scoring_stats`` — one-collective psum of the scoring
+    engine's full pass-1 state (Gram + hull moments).
+  * ``distributed_direction_argmax`` — per-shard argmax ⟨p, v⟩ → global max
+    via all_gather of (score, index) pairs. Ragged inputs (n not a multiple
+    of the shard count) are padded to a shard multiple with −inf scores, so
+    returned indices are exact for any n ≥ 1.
 
-``distributed_scoring_stats`` is the one-collective psum of the scoring
-engine's full pass-1 state (Gram + hull moments) — the building block for
-running pass 1 sharded *and* chunked per shard (see ROADMAP open items).
+``DistributedScoringEngine`` — the fully distributed Algorithm 1. It fuses
+the single-host engine's chunk loop INTO the shard_map body: each shard
+scans its local rows chunk-by-chunk (``lax.scan`` over ``chunks_per_shard``
+slices), reusing the exact per-chunk math of the single-host engine
+(``pass1_update`` / ``leverage_chunk`` / ``hull_chunk_extremes``), so
+
+  memory:  per-chip peak is O(chunk·J·d) — no (n, J, d) basis tensor and no
+           full-shard score block ever materializes; carried state is the
+           O((Jd)²) pass-1 statistics plus the (m,) running hull extremes.
+  collectives: exactly ONE fused psum per pass-1 sweep (the (G, Σp, Σppᵀ)
+           tuple lowers to a single all-reduce) and one all_gather pair
+           (values + indices, each (shards, 2, m) with m = #directions) for
+           pass-2's cross-shard running-extreme hull reduction. Nothing else
+           crosses the ICI; leverage scores stay row-sharded until the final
+           multi-process-safe ``host_gather``.
+
+Between the passes the engine runs the same tiny host algebra as the
+single-host path (f64 eigh of the psum'd Gram, moment-derived direction
+net), which is what makes the two engines agree to f32 accumulation noise
+(~1e-7) on identical inputs regardless of mesh shape or chunk size.
+
+``distributed_build_coreset`` drives the engine end-to-end and returns the
+same ``CoresetResult`` contract as ``coreset.build_coreset``.
 
 The same Gram-psum pattern powers the LM-pipeline coreset stage
-(`repro.data.pipeline.CoresetSelector`) with model-embedding features.
+(`repro.data.pipeline.CoresetSelector`) with model-embedding features — pass
+``mesh=`` to its constructor to route selection through this engine.
 """
 from __future__ import annotations
 
+import time
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.scoring import gram_projection
+from repro.core.hull import stable_first_unique
+from repro.core.scoring import (
+    DEFAULT_CHUNK,
+    SCORE_METHODS,
+    ScoringResult,
+    _mctm_featurize,
+    directions_from_moments,
+    finalize_scoring,
+    gram_projection,
+    hull_chunk_extremes,
+    leverage_chunk,
+    pass1_update,
+    projection_from_gram,
+)
 from repro.kernels.gram.ops import gram_matrix
 from repro.utils.compat import shard_map
 
@@ -35,7 +74,41 @@ __all__ = [
     "distributed_direction_argmax",
     "distributed_coreset_scores",
     "distributed_scoring_stats",
+    "DistributedScoringEngine",
+    "distributed_build_coreset",
+    "make_sharded_pass_fns",
+    "host_gather",
 ]
+
+
+def _axis_tuple(axis) -> tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _num_shards(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _spec_el(axes: tuple[str, ...]):
+    """PartitionSpec element for the row dimension (one axis or a tuple)."""
+    return axes if len(axes) > 1 else axes[0]
+
+
+def host_gather(x) -> np.ndarray:
+    """Multi-process-safe device→host gather.
+
+    Single-process (tests, fake-device meshes): plain ``np.asarray``. Under
+    multi-process jax, row-sharded outputs go through
+    ``multihost_utils.process_allgather`` and replicated outputs are read
+    from a local shard — no path ever touches non-addressable device memory.
+    """
+    if getattr(x, "is_fully_addressable", True):
+        return np.asarray(x)
+    if getattr(x, "is_fully_replicated", False):
+        return np.asarray(x.addressable_shards[0].data)
+    from jax.experimental import multihost_utils
+
+    return np.asarray(multihost_utils.process_allgather(x, tiled=True))
 
 
 def distributed_gram(X: jax.Array, mesh: Mesh, axis: str = "data") -> jax.Array:
@@ -97,30 +170,46 @@ def distributed_direction_argmax(
     followed by a cross-shard max over (score, global_index) pairs — the same
     running-extreme reduction the chunked engine's pass 2 performs over
     chunks, here over shards.
-    """
-    n = P_pts.shape[0]
-    shards = mesh.shape[axis]
-    per = n // shards
 
-    def shard_fn(ps, vs):
+    Handles ragged inputs: when ``n % shards != 0`` the rows are padded to a
+    shard multiple and the pad rows' scores are masked to −inf, so they can
+    never win the argmax and every returned index is a real row. Ties break
+    toward the lowest global row index (matching dense ``jnp.argmax``).
+    """
+    n = int(P_pts.shape[0])
+    if n == 0:
+        raise ValueError(
+            "distributed_direction_argmax: empty input (every shard would be "
+            "empty and the per-direction argmax is undefined)"
+        )
+    shards = mesh.shape[axis]
+    per = -(-n // shards)  # ceil → padded rows per shard
+    n_pad = per * shards
+    if n_pad > n:
+        pad = jnp.zeros((n_pad - n, P_pts.shape[1]), P_pts.dtype)
+        P_pts = jnp.concatenate([P_pts, pad], axis=0)
+    mask = jnp.arange(n_pad) < n
+
+    def shard_fn(ps, ms, vs):
         scores = ps @ vs.T  # (per, m)
+        scores = jnp.where(ms[:, 0][:, None], scores, -jnp.inf)
         local_best = jnp.argmax(scores, axis=0)  # (m,)
-        local_score = jnp.max(scores, axis=0)
+        local_score = jnp.take_along_axis(scores, local_best[None, :], axis=0)[0]
         shard_id = jax.lax.axis_index(axis)
         global_idx = shard_id * per + local_best
         all_scores = jax.lax.all_gather(local_score, axis)  # (shards, m)
         all_idx = jax.lax.all_gather(global_idx, axis)
-        win = jnp.argmax(all_scores, axis=0)  # (m,)
+        win = jnp.argmax(all_scores, axis=0)  # (m,) first shard wins ties
         return jnp.take_along_axis(all_idx, win[None, :], axis=0)[0]
 
     fn = shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(P(axis, None), P(None, None)),
+        in_specs=(P(axis, None), P(axis, None), P(None, None)),
         out_specs=P(None),
         check_vma=False,  # all_gather+argmax makes the output replicated
     )
-    return fn(P_pts, dirs)
+    return fn(P_pts, mask[:, None], dirs)
 
 
 def distributed_coreset_scores(
@@ -130,3 +219,370 @@ def distributed_coreset_scores(
     n = X.shape[0]
     u = distributed_leverage(X, mesh, axis)
     return u + 1.0 / n
+
+
+# ---------------------------------------------------------------------------
+# DistributedScoringEngine — chunked pass-1/pass-2 inside the shard_map body
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_pass_fns(
+    featurize: Callable,
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    *,
+    chunk: int,
+    chunks_per_shard: int,
+    rows_per_point: int,
+    hull: bool,
+    D: int,
+    p: int,
+):
+    """Build the (pass1, pass2) shard_map callables of the sharded engine.
+
+    Shapes per shard: inputs are (per, …) slices with per = chunks_per_shard
+    · chunk; the body reshapes them into (chunks_per_shard, chunk, …) and
+    ``lax.scan``s the single-host per-chunk updates over them. Exposed
+    separately from the engine so the pod dry-run can lower the exact same
+    computation from ShapeDtypeStructs (``launch.dryrun_coreset`` variant
+    ``engine``).
+
+    pass1(Y, sw_masked, mask) -> (G, Σp, Σppᵀ) replicated — one fused psum.
+    pass2(Y, sw_masked, mask, V, inv[, dirs]) -> row-sharded leverage, plus
+    (when ``hull``) the per-direction global argmax/argmin row indices from
+    the cross-shard running-extreme reduction (one all_gather pair).
+    """
+    r = rows_per_point
+    cps = chunks_per_shard
+    per = cps * chunk
+    sizes = [mesh.shape[a] for a in axes]
+    axis_name = axes if len(axes) > 1 else axes[0]
+    row_spec = _spec_el(axes)
+
+    def _shard_index():
+        idx = jax.lax.axis_index(axes[0])
+        for a, s in zip(axes[1:], sizes[1:]):
+            idx = idx * s + jax.lax.axis_index(a)
+        return idx
+
+    def _chunked(a):
+        return a.reshape((cps, chunk) + a.shape[1:])
+
+    def pass1_body(ys, swm, mask):
+        def step(carry, xs):
+            yc, swc, mc = xs
+            X, Pr = featurize(yc)
+            if hull:
+                # zero pad rows out of the moments: Σp / Σppᵀ must cover
+                # exactly the n·r real derivative rows
+                Pr = Pr * jnp.repeat(mc, r)[:, None]
+            else:
+                Pr = None
+            return pass1_update(carry[0], carry[1], carry[2], X, Pr, swc), None
+
+        init = (
+            jnp.zeros((D, D), jnp.float32),
+            jnp.zeros((p,), jnp.float32),
+            jnp.zeros((p, p), jnp.float32),
+        )
+        carry, _ = jax.lax.scan(
+            step, init, (_chunked(ys), _chunked(swm), _chunked(mask))
+        )
+        # ONE collective: the tuple psum lowers to a single fused all-reduce
+        return jax.lax.psum(carry, axis_name)
+
+    pass1 = shard_map(
+        pass1_body,
+        mesh=mesh,
+        in_specs=(P(row_spec, None), P(row_spec), P(row_spec)),
+        out_specs=(P(None, None), P(None), P(None, None)),
+        check_vma=False,
+    )
+
+    def pass2_hull_body(ys, swm, mask, V, inv, dirs):
+        m = dirs.shape[0]
+        base = _shard_index() * per
+
+        def step(carry, xs):
+            bmax, imax, bmin, imin = carry
+            ci, yc, swc, mc = xs
+            X, Pr = featurize(yc)
+            u = leverage_chunk(X, swc, V, inv)
+            pm = jnp.repeat(mc, r) > 0
+            vmax, lmax, vmin, lmin = hull_chunk_extremes(Pr, dirs, pm)
+            off = (base + ci * chunk) * r
+            gmax, gmin = off + lmax, off + lmin
+            # strict comparison keeps first-occurrence (lowest-row) tie-break,
+            # matching the single-host chunked pass 2
+            upd = vmax > bmax
+            bmax, imax = jnp.where(upd, vmax, bmax), jnp.where(upd, gmax, imax)
+            upd = vmin < bmin
+            bmin, imin = jnp.where(upd, vmin, bmin), jnp.where(upd, gmin, imin)
+            return (bmax, imax, bmin, imin), u
+
+        init = (
+            jnp.full((m,), -jnp.inf, jnp.float32),
+            jnp.zeros((m,), jnp.int32),
+            jnp.full((m,), jnp.inf, jnp.float32),
+            jnp.zeros((m,), jnp.int32),
+        )
+        (bmax, imax, bmin, imin), u = jax.lax.scan(
+            step,
+            init,
+            (jnp.arange(cps), _chunked(ys), _chunked(swm), _chunked(mask)),
+        )
+        # cross-shard running-extreme reduction: one all_gather pair (values
+        # + indices), then a replicated argmax — the distributed analogue of
+        # the host-side chunk loop in ScoringEngine._score_chunked
+        allv = jax.lax.all_gather(jnp.stack([bmax, -bmin]), axis_name)
+        alli = jax.lax.all_gather(jnp.stack([imax, imin]), axis_name)
+        win = jnp.argmax(allv, axis=0)  # (2, m) lowest shard wins ties
+        hull_idx = jnp.take_along_axis(alli, win[None], axis=0)[0]
+        return u.reshape(per), hull_idx[0], hull_idx[1]
+
+    def pass2_body(ys, swm, V, inv):
+        def step(_, xs):
+            yc, swc = xs
+            X, _ = featurize(yc)
+            return None, leverage_chunk(X, swc, V, inv)
+
+        _, u = jax.lax.scan(step, None, (_chunked(ys), _chunked(swm)))
+        return u.reshape(per)
+
+    if hull:
+        pass2 = shard_map(
+            pass2_hull_body,
+            mesh=mesh,
+            in_specs=(
+                P(row_spec, None),
+                P(row_spec),
+                P(row_spec),
+                P(None, None),
+                P(None),
+                P(None, None),
+            ),
+            out_specs=(P(row_spec), P(None), P(None)),
+            check_vma=False,
+        )
+    else:
+        pass2 = shard_map(
+            pass2_body,
+            mesh=mesh,
+            in_specs=(P(row_spec, None), P(row_spec), P(None, None), P(None)),
+            out_specs=P(row_spec),
+            check_vma=False,
+        )
+    return pass1, pass2
+
+
+class DistributedScoringEngine:
+    """Sharded + chunked pre-sampling phase of Algorithm 1 (see module doc).
+
+    Same contract as ``scoring.ScoringEngine.score`` — returns an identical
+    ``ScoringResult`` — but every data-sized computation runs inside the mesh:
+    per-chip memory is O(chunk·J·d) and the only cross-chip traffic is one
+    fused pass-1 psum and one pass-2 all_gather pair.
+
+    Parameters mirror ``ScoringEngine``; ``featurize`` must be jax-traceable
+    (it runs inside the shard_map scan body). ``axis`` may be one mesh axis
+    name or a tuple of names (e.g. ``("pod", "data")`` on a multi-pod mesh).
+    CountSketch pass-1 (``sketch_size``) is not yet sharded — see the ROADMAP
+    sketched-pass-1 item.
+    """
+
+    def __init__(
+        self,
+        cfg=None,
+        scaler=None,
+        *,
+        mesh: Mesh,
+        axis="data",
+        featurize: Callable | None = None,
+        chunk_size: int | None = DEFAULT_CHUNK,
+        rows_per_point: int | None = None,
+        hull_oversample: int = 4,
+    ):
+        if featurize is None:
+            if cfg is None or scaler is None:
+                raise ValueError("either (cfg, scaler) or featurize is required")
+            featurize = _mctm_featurize(cfg, scaler)
+            rows_per_point = cfg.J
+        self.cfg = cfg
+        self.scaler = scaler
+        self.featurize = featurize
+        self.mesh = mesh
+        self.axes = _axis_tuple(axis)
+        self.chunk_size = int(chunk_size) if chunk_size else 0
+        self.rows_per_point = int(rows_per_point or 1)
+        self.hull_oversample = hull_oversample
+        self._fns: dict = {}  # (chunk, cps, hull, D, p) → jitted pass fns
+
+    # --------------------------------------------------------------- helpers
+
+    def _shard_layout(self, n: int) -> tuple[int, int, int]:
+        """(chunk, chunks_per_shard, n_pad) for n rows over this mesh."""
+        shards = _num_shards(self.mesh, self.axes)
+        per_needed = -(-n // shards)
+        chunk = self.chunk_size if self.chunk_size > 0 else per_needed
+        chunk = max(min(chunk, per_needed), 1)
+        cps = -(-per_needed // chunk)
+        return chunk, cps, cps * chunk * shards
+
+    def _pass_fns(self, chunk: int, cps: int, hull: bool, width, dtype):
+        sds = jax.ShapeDtypeStruct((chunk,) + width, dtype)
+        X_s, P_s = jax.eval_shape(self.featurize, sds)
+        if hull and P_s is None:
+            raise ValueError("hull_k > 0 requires a featurize that returns P rows")
+        D = int(X_s.shape[1])
+        # without a hull stage s1/s2 stay zero — carry (and psum) scalars,
+        # not a (p, p) dead weight the size of the Gram
+        p = int(P_s.shape[1]) if (hull and P_s is not None) else 1
+        key = (chunk, cps, hull, D, p)
+        if key not in self._fns:
+            p1, p2 = make_sharded_pass_fns(
+                self.featurize,
+                self.mesh,
+                self.axes,
+                chunk=chunk,
+                chunks_per_shard=cps,
+                rows_per_point=self.rows_per_point,
+                hull=hull,
+                D=D,
+                p=p,
+            )
+            self._fns[key] = (jax.jit(p1), jax.jit(p2))
+        return self._fns[key]
+
+    def _shard_put(self, x, row_sharded: bool = True):
+        spec = (
+            P(_spec_el(self.axes), *([None] * (x.ndim - 1)))
+            if row_sharded
+            else P(*([None] * x.ndim))
+        )
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+    # ---------------------------------------------------------------- public
+
+    def score(
+        self,
+        Y,
+        *,
+        method: str = "l2-hull",
+        weights=None,
+        hull_k: int = 0,
+        hull_key: jax.Array | None = None,
+        ridge_reg: float = 1.0,
+    ) -> ScoringResult:
+        """Score all n points on the mesh; same semantics as the single-host
+        ``ScoringEngine.score`` (minus ``sketch_size``)."""
+        if method not in SCORE_METHODS:
+            raise ValueError(f"unknown scoring method: {method}")
+        if hull_k > 0 and hull_key is None:
+            raise ValueError("hull_k > 0 requires hull_key")
+        Y = jnp.asarray(Y)
+        n = int(Y.shape[0])
+        if n == 0:
+            raise ValueError("cannot score an empty dataset")
+        r = self.rows_per_point
+        hull = hull_k > 0
+
+        chunk, cps, n_pad = self._shard_layout(n)
+        pad = n_pad - n
+        # pad with copies of row 0 (valid data — no NaN risk through the
+        # featurizer); masks keep pads out of every statistic
+        if pad:
+            Y_pad = jnp.concatenate(
+                [Y, jnp.broadcast_to(Y[:1], (pad,) + Y.shape[1:])], axis=0
+            )
+        else:
+            Y_pad = Y
+        mask = (jnp.arange(n_pad) < n).astype(jnp.float32)
+        sw = (
+            jnp.sqrt(jnp.asarray(weights, jnp.float32))
+            if weights is not None
+            else jnp.ones((n,), jnp.float32)
+        )
+        swm = jnp.concatenate([sw, jnp.zeros((pad,), jnp.float32)]) if pad else sw
+
+        Y_pad = self._shard_put(Y_pad)
+        mask = self._shard_put(mask)
+        swm = self._shard_put(swm)
+
+        pass1, pass2 = self._pass_fns(chunk, cps, hull, Y.shape[1:], Y_pad.dtype)
+
+        # ---- pass 1 (sharded, chunked): one fused psum of (G, Σp, Σppᵀ)
+        G, s1, s2 = pass1(Y_pad, swm, mask)
+        G_host = host_gather(G)
+
+        # ---- between passes: (Jd)² host algebra, identical to single-host
+        V, inv = projection_from_gram(G_host, method, ridge_reg)
+
+        hull_rows = None
+        if hull:
+            dirs = directions_from_moments(
+                hull_key,
+                host_gather(s1),
+                host_gather(s2),
+                n * r,
+                hull_k,
+                self.hull_oversample,
+            )
+            u_pad, gimax, gimin = pass2(Y_pad, swm, mask, V, inv, jnp.asarray(dirs))
+            cand = np.concatenate(
+                [host_gather(gimax), host_gather(gimin)]
+            ).astype(np.int64)
+            # every distinct candidate row, first-occurrence order — matching
+            # the single-host engine (truncation to k points happens at the
+            # coreset assembly via exact_hull_points)
+            hull_rows = stable_first_unique(cand)
+        else:
+            u_pad = pass2(Y_pad, swm, V, inv)
+
+        u = host_gather(u_pad)[:n]
+        shards = _num_shards(self.mesh, self.axes)
+        return finalize_scoring(n, cps * shards, method, G_host, u, hull_rows, r)
+
+
+def distributed_build_coreset(
+    cfg,
+    scaler,
+    Y,
+    k: int,
+    method: str = "l2-hull",
+    *,
+    mesh: Mesh,
+    key: jax.Array,
+    axis="data",
+    alpha: float = 0.8,
+    chunk_size: int | None = DEFAULT_CHUNK,
+):
+    """Paper Algorithm 1 with the pre-sampling phase fully distributed.
+
+    Same contract (and same key-split structure) as ``coreset.build_coreset``
+    — returns a ``CoresetResult`` — but scoring runs on ``mesh`` through the
+    ``DistributedScoringEngine``.
+    """
+    from repro.core.coreset import CoresetResult, coreset_from_scoring
+
+    t0 = time.perf_counter()
+    Y = np.asarray(Y)
+    n = Y.shape[0]
+    k = min(k, n)
+
+    if method == "uniform":
+        idx = np.asarray(jax.random.choice(key, n, shape=(k,), replace=False))
+        w = np.full(k, n / k)
+        return CoresetResult(idx, w, None, method, time.perf_counter() - t0)
+
+    # same 3-way split as build_coreset (k_score reserved for the sketched
+    # pass-1 follow-on) so the two paths draw identical samples when their
+    # scores agree
+    _k_score, k_hull_key, k_draw = jax.random.split(key, 3)
+    k_hull = k - int(np.floor(alpha * k)) if method == "l2-hull" else 0
+    engine = DistributedScoringEngine(
+        cfg, scaler, mesh=mesh, axis=axis, chunk_size=chunk_size
+    )
+    res = engine.score(
+        jnp.asarray(Y), method=method, hull_k=k_hull, hull_key=k_hull_key
+    )
+    return coreset_from_scoring(res, n, k, method, alpha, k_draw, t0)

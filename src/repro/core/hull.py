@@ -93,8 +93,9 @@ def _spread_directions(key: jax.Array, P: np.ndarray, m: int) -> np.ndarray:
     return hull_directions(key, cov, m)
 
 
-def stable_first_unique(cand: np.ndarray, k: int) -> np.ndarray:
-    """First k distinct values of ``cand`` in order of first occurrence.
+def stable_first_unique(cand: np.ndarray, k: int | None = None) -> np.ndarray:
+    """First k distinct values of ``cand`` in order of first occurrence
+    (all of them when ``k`` is None).
 
     Vectorized replacement for the quadratic ``if i not in seen`` scan: one
     ``np.unique`` for the distinct values, re-sorted by first-occurrence
@@ -102,7 +103,8 @@ def stable_first_unique(cand: np.ndarray, k: int) -> np.ndarray:
     """
     uniq, first = np.unique(cand, return_index=True)
     order = np.argsort(first, kind="stable")
-    return uniq[order][:k].astype(np.int64)
+    out = uniq[order]
+    return (out if k is None else out[:k]).astype(np.int64)
 
 
 def epsilon_kernel_indices(

@@ -37,9 +37,14 @@ Weighted inputs (Merge & Reduce streaming buckets) scale X̃ rows by √w —
 leverage of the weighted matrix — while the hull operates on the raw
 derivative rows, matching the batch construction.
 
-Follow-ons this engine is shaped for (see ROADMAP): per-shard pass-1 psum
-(the chunk loop becomes a shard_map body; G, Σp, Σppᵀ are psum-able), and a
-sketched pass 1 that avoids the second data sweep entirely.
+The per-chunk math (``pass1_update``, ``leverage_chunk``,
+``hull_chunk_extremes``) and the between-pass host algebra
+(``projection_from_gram``, ``directions_from_moments``, ``finalize_scoring``)
+are module-level functions so the sharded realization
+(``repro.core.distributed_coreset.DistributedScoringEngine`` — the chunk loop
+inside a shard_map body, pass-1 state psum'd once) reuses them verbatim; the
+remaining follow-on (see ROADMAP) is a sketched pass 1 that avoids the second
+data sweep entirely.
 """
 from __future__ import annotations
 
@@ -58,6 +63,12 @@ __all__ = [
     "ScoringResult",
     "score_chunks",
     "gram_projection",
+    "pass1_update",
+    "leverage_chunk",
+    "hull_chunk_extremes",
+    "projection_from_gram",
+    "directions_from_moments",
+    "finalize_scoring",
     "DEFAULT_CHUNK",
 ]
 
@@ -105,6 +116,7 @@ class ScoringResult:
     hull_points: np.ndarray | None  # unique point ids hit by hull_rows (sorted)
     n: int
     n_chunks: int
+    rows_per_point: int = 1        # r: P rows per input point (row → point ÷ r)
 
     @property
     def hull_candidates(self) -> np.ndarray | None:
@@ -149,19 +161,60 @@ def _mctm_featurize(cfg, scaler) -> Callable[[jax.Array], tuple[jax.Array, jax.A
 
 
 # --------------------------------------------------------------------------
-# jitted per-chunk steps (module-level so all engines share trace caches)
+# per-chunk steps. The pure bodies (pass1_update, leverage_chunk,
+# hull_chunk_extremes) are shared with the sharded engine, where they run
+# inside shard_map scan bodies; the jitted _acc_* wrappers exist so all
+# single-host engines share trace caches.
 # --------------------------------------------------------------------------
 
 
-@jax.jit
-def _acc_stats(G, s1, s2, X, P, sw):
-    """Pass-1 accumulation: Gram of √w-scaled rows + P first/second moments."""
+def pass1_update(G, s1, s2, X, P, sw):
+    """Pass-1 accumulation: Gram of √w-scaled rows + P first/second moments.
+
+    Pure (traceable anywhere — jit, scan bodies, shard_map). ``P is None``
+    skips the hull moments.
+    """
     Xw = X * sw[:, None]
     G = G + gram_matrix(Xw)
     if P is not None:
         s1 = s1 + jnp.sum(P, axis=0)
         s2 = s2 + P.T @ P
     return G, s1, s2
+
+
+def leverage_chunk(X, sw, V, inv):
+    """u_i = Σ_m ((√w·X)_i V)²_m · inv_m for one chunk of rows. Pure."""
+    Xw = X * sw[:, None]
+    return jnp.sum(jnp.square(Xw @ V) * inv, axis=1)
+
+
+def hull_chunk_extremes(P, dirs, mask=None):
+    """Per-chunk directional extremes: (max, argmax, min, argmin) per direction.
+
+    Laid out (m, c·r) so the reductions run along the contiguous last axis —
+    axis-0 argmax over a (c·r, m) matrix is an order of magnitude slower on
+    CPU (strided) and tiles badly on TPU (sublane reduction). ``mask`` (c·r,)
+    excludes padding rows (sharded inputs padded to a shard multiple) by
+    sending their scores to ∓inf. Pure.
+    """
+    S = dirs @ P.T  # (m, c·r) — chunk-local only, never (n·r, m)
+    if mask is None:
+        Smax = Smin = S
+    else:
+        Smax = jnp.where(mask[None, :], S, -jnp.inf)
+        Smin = jnp.where(mask[None, :], S, jnp.inf)
+    imax = jnp.argmax(Smax, axis=1)
+    imin = jnp.argmin(Smin, axis=1)
+    # gather the extreme values instead of separate max/min passes — argmax
+    # and argmin are the only full sweeps over S
+    vmax = jnp.take_along_axis(Smax, imax[:, None], axis=1)[:, 0]
+    vmin = jnp.take_along_axis(Smin, imin[:, None], axis=1)[:, 0]
+    return vmax, imax, vmin, imin
+
+
+_acc_stats = jax.jit(pass1_update)
+_leverage_chunk = jax.jit(leverage_chunk)
+_hull_chunk = jax.jit(hull_chunk_extremes)
 
 
 @jax.jit
@@ -175,28 +228,64 @@ def _acc_sketch(SX, s1, s2, X, P, sw, rows, signs):
     return SX, s1, s2
 
 
-@jax.jit
-def _leverage_chunk(X, sw, V, inv):
-    Xw = X * sw[:, None]
-    return jnp.sum(jnp.square(Xw @ V) * inv, axis=1)
+# --------------------------------------------------------------------------
+# between-pass host algebra — shared by the single-host and sharded engines
+# --------------------------------------------------------------------------
 
 
-@jax.jit
-def _hull_chunk(P, dirs):
-    """Per-chunk directional extremes: (max, argmax, min, argmin) per direction.
+def projection_from_gram(G, method: str, ridge_reg: float, rcond: float = 1e-6):
+    """(V, inv) via float64 host eigh — same thresholds as ``gram_projection``
+    but solver noise far below the f32 Gram's own accumulation error, so
+    leverage is stable across chunk sizes (and across shard layouts).
 
-    Laid out (m, c·r) so the reductions run along the contiguous last axis —
-    axis-0 argmax over a (c·r, m) matrix is an order of magnitude slower on
-    CPU (strided) and tiles badly on TPU (sublane reduction).
+    G is (Jd)², so the f64 eigh costs microseconds regardless of n.
     """
-    S = dirs @ P.T  # (m, c·r) — chunk-local only, never (n·r, m)
-    imax = jnp.argmax(S, axis=1)
-    imin = jnp.argmin(S, axis=1)
-    # gather the extreme values instead of separate max/min passes — argmax
-    # and argmin are the only full sweeps over S
-    vmax = jnp.take_along_axis(S, imax[:, None], axis=1)[:, 0]
-    vmin = jnp.take_along_axis(S, imin[:, None], axis=1)[:, 0]
-    return vmax, imax, vmin, imin
+    G = np.asarray(G, np.float64)
+    w, V = np.linalg.eigh(G)
+    reg = ridge_reg if method == "ridge-lss" else 0.0
+    inv = _spectrum_inverse(w, ridge_reg=reg, rcond=rcond, xp=np)
+    return jnp.asarray(V, jnp.float32), jnp.asarray(inv, jnp.float32)
+
+
+def directions_from_moments(
+    hull_key, s1, s2, n_rows: int, hull_k: int, oversample: int = 4
+) -> np.ndarray:
+    """Direction net from accumulated P moments (cov = E[ppᵀ] − μμᵀ).
+
+    ``n_rows`` is the number of REAL P rows the moments were accumulated over
+    (padding rows must be masked to zero before accumulation).
+    """
+    s1 = np.asarray(s1, np.float64)
+    s2 = np.asarray(s2, np.float64)
+    mu = s1 / max(n_rows, 1)
+    cov = s2 / max(n_rows, 1) - np.outer(mu, mu)
+    m = max(oversample * hull_k, 8)
+    return hull_directions(hull_key, cov, m).astype(np.float32)
+
+
+def finalize_scoring(
+    n: int, n_chunks: int, method: str, G, u, hull_rows, rows_per_point: int
+) -> ScoringResult:
+    """Assemble a ``ScoringResult`` from raw leverage + hull candidates."""
+    u = np.asarray(u)
+    if method == "root-l2":
+        lev = np.sqrt(np.clip(u, 0.0, None))
+    else:
+        lev = u
+    scores = lev + 1.0 / n
+    hull_points = None
+    if hull_rows is not None:
+        hull_points = np.unique(hull_rows // rows_per_point)
+    return ScoringResult(
+        scores=scores,
+        leverage=lev,
+        gram=np.asarray(G),
+        hull_rows=hull_rows,
+        hull_points=hull_points,
+        n=n,
+        n_chunks=n_chunks,
+        rows_per_point=rows_per_point,
+    )
 
 
 class ScoringEngine:
@@ -256,8 +345,10 @@ class ScoringEngine:
 
         ``method`` follows ``coreset.CORESET_METHODS`` minus "uniform" (which
         needs no scoring pass). ``weights`` (n,) triggers the √w-scaled
-        leverage of Merge & Reduce reductions. ``hull_k > 0`` additionally
-        returns ≤ hull_k ε-kernel candidate rows (requires ``hull_key``).
+        leverage of Merge & Reduce reductions. ``hull_k > 0`` sizes the
+        direction net and returns ALL distinct ε-kernel candidate rows in
+        first-occurrence order (requires ``hull_key``); truncation to k
+        points happens at coreset assembly (``coreset.exact_hull_points``).
         """
         if method not in SCORE_METHODS:
             raise ValueError(f"unknown scoring method: {method}")
@@ -295,46 +386,19 @@ class ScoringEngine:
         return rows, signs
 
     def _finalize(self, n, n_chunks, method, G, u, hull_rows) -> ScoringResult:
-        u = np.asarray(u)
-        if method == "root-l2":
-            lev = np.sqrt(np.clip(u, 0.0, None))
-        else:
-            lev = u
-        scores = lev + 1.0 / n
-        hull_points = None
-        if hull_rows is not None:
-            hull_points = np.unique(hull_rows // self.rows_per_point)
-        return ScoringResult(
-            scores=scores,
-            leverage=lev,
-            gram=np.asarray(G),
-            hull_rows=hull_rows,
-            hull_points=hull_points,
-            n=n,
-            n_chunks=n_chunks,
+        return finalize_scoring(
+            n, n_chunks, method, G, u, hull_rows, self.rows_per_point
         )
 
     def _projection(self, G, method, ridge_reg, rcond=1e-6):
-        """(V, inv) via float64 host eigh — same thresholds as
-        ``gram_projection`` but solver noise far below the f32 Gram's own
-        accumulation error, so leverage is stable across chunk sizes.
-
-        G is (Jd)², so the f64 eigh costs microseconds regardless of n.
-        """
-        G = np.asarray(G, np.float64)
-        w, V = np.linalg.eigh(G)
-        reg = ridge_reg if method == "ridge-lss" else 0.0
-        inv = _spectrum_inverse(w, ridge_reg=reg, rcond=rcond, xp=np)
-        return jnp.asarray(V, jnp.float32), jnp.asarray(inv, jnp.float32)
+        """See ``projection_from_gram``."""
+        return projection_from_gram(G, method, ridge_reg, rcond)
 
     def _directions(self, hull_key, s1, s2, n_rows: int, hull_k: int) -> np.ndarray:
         """Direction net from the accumulated P moments (cov = E[ppᵀ] − μμᵀ)."""
-        s1 = np.asarray(s1, np.float64)
-        s2 = np.asarray(s2, np.float64)
-        mu = s1 / max(n_rows, 1)
-        cov = s2 / max(n_rows, 1) - np.outer(mu, mu)
-        m = max(self.hull_oversample * hull_k, 8)
-        return hull_directions(hull_key, cov, m).astype(np.float32)
+        return directions_from_moments(
+            hull_key, s1, s2, n_rows, hull_k, self.hull_oversample
+        )
 
     # ----------------------------------------------------------- dense path
 
@@ -364,7 +428,10 @@ class ScoringEngine:
             )
             bmax, imax, bmin, imin = _hull_chunk(P, dirs)
             cand = np.concatenate([np.asarray(imax), np.asarray(imin)])
-            hull_rows = stable_first_unique(cand, hull_k)
+            # keep EVERY distinct candidate row (first-occurrence order, ≤ 2m
+            # of them): truncating to hull_k rows here would discard genuine
+            # extremal points after the row → point dedup when r > 1
+            hull_rows = stable_first_unique(cand)
         return self._finalize(n, 1, method, G, u, hull_rows)
 
     # --------------------------------------------------------- chunked path
@@ -443,7 +510,7 @@ class ScoringEngine:
         hull_rows = None
         if dirs is not None:
             cand = np.concatenate([best_imax, best_imin])
-            hull_rows = stable_first_unique(cand, hull_k)
+            hull_rows = stable_first_unique(cand)  # all candidates — see dense path
         return self._finalize(n, n_chunks, method, G, u, hull_rows)
 
     @staticmethod

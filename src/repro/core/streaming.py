@@ -64,21 +64,26 @@ class MergeReduceCoreset:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _reduce(self, ws: WeightedSet) -> WeightedSet:
-        """Weighted hybrid (ℓ2-hull) reduction of a weighted set to ≤ k points."""
+    def _reduce(self, ws: WeightedSet, key: jax.Array) -> WeightedSet:
+        """Weighted hybrid (ℓ2-hull) reduction of a weighted set to ≤ k points.
+
+        ``key`` is consumed only here — ``push`` advances the stream state
+        via ``_next_key`` while ``result`` derives a read-only key, so
+        peeking at the stream never perturbs subsequent reductions.
+        """
         if ws.size <= self.k:
             return ws
         k1 = int(np.floor(self.alpha * self.k))
         k2 = self.k - k1
+        draw_key, hull_key = jax.random.split(key)
         # one engine sweep: √w-weighted leverage + hull extremes, chunked —
         # merged buckets larger than chunk_size never materialize (m, J, d)
-        draw_key = self._next_key()
         res = self._engine.score(
             jnp.asarray(ws.Y),
             method="l2-hull",
             weights=ws.weights,
             hull_k=k2,
-            hull_key=self._next_key(),
+            hull_key=hull_key,
         )
         scores = res.scores
         probs = scores / scores.sum()
@@ -88,9 +93,14 @@ class MergeReduceCoreset:
             )
         )
         w = ws.weights[idx] / (k1 * probs[idx])
-        hull_pts = (
-            res.hull_points[:k2] if k2 > 0 else np.zeros(0, np.int64)
-        )  # α=1.0 → pure sampling, no hull stage
+        if k2 > 0:
+            # exactly k2 distinct points, direction-priority order, topped up
+            # by score rank on dedup shortfall (low-diversity buckets)
+            from repro.core.coreset import exact_hull_points
+
+            hull_pts = exact_hull_points(res, scores, k2)
+        else:
+            hull_pts = np.zeros(0, np.int64)  # α=1.0 → pure sampling
         hull_w = ws.weights[hull_pts]
         # conserve total mass across reduce levels: rescale the sampled part
         # so Σw_out = Σw_in (hull weights kept exact, bias doesn't compound)
@@ -106,7 +116,9 @@ class MergeReduceCoreset:
         """Insert a data chunk; merge carries up the bucket tree."""
         chunk = np.asarray(chunk)
         self.n_seen += chunk.shape[0]
-        carry = self._reduce(WeightedSet(chunk, np.ones(chunk.shape[0])))
+        carry = self._reduce(
+            WeightedSet(chunk, np.ones(chunk.shape[0])), self._next_key()
+        )
         level = 0
         while True:
             if level >= len(self._buckets):
@@ -117,15 +129,21 @@ class MergeReduceCoreset:
                 return
             merged = WeightedSet.concat(self._buckets[level], carry)
             self._buckets[level] = None
-            carry = self._reduce(merged)
+            carry = self._reduce(merged, self._next_key())
             level += 1
 
     def result(self) -> WeightedSet:
-        """Union of live buckets, reduced once more to ≤ k points."""
+        """Union of live buckets, reduced once more to ≤ k points.
+
+        Idempotent and side-effect-free: the reduction key is derived with
+        ``fold_in(key, n_seen)`` instead of advancing ``self._key``, so
+        calling ``result()`` any number of times returns the same coreset
+        and leaves the RNG stream of subsequent ``push`` calls untouched.
+        """
         live = [b for b in self._buckets if b is not None]
         if not live:
             return WeightedSet(np.zeros((0, self.cfg.J)), np.zeros((0,)))
         acc = live[0]
         for b in live[1:]:
             acc = WeightedSet.concat(acc, b)
-        return self._reduce(acc)
+        return self._reduce(acc, jax.random.fold_in(self._key, self.n_seen))

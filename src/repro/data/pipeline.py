@@ -82,6 +82,16 @@ class CoresetSelector:
     whole-batch statistics inside featurize would become chunk-local. Pass
     ``chunk_size=None`` to keep single-call semantics for batch-dependent
     featurizers.
+
+    ``mesh``: route scoring through the sharded chunked
+    ``DistributedScoringEngine`` — featurize still runs host-side (it may be
+    arbitrary Python), but the leverage/hull passes over the (n, D) feature
+    rows execute row-sharded on the mesh with one pass-1 psum. ``axis``
+    selects the data axis (name or tuple of names). Note the mesh path
+    stages the (n, D) feature matrix once on the host before sharding — the
+    O(chunk) saving applies to the scoring passes, not the featurize staging
+    (zero-copy per-shard staging is a ROADMAP item); D here is the pooled
+    feature width, comparable to the raw example width.
     """
 
     def __init__(
@@ -91,22 +101,51 @@ class CoresetSelector:
         alpha: float = 0.8,
         method: str = "l2-hull",
         chunk_size: int | None = DEFAULT_CHUNK,
+        mesh=None,
+        axis="data",
     ):
         if method not in ("l2-hull", "l2-only", "uniform"):
             raise ValueError(method)
         self.featurize = featurize
         self.alpha = alpha
         self.method = method
+        self.chunk_size = chunk_size
+        self.mesh = mesh
 
         def _feat(Yc):
             F = jnp.asarray(self.featurize(np.asarray(Yc)), jnp.float32)
             return F, F  # hull queries run on the feature rows themselves
 
-        # chunked two-pass scorer: examples beyond chunk_size stream through
-        # featurize in O(chunk) memory instead of one giant feature matrix
-        self._engine = ScoringEngine(
-            featurize=_feat, chunk_size=chunk_size, rows_per_point=1
-        )
+        if mesh is not None:
+            from repro.core.distributed_coreset import DistributedScoringEngine
+
+            # feature rows arrive pre-computed (see select): the on-mesh
+            # featurize is the identity, hull queries run on the rows
+            self._engine = DistributedScoringEngine(
+                featurize=lambda F: (F, F),
+                mesh=mesh,
+                axis=axis,
+                chunk_size=chunk_size,
+                rows_per_point=1,
+            )
+        else:
+            # chunked two-pass scorer: examples beyond chunk_size stream
+            # through featurize in O(chunk) memory instead of one giant
+            # feature matrix
+            self._engine = ScoringEngine(
+                featurize=_feat, chunk_size=chunk_size, rows_per_point=1
+            )
+
+    def _features_host(self, examples: np.ndarray) -> jnp.ndarray:
+        """Chunked host-side featurize for the mesh path (featurize may be
+        arbitrary Python — it cannot run inside shard_map)."""
+        n = examples.shape[0]
+        chunk = self.chunk_size or n
+        blocks = [
+            np.asarray(self.featurize(examples[lo : min(lo + chunk, n)]))
+            for lo in range(0, n, chunk)
+        ]
+        return jnp.asarray(np.concatenate(blocks, axis=0), jnp.float32)
 
     def select(self, examples: np.ndarray, k: int, key: jax.Array) -> WeightedSubset:
         n = examples.shape[0]
@@ -118,8 +157,9 @@ class CoresetSelector:
         k1 = int(np.floor(self.alpha * k)) if self.method == "l2-hull" else k
         k2 = k - k1 if self.method == "l2-hull" else 0
         k_draw, k_hull = jax.random.split(key)
+        data = self._features_host(examples) if self.mesh is not None else examples
         res = self._engine.score(
-            examples, method="l2-only", hull_k=k2, hull_key=k_hull
+            data, method="l2-only", hull_k=k2, hull_key=k_hull
         )
         probs = res.scores / res.scores.sum()
         idx = np.asarray(
@@ -127,9 +167,13 @@ class CoresetSelector:
         )
         w = (1.0 / (k1 * probs[idx])).astype(np.float32)
         if k2 > 0:
-            hull = res.hull_rows  # rows == example ids (rows_per_point=1)
+            # exactly k2 distinct example ids (rows == points here), topped
+            # up by score rank when the hull candidates dedup short
+            from repro.core.coreset import exact_hull_points
+
+            hull = exact_hull_points(res, res.scores, k2)
             idx = np.concatenate([idx, hull])
-            w = np.concatenate([w, np.ones(hull.shape[0], np.float32)])
+            w = np.concatenate([w, np.ones(k2, np.float32)])
         return WeightedSubset(idx.astype(np.int64), w)
 
 

@@ -3,7 +3,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Dry-run of the PAPER'S TECHNIQUE at pod scale: Algorithm-1 coreset scoring
 (leverage + sensitivity) for n = 4.2M rows of Bernstein features on the
-production mesh. Three variants:
+production mesh. Four variants:
 
   naive     — gather the full feature matrix to every chip, then Gram+scores
               (what a straight port of the single-node algorithm does)
@@ -11,6 +11,10 @@ production mesh. Three variants:
               local projections (repro.core.distributed_coreset)
   sketch    — CountSketch to 4·dJ rows per shard before the Gram psum
               (Woodruff Thm 2.13 path; least FLOPs, same collective)
+  engine    — the DistributedScoringEngine pass structure: the chunk loop
+              runs INSIDE the shard body (lax.scan over per-shard chunks),
+              one fused pass-1 psum, chunked pass-2 leverage emission —
+              per-chip peak O(chunk·D) instead of O(per_shard·D)
 
 Writes results/dryrun/coreset__score__<mesh>__opt-<variant>.json — the
 paper-representative §Perf cell.
@@ -25,20 +29,22 @@ import numpy as np
 from repro.utils.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.distributed_coreset import make_sharded_pass_fns
 from repro.core.leverage import leverage_from_gram
-from repro.launch.mesh import make_production_mesh
+from repro.core.scoring import gram_projection
+from repro.launch.mesh import data_axes, make_production_mesh
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.utils.hlo import collective_stats
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
 
 
-def score_fn(variant: str, mesh, n: int, D: int, sketch: int = 0):
+def score_fn(variant: str, mesh, n: int, D: int, sketch: int = 0, chunk: int = 4096):
     """Returns (fn, in_shardings, arg ShapeDtypeStructs)."""
     X_sds = jax.ShapeDtypeStruct((n, D), jnp.float32)
-    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    x_shard = NamedSharding(mesh, P(data_axes, None))
-    axis = data_axes if len(data_axes) > 1 else data_axes[0]
+    axes = data_axes(mesh)
+    x_shard = NamedSharding(mesh, P(axes, None))
+    axis = axes if len(axes) > 1 else axes[0]
 
     if variant == "naive":
 
@@ -85,6 +91,37 @@ def score_fn(variant: str, mesh, n: int, D: int, sketch: int = 0):
             return fn(X, rows[:, None], signs[:, None])
 
         return wrapper, (x_shard, r_shard, r_shard), (X_sds, rows_sds, signs_sds)
+
+    if variant == "engine":
+        # the DistributedScoringEngine's sharded+chunked Algorithm 1 on raw
+        # feature rows (identity featurize, hull off): scan over per-shard
+        # chunks, ONE fused pass-1 psum, chunked pass-2 leverage. n must be
+        # divisible by the data-shard count at dry-run scale (it is: 2^22
+        # rows over 2^8 chips).
+        shards = int(np.prod([mesh.shape[a] for a in axes]))
+        per = n // shards
+        chunk = min(chunk, per)
+        assert per % chunk == 0, "dry-run shapes: per-shard rows % chunk == 0"
+        pass1, pass2 = make_sharded_pass_fns(
+            lambda x: (x, x),
+            mesh,
+            axes,
+            chunk=chunk,
+            chunks_per_shard=per // chunk,
+            rows_per_point=1,
+            hull=False,
+            D=D,
+            p=1,  # no hull stage → no (D, D) dead weight in the psum
+        )
+        sw_sds = jax.ShapeDtypeStruct((n,), jnp.float32)
+        r_shard = NamedSharding(mesh, P(axes))
+
+        def fn(X, sw, mask):
+            G, _, _ = pass1(X, sw, mask)
+            V, inv = gram_projection(G)  # (D,D) algebra, replicated
+            return pass2(X, sw, V, inv) + 1.0 / n
+
+        return fn, (x_shard, r_shard, r_shard), (X_sds, sw_sds, sw_sds)
 
     raise ValueError(variant)
 
@@ -141,7 +178,9 @@ def run(variant: str, multi_pod: bool, n: int, J: int, d: int, out_dir: str):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--variant", default="psum", choices=("naive", "psum", "sketch"))
+    ap.add_argument(
+        "--variant", default="psum", choices=("naive", "psum", "sketch", "engine")
+    )
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--n", type=int, default=4_194_304)
     ap.add_argument("--J", type=int, default=20)

@@ -1,14 +1,22 @@
-"""Production mesh construction.
+"""Production mesh construction + mesh-aware launch helpers.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state — the 512-placeholder-device dry-run must set
-XLA_FLAGS before the first jax call.
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the 512-placeholder-
+device dry-run must set XLA_FLAGS before the first jax call.
+
+``data_axes`` / ``host_gather`` are the two pieces every launch script needs
+to drive the sharded coreset path (``core.distributed_coreset``): which mesh
+axes carry the data sharding, and how to pull row-sharded results back to
+the host safely under multi-process jax.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.core.distributed_coreset import host_gather  # re-export  # noqa: F401
 from repro.utils.compat import make_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh", "data_axes", "host_gather"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +30,11 @@ def make_host_mesh(model: int = 1):
     """Tiny mesh over the actually-available devices (tests / examples)."""
     n = len(jax.devices())
     return make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The mesh axes that shard data rows: ("pod", "data") on multi-pod
+    meshes, ("data",) otherwise. Feed the tuple to
+    ``DistributedScoringEngine(axis=...)`` / shard_map PartitionSpecs so a
+    script works unchanged on both mesh shapes."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -53,6 +53,55 @@ def test_conditional_coreset_scores_dimension(cond_data):
     assert s.sum() <= 2 * 6 + 2 + 1 + 1e-3
 
 
+def test_conditional_scores_match_dense_oracle(cond_data):
+    """Engine-routed (b_i, x_i) leverage ≡ the explicit augmented-matrix
+    computation, dense and chunked."""
+    from repro.core.leverage import leverage_scores_gram
+    import jax.numpy as jnp
+
+    X, Y, _ = cond_data
+    cfg = CMCTMConfig(J=2, n_features=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    A, _ = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
+    n = A.shape[0]
+    feats = jnp.concatenate(
+        [A.reshape(n, -1), jnp.asarray(X, jnp.float32)], axis=1
+    )
+    want = np.asarray(leverage_scores_gram(feats)) + 1.0 / n
+    got_dense = conditional_coreset_scores(cfg, scaler, Y, X)
+    got_chunked = conditional_coreset_scores(cfg, scaler, Y, X, chunk_size=257)
+    # the engine's f64 host eigh vs the oracle's f32 device eigh: modes near
+    # the rcond cutoff carry ~1e-4 solver noise on this Gaussian-feature Gram
+    np.testing.assert_allclose(got_dense, want, atol=5e-4)
+    np.testing.assert_allclose(got_chunked, want, atol=5e-4)
+
+
+def test_conditional_coreset_exact_k_low_diversity_hull():
+    """Adversarial hull: nearly all points identical, so the ε-kernel rows
+    dedup to a handful of distinct points. The build must still return
+    exactly k indices (shortfall topped up from next-ranked candidates)."""
+    rng = np.random.default_rng(5)
+    n, F = 400, 2
+    # 5 distinct support points, everything else a single repeated row →
+    # directional argmaxes concentrate on ≤ ~6 points
+    Y = np.tile(rng.standard_normal((1, 2)), (n, 1))
+    Y[:5] = rng.standard_normal((5, 2)) * 3.0
+    X = rng.standard_normal((n, F))
+    cfg = CMCTMConfig(J=2, n_features=F, degree=5)
+    scaler = DataScaler.fit(Y)
+    k = 80
+    idx, w = build_conditional_coreset(
+        cfg, scaler, Y, X, k=k, key=jax.random.PRNGKey(2), alpha=0.2
+    )
+    # α=0.2 → k2 = 64 hull slots ≫ distinct extremal points available
+    assert idx.shape == (k,)
+    assert w.shape == (k,)
+    assert (w > 0).all()
+    k1 = int(np.floor(0.2 * k))
+    hull_part = idx[k1:]
+    assert len(set(hull_part.tolist())) == k - k1  # top-up never duplicates
+
+
 def test_conditional_coreset_fit_close_to_full(cond_data):
     X, Y, _ = cond_data
     cfg = CMCTMConfig(J=2, n_features=2, degree=5)

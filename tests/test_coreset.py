@@ -28,6 +28,25 @@ def test_methods_produce_valid_coresets(setup, method):
     assert (cs.indices >= 0).all() and (cs.indices < Y.shape[0]).all()
 
 
+def test_build_coreset_exact_k_low_diversity_hull():
+    """Adversarial hull: nearly all points identical → ε-kernel candidates
+    dedup to a handful of points. build_coreset must still return exactly k
+    (shortfall topped up by score rank), with no duplicate hull entries."""
+    rng = np.random.default_rng(5)
+    Y = np.tile(rng.standard_normal((1, 2)), (400, 1))
+    Y[:5] = rng.standard_normal((5, 2)) * 3.0
+    cfg = M.MCTMConfig(J=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    k, alpha = 80, 0.2  # k2 = 64 hull slots ≫ distinct extremal points
+    cs = build_coreset(
+        cfg, scaler, Y, k=k, method="l2-hull", key=jax.random.PRNGKey(2), alpha=alpha
+    )
+    assert cs.size == k
+    assert (cs.weights > 0).all()
+    hull_part = cs.indices[int(np.floor(alpha * k)) :]
+    assert len(set(hull_part.tolist())) == k - int(np.floor(alpha * k))
+
+
 def test_uniform_weights_are_n_over_k(setup):
     cfg, scaler, Y = setup
     cs = build_coreset(cfg, scaler, Y, k=100, method="uniform", key=jax.random.PRNGKey(1))

@@ -65,6 +65,156 @@ def test_distributed_direction_argmax():
     )
 
 
+def test_distributed_direction_argmax_ragged():
+    """n % shards != 0 (and even n < shards) must match the dense argmax
+    oracle exactly — pad rows are masked to −inf. Empty inputs raise."""
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core.distributed_coreset import distributed_direction_argmax
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(11)
+        dirs = jnp.asarray(rng.standard_normal((12, 5)), jnp.float32)
+        for n in (163, 9, 5, 1):  # ragged, barely-ragged, n < shards, single
+            P = jnp.asarray(rng.standard_normal((n, 5)), jnp.float32)
+            got = np.asarray(distributed_direction_argmax(P, dirs, mesh))
+            want = np.argmax(np.asarray(P) @ np.asarray(dirs).T, axis=0)
+            np.testing.assert_array_equal(got, want, err_msg=f"n={n}")
+            assert (got < n).all()  # never a padding index
+        try:
+            distributed_direction_argmax(jnp.zeros((0, 5)), dirs, mesh)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("empty input must raise")
+        print("OK")
+        """
+    )
+
+
+def test_sharded_engine_matches_single_host():
+    """The tentpole acceptance: DistributedScoringEngine ≡ ScoringEngine to
+    ≤1e-6 max-abs on an 8-fake-device mesh, n NOT divisible by the shard
+    count, with identical hull candidate selection — plus the weighted
+    (Merge & Reduce) path and the end-to-end distributed_build_coreset."""
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core import mctm as M
+        from repro.core.bernstein import DataScaler
+        from repro.core.scoring import ScoringEngine
+        from repro.core.coreset import build_coreset
+        from repro.core.distributed_coreset import (
+            DistributedScoringEngine, distributed_build_coreset)
+
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        n = 1003  # ragged: 1003 % 8 != 0, and per-shard chunking is ragged too
+        Y = rng.random((n, 2)).astype(np.float32)
+        # degree 5: Gram spectrum fully above the f32 noise floor, so the two
+        # accumulation orders must agree to ~1e-8 (degree 6 puts genuine edge
+        # modes at the rcond cutoff — the known f32-conditioning ROADMAP item)
+        cfg = M.MCTMConfig(J=2, degree=5)
+        scaler = DataScaler.fit(Y)
+        key = jax.random.PRNGKey(3)
+
+        single = ScoringEngine(cfg, scaler, chunk_size=128).score(
+            jnp.asarray(Y), method="l2-hull", hull_k=20, hull_key=key)
+        dist = DistributedScoringEngine(cfg, scaler, mesh=mesh, chunk_size=64).score(
+            jnp.asarray(Y), method="l2-hull", hull_k=20, hull_key=key)
+        assert np.abs(single.scores - dist.scores).max() <= 1e-6
+        # candidate prefix + consumed hull-point set identical (the deep
+        # candidate tail may flip on near-tied argmaxes — 1-ulp block-layout
+        # differences — which no consumer of the first k ever sees)
+        from repro.core.coreset import exact_hull_points
+        np.testing.assert_array_equal(single.hull_rows[:20], dist.hull_rows[:20])
+        np.testing.assert_array_equal(
+            exact_hull_points(single, single.scores, 20),
+            exact_hull_points(dist, dist.scores, 20))
+
+        # weighted (√w-scaled) leverage — the Merge & Reduce reduction path
+        w = rng.random(n) * 3.0 + 0.1
+        su = ScoringEngine(cfg, scaler, chunk_size=128).score(
+            jnp.asarray(Y), method="l2-only", weights=w)
+        du = DistributedScoringEngine(cfg, scaler, mesh=mesh, chunk_size=64).score(
+            jnp.asarray(Y), method="l2-only", weights=w)
+        # √w scaling widens the Gram spectrum, amplifying f32 accumulation-
+        # order noise a few-fold relative to the unweighted path
+        assert np.abs(su.scores - du.scores).max() <= 5e-6
+
+        # end-to-end Algorithm 1: same key → identical coreset
+        cs = build_coreset(cfg, scaler, Y, 100, "l2-hull",
+                           key=jax.random.PRNGKey(7), chunk_size=256)
+        dcs = distributed_build_coreset(cfg, scaler, Y, 100, "l2-hull",
+                                        mesh=mesh, key=jax.random.PRNGKey(7),
+                                        chunk_size=64)
+        np.testing.assert_array_equal(cs.indices, dcs.indices)
+        np.testing.assert_allclose(cs.weights, dcs.weights, rtol=1e-4)
+        print("OK")
+        """
+    )
+
+
+def test_sharded_coreset_selector_matches_local():
+    """CoresetSelector(mesh=...) routes through the sharded engine and picks
+    the same subset as the single-host path."""
+    run_in_subprocess(
+        """
+        import jax, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.data.pipeline import CoresetSelector
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        ex = rng.standard_normal((1003, 6)).astype(np.float32)
+        feat = lambda E: E * 2.0
+        key = jax.random.PRNGKey(0)
+        a = CoresetSelector(feat, chunk_size=128).select(ex, 64, key)
+        b = CoresetSelector(feat, chunk_size=64, mesh=mesh).select(ex, 64, key)
+        assert a.size == b.size == 64
+        np.testing.assert_array_equal(a.indices, b.indices)
+        np.testing.assert_allclose(a.weights, b.weights, rtol=1e-4)
+        print("OK")
+        """
+    )
+
+
+def test_dryrun_engine_variant_compiles():
+    """score_fn('engine') — the chunked shard-body pass structure — lowers
+    and compiles on a small 2-axis mesh (miniature of the pod dry-run)."""
+    run_in_subprocess(
+        """
+        import jax, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.launch.dryrun_coreset import score_fn
+        mesh = make_mesh((4, 2), ("data", "model"))
+        fn, shardings, args = score_fn("engine", mesh, 4096, 14, chunk=256)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+        assert compiled.cost_analysis() is not None
+        text = compiled.as_text()
+        assert "all-reduce" in text  # the fused pass-1 psum survived lowering
+        print("OK")
+        """
+    )
+
+
+def test_dist_scoring_bench_smoke(tmp_path):
+    """CI hook for the dist_scoring bench: artifact written, engines agree."""
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.kernel_bench import dist_scoring_bench
+
+    out = tmp_path / "BENCH_dist_scoring.json"
+    rec = dist_scoring_bench(smoke=True, out_path=str(out))
+    assert out.exists()
+    assert rec["smoke"] is True
+    assert rec["max_abs_score_diff"] <= 1e-6
+    assert rec["hull_points_equal"]
+
+
 def test_distributed_scoring_stats_match_local():
     """Sharded pass-1 statistics (Gram + hull moments) ≡ local computation."""
     run_in_subprocess(

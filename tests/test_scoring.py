@@ -84,7 +84,12 @@ def test_hull_candidates_cover_dense_epsilon_kernel(chunk):
 
 
 def test_hull_exact_match_with_engine_directions():
-    """Same k, same net → byte-identical candidate selection at small n."""
+    """Same k, same net → identical candidate selection at small n, up to the
+    consumed budget. (The untruncated candidate tails may differ: a 1-ulp
+    score difference between block layouts can flip a near-tied argmax for a
+    late direction, which is invisible to any consumer of the first k.)"""
+    from repro.core.coreset import exact_hull_points
+
     cfg, scaler, Y = _setup(seed=2)
     key = jax.random.PRNGKey(5)
     dense = ScoringEngine(cfg, scaler, chunk_size=0).score(
@@ -93,7 +98,11 @@ def test_hull_exact_match_with_engine_directions():
     chunked = ScoringEngine(cfg, scaler, chunk_size=64).score(
         jnp.asarray(Y), method="l2-hull", hull_k=16, hull_key=key
     )
-    np.testing.assert_array_equal(dense.hull_rows, chunked.hull_rows)
+    np.testing.assert_array_equal(dense.hull_rows[:16], chunked.hull_rows[:16])
+    np.testing.assert_array_equal(
+        exact_hull_points(dense, dense.scores, 16),
+        exact_hull_points(chunked, chunked.scores, 16),
+    )
 
 
 @pytest.mark.parametrize("chunk", [0, 100])

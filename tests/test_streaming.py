@@ -53,6 +53,42 @@ def test_alpha_one_disables_hull_stage():
     assert res.weights.sum() == pytest.approx(1024, rel=0.35)
 
 
+def test_result_is_idempotent():
+    """result() must be a pure read: repeated calls return the same coreset
+    (the reduction key derives from fold_in(key, n_seen), not the stream)."""
+    Y = generate("normal_mixture", 2048, seed=4)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    mr = MergeReduceCoreset(cfg, scaler, k=96, key=jax.random.PRNGKey(4))
+    for i in range(0, 2048, 256):
+        mr.push(Y[i : i + 256])
+    r1 = mr.result()
+    r2 = mr.result()
+    np.testing.assert_array_equal(r1.Y, r2.Y)
+    np.testing.assert_array_equal(r1.weights, r2.weights)
+
+
+def test_push_after_result_is_deterministic():
+    """Peeking at the stream must not perturb it: two identical streams, one
+    with interleaved result() calls, end in identical final coresets."""
+    Y = generate("normal_mixture", 4096, seed=5)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+
+    def run(peek: bool):
+        mr = MergeReduceCoreset(cfg, scaler, k=96, key=jax.random.PRNGKey(5))
+        for j, i in enumerate(range(0, 4096, 256)):
+            mr.push(Y[i : i + 256])
+            if peek and j % 3 == 0:
+                mr.result()  # must be side-effect-free
+        return mr.result()
+
+    a = run(peek=False)
+    b = run(peek=True)
+    np.testing.assert_array_equal(a.Y, b.Y)
+    np.testing.assert_array_equal(a.weights, b.weights)
+
+
 def test_bucket_structure_is_logarithmic():
     Y = generate("bivariate_normal", 8192, seed=2)
     cfg = M.MCTMConfig(J=2, degree=3)
