@@ -9,7 +9,10 @@ from the roofline model (§Roofline).
 ``scoring_bench`` times the full pre-sampling phase of Algorithm 1 two ways —
 the dense seed pipeline (two full basis evaluations, one-shot Gram, (n·J, m)
 hull score matrix) against the chunked two-pass ``ScoringEngine`` — and
-records speedup + peak memory into BENCH_scoring.json at the repo root.
+records speedup + peak memory into BENCH_scoring.json at the repo root. It
+also compares the pass strategies head to head: one-pass sketched vs
+two-pass exact wall clock AND data-pass counts (a counting featurize wrapper
+verifies the one-pass path streams each row exactly once).
 
 ``dist_scoring_bench`` times the sharded chunked ``DistributedScoringEngine``
 against the single-host engine on an 8-fake-device CPU mesh (subprocess: the
@@ -101,6 +104,74 @@ def scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
     overlap = len(set(hull_c.tolist()) & set(hull_d.tolist())) / max(len(hull_d), 1)
     d = cfg.d
     m_dirs = max(4 * k_hull, 8) + 2 * d
+
+    # ---- one-pass sketched vs two-pass exact: wall clock AND data-pass
+    # counts, measured with a counting featurize wrapper (each entry is one
+    # chunk streamed through the fused basis evaluation)
+    from repro.core.scoring import _mctm_featurize
+
+    base_feat = _mctm_featurize(cfg, scaler)
+    calls: list[int] = []
+
+    def counting_feat(Yc):
+        calls.append(int(Yc.shape[0]))
+        return base_feat(Yc)
+
+    eng_cnt = ScoringEngine(
+        featurize=counting_feat, chunk_size=chunk, rows_per_point=cfg.J
+    )
+    D = cfg.J * cfg.d
+    sketch = 4 * D * D  # constant-factor OSE regime, still ≪ n
+    skey = jax.random.PRNGKey(42)
+
+    def two_pass_path():
+        return eng_cnt.score(
+            jnp.asarray(Y), method="l2-hull", hull_k=k_hull, hull_key=key
+        ).scores
+
+    def one_pass_path():
+        return eng_cnt.score(
+            jnp.asarray(Y),
+            method="l2-hull",
+            hull_k=k_hull,
+            hull_key=key,
+            sketch_size=sketch,
+            key=skey,
+        ).scores
+
+    n_chunks = -(-n // chunk)
+    scores_1p = one_pass_path()  # warmup/compile
+    calls.clear()
+    scores_1p = one_pass_path()
+    one_pass_rows, one_pass_calls = sum(calls), len(calls)
+    us_one_pass = time_call(one_pass_path, repeats=1 if smoke else 3)
+    scores_2p = two_pass_path()
+    calls.clear()
+    scores_2p = two_pass_path()
+    two_pass_rows, two_pass_calls = sum(calls), len(calls)
+    us_two_pass = time_call(two_pass_path, repeats=1 if smoke else 3)
+    # exact leverage is the reference: the sketch pays a constant-factor
+    # relative error for the saved sweep
+    rel_err = np.abs(scores_1p - scores_2p) / np.maximum(np.abs(scores_2p), 1e-12)
+
+    one_pass_rec = {
+        "sketch_size": sketch,
+        "two_pass_s": us_two_pass / 1e6,
+        "one_pass_s": us_one_pass / 1e6,
+        "speedup": us_two_pass / us_one_pass,
+        # data-pass accounting: rows streamed through featurize per score
+        "two_pass_featurize_calls": two_pass_calls,
+        "one_pass_featurize_calls": one_pass_calls,
+        "two_pass_rows_streamed": two_pass_rows,
+        "one_pass_rows_streamed": one_pass_rows,
+        "n_chunks": n_chunks,
+        "median_rel_score_err": float(np.median(rel_err)),
+        "max_rel_score_err": float(rel_err.max()),
+    }
+    assert one_pass_rows == n and one_pass_calls == n_chunks, (
+        "one-pass strategy must stream each row exactly once"
+    )
+
     rec = {
         "n": n,
         "J": J,
@@ -118,12 +189,22 @@ def scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
         "chunked_bytes": 2 * chunk * J * d * 4 + chunk * J * m_dirs * 4,
         # monotone process high-water marks (MiB) per phase, in run order
         "rss_mb": {"start": rss0, "after_chunked": rss_chunked, "after_dense": rss_dense},
+        # one-pass sketched vs two-pass exact (pass-strategy comparison)
+        "one_pass_vs_two_pass": one_pass_rec,
     }
     emit(
         f"scoring/n{n}_J{J}_d{d}/chunk{chunk}",
         us_chunked,
         f"dense={rec['dense_s']:.2f}s chunked={rec['chunked_s']:.2f}s "
         f"speedup={rec['speedup']:.2f}x maxdiff={max_diff:.1e}",
+    )
+    emit(
+        f"scoring_one_pass/n{n}_J{J}_d{d}/sketch{sketch}",
+        us_one_pass,
+        f"two_pass={one_pass_rec['two_pass_s']:.2f}s "
+        f"one_pass={one_pass_rec['one_pass_s']:.2f}s "
+        f"passes={one_pass_calls}v{two_pass_calls} "
+        f"med_rel_err={one_pass_rec['median_rel_score_err']:.1e}",
     )
     if out_path is None:
         # smoke runs land in results/ so they don't churn the committed

@@ -4,6 +4,8 @@ Public API:
   - MCTMConfig / init_params / nll / fit_mctm / log_density / sample
   - build_coreset / evaluate_coreset (Algorithm 1 + baselines)
   - leverage scores (exact, sketched, ridge, root), hull ε-kernels
+  - ScoringEngine + pass strategies (TwoPassExact / TwoPassSketched /
+    OnePassSketched — see repro.core.scoring's module doc for the contract)
   - MergeReduceCoreset (streams), distributed_* (shard_map pods)
 """
 from repro.core.bernstein import (
@@ -42,6 +44,14 @@ from repro.core.mctm import (
     nll_terms,
     sample,
 )
-from repro.core.scoring import ScoringEngine, ScoringResult, score_chunks
+from repro.core.scoring import (
+    OnePassSketched,
+    PassStrategy,
+    ScoringEngine,
+    ScoringResult,
+    TwoPassExact,
+    TwoPassSketched,
+    score_chunks,
+)
 from repro.core.sensitivity import sensitivity_sample
 from repro.core.streaming import MergeReduceCoreset, WeightedSet

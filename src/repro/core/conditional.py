@@ -185,10 +185,18 @@ def conditional_coreset_scores(
     X,
     *,
     chunk_size: int | None = DEFAULT_CHUNK,
+    sketch_size: int = 0,
+    key=None,
 ) -> np.ndarray:
-    """s_i = u_i + 1/n over the augmented rows (b_i, x_i), chunked."""
+    """s_i = u_i + 1/n over the augmented rows (b_i, x_i), chunked.
+
+    ``sketch_size > 0`` (requires ``key``) streams the augmented rows through
+    the engine's one-pass sketched strategy — each (y_i, x_i) row featurized
+    exactly once."""
     engine = conditional_scoring_engine(cfg, scaler, chunk_size)
-    return engine.score(_stack_yx(cfg, Y, X), method="l2-only").scores
+    return engine.score(
+        _stack_yx(cfg, Y, X), method="l2-only", sketch_size=sketch_size, key=key
+    ).scores
 
 
 def build_conditional_coreset(
@@ -201,22 +209,30 @@ def build_conditional_coreset(
     key,
     alpha: float = 0.8,
     chunk_size: int | None = DEFAULT_CHUNK,
+    sketch_size: int = 0,
 ):
     """Algorithm-1 hybrid for the conditional model; returns (idx, weights).
 
     One engine sweep produces both the sampling scores and the hull
-    candidates (the basis is evaluated once on the dense path). The result
-    always has exactly ``min(k, n)`` entries: when the ε-kernel candidate
-    rows dedup to fewer than k − k1 distinct points (low-diversity hulls),
-    the shortfall is topped up from the next-ranked points by sampling
-    score, keeping the log-term guard deterministic.
+    candidates (the basis is evaluated once on the dense path; with
+    ``sketch_size > 0`` every chunked row is streamed exactly once through
+    the one-pass sketched strategy). The result always has exactly
+    ``min(k, n)`` entries: when the ε-kernel candidate rows dedup to fewer
+    than k − k1 distinct points (low-diversity hulls), the shortfall is
+    topped up from the next-ranked points by sampling score, keeping the
+    log-term guard deterministic.
     """
     t0 = time.perf_counter()
     Y = np.asarray(Y)
     n = Y.shape[0]
     k = min(k, n)
     k2 = k - int(np.floor(alpha * k))
-    k_draw, k_hull = jax.random.split(key)
+    if sketch_size > 0:
+        # extra stream for the sketch plan; exact builds keep the old split
+        k_draw, k_hull, k_score = jax.random.split(key, 3)
+    else:
+        k_draw, k_hull = jax.random.split(key)
+        k_score = None
 
     engine = conditional_scoring_engine(cfg, scaler, chunk_size)
     res = engine.score(
@@ -224,6 +240,8 @@ def build_conditional_coreset(
         method="l2-hull" if k2 > 0 else "l2-only",
         hull_k=k2,
         hull_key=k_hull if k2 > 0 else None,
+        sketch_size=sketch_size,
+        key=k_score,
     )
     cs = coreset_from_scoring(
         res, n, k, "l2-hull" if k2 > 0 else "l2-only", alpha, k_draw, t0

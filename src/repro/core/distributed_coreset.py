@@ -21,18 +21,30 @@ slices), reusing the exact per-chunk math of the single-host engine
 
   memory:  per-chip peak is O(chunk·J·d) — no (n, J, d) basis tensor and no
            full-shard score block ever materializes; carried state is the
-           O((Jd)²) pass-1 statistics plus the (m,) running hull extremes.
-  collectives: exactly ONE fused psum per pass-1 sweep (the (G, Σp, Σppᵀ)
-           tuple lowers to a single all-reduce) and one all_gather pair
-           (values + indices, each (shards, 2, m) with m = #directions) for
-           pass-2's cross-shard running-extreme hull reduction. Nothing else
-           crosses the ICI; leverage scores stay row-sharded until the final
+           strategy's O((Jd)²)-ish statistics plus the (m,) running hull
+           extremes (one-pass additionally keeps its per-shard retained z
+           rows, O(per_shard·q) per chip).
+  collectives: exactly ONE fused psum per accumulation sweep — the carried
+           strategy state ((G, Σp, Σppᵀ) for ``TwoPassExact``, SX for
+           ``OnePassSketched``) psums as one tuple, which
+           lowers to a single all-reduce — and one all_gather pair (values +
+           indices, each (shards, 2, m) with m = #directions) for the
+           cross-shard running-extreme hull reduction. Nothing else crosses
+           the ICI; leverage scores stay row-sharded until the final
            multi-process-safe ``host_gather``.
 
-Between the passes the engine runs the same tiny host algebra as the
-single-host path (f64 eigh of the psum'd Gram, moment-derived direction
-net), which is what makes the two engines agree to f32 accumulation noise
-(~1e-7) on identical inputs regardless of mesh shape or chunk size.
+The engine drives the same ``repro.core.scoring`` pass strategies as the
+single-host engine: ``TwoPassExact`` (the pass1/pass2 pair below, with an
+optional x64-gated f64 Gram carry), and ``OnePassSketched`` — ONE fused
+sweep (``make_sharded_onepass_fn``) that accumulates the row CountSketch
+and the running hull extremes and emits the sketch-projected z rows, so
+every data row is featurized exactly once per score call.
+
+Between the sweeps the engine runs the same tiny host algebra as the
+single-host path (f64 eigh of the psum'd Gram, moment-derived or upfront
+direction net), which is what makes the two engines agree to f32
+accumulation noise (~1e-7) on identical inputs regardless of mesh shape or
+chunk size.
 
 ``distributed_build_coreset`` drives the engine end-to-end and returns the
 same ``CoresetResult`` contract as ``coreset.build_coreset``.
@@ -43,6 +55,7 @@ The same Gram-psum pattern powers the LM-pipeline coreset stage
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Callable
 
@@ -55,8 +68,12 @@ from repro.core.hull import stable_first_unique
 from repro.core.scoring import (
     DEFAULT_CHUNK,
     SCORE_METHODS,
+    OnePassSketched,
     ScoringResult,
+    TwoPassExact,
+    TwoPassSketched,
     _mctm_featurize,
+    _z_leverage_jit,
     directions_from_moments,
     finalize_scoring,
     gram_projection,
@@ -64,6 +81,9 @@ from repro.core.scoring import (
     leverage_chunk,
     pass1_update,
     projection_from_gram,
+    resolve_strategy,
+    sketch_plan,
+    upfront_directions,
 )
 from repro.kernels.gram.ops import gram_matrix
 from repro.utils.compat import shard_map
@@ -77,6 +97,7 @@ __all__ = [
     "DistributedScoringEngine",
     "distributed_build_coreset",
     "make_sharded_pass_fns",
+    "make_sharded_onepass_fn",
     "host_gather",
 ]
 
@@ -94,6 +115,57 @@ def _spec_el(axes: tuple[str, ...]):
     return axes if len(axes) > 1 else axes[0]
 
 
+# monotone per-process call counter: host_gather is SPMD (every process calls
+# it in the same order), so the counter names a unique KV namespace + barrier
+# per gather that all processes agree on
+_KV_GATHER_SEQ = itertools.count()
+_KV_TIMEOUT_MS = 120_000
+
+
+def _kv_store_gather(x) -> np.ndarray:
+    """Cross-process gather over the distributed runtime's key-value store.
+
+    The CPU backend cannot execute multi-process computations (so
+    ``process_allgather`` — a jit under the hood — fails there); exchanging
+    the addressable shard bytes host-side through the coordinator's KV store
+    covers the gap. Collective: every participating process must call
+    ``host_gather`` in the same order.
+    """
+    import pickle
+
+    from jax._src import distributed
+
+    client = distributed.global_state.client
+    if client is None:
+        raise RuntimeError(
+            "host_gather: array is not fully addressable but jax.distributed "
+            "was never initialized"
+        )
+    seq = next(_KV_GATHER_SEQ)
+    pid = jax.process_index()
+    shards = [
+        (
+            tuple(s.indices(dim)[:2] for s, dim in zip(shard.index, x.shape)),
+            np.asarray(shard.data),
+        )
+        for shard in x.addressable_shards
+    ]
+    key = f"repro/host_gather/{seq}/{pid}"
+    client.key_value_set_bytes(key, pickle.dumps(shards))
+    client.wait_at_barrier(f"repro_host_gather_{seq}", _KV_TIMEOUT_MS)
+    out = np.zeros(x.shape, x.dtype)
+    for p in range(jax.process_count()):
+        blob = client.blocking_key_value_get_bytes(
+            f"repro/host_gather/{seq}/{p}", _KV_TIMEOUT_MS
+        )
+        for bounds, data in pickle.loads(blob):
+            out[tuple(slice(a, b) for a, b in bounds)] = data
+    # second barrier before deleting our key: every process has read it
+    client.wait_at_barrier(f"repro_host_gather_done_{seq}", _KV_TIMEOUT_MS)
+    client.key_value_delete(key)
+    return out
+
+
 def host_gather(x) -> np.ndarray:
     """Multi-process-safe device→host gather.
 
@@ -101,6 +173,9 @@ def host_gather(x) -> np.ndarray:
     multi-process jax, row-sharded outputs go through
     ``multihost_utils.process_allgather`` and replicated outputs are read
     from a local shard — no path ever touches non-addressable device memory.
+    On backends that cannot run multi-process computations (CPU), the gather
+    falls back to a host-side shard exchange through the distributed
+    runtime's KV store (``_kv_store_gather``).
     """
     if getattr(x, "is_fully_addressable", True):
         return np.asarray(x)
@@ -108,7 +183,17 @@ def host_gather(x) -> np.ndarray:
         return np.asarray(x.addressable_shards[0].data)
     from jax.experimental import multihost_utils
 
-    return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+    try:
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+    except Exception as e:
+        # fall back ONLY for the known CPU-backend gap ("Multiprocess
+        # computations aren't implemented on the CPU backend"); any other
+        # failure is a real error and must stay loud
+        if jax.default_backend() != "cpu" or (
+            "multiprocess computations" not in str(e).lower()
+        ):
+            raise
+        return _kv_store_gather(x)
 
 
 def distributed_gram(X: jax.Array, mesh: Mesh, axis: str = "data") -> jax.Array:
@@ -226,6 +311,58 @@ def distributed_coreset_scores(
 # ---------------------------------------------------------------------------
 
 
+def _shard_index_fn(axes: tuple[str, ...], sizes):
+    """Row-major linear shard index over (possibly multiple) mesh axes."""
+    idx = jax.lax.axis_index(axes[0])
+    for a, s in zip(axes[1:], sizes[1:]):
+        idx = idx * s + jax.lax.axis_index(a)
+    return idx
+
+
+# -- running-extreme hull reduction, shared by the two-pass pass-2 body and
+#    the one-pass body (the device-side analogue of scoring.RunningExtremes)
+
+
+def _extremes_init(m: int):
+    return (
+        jnp.full((m,), -jnp.inf, jnp.float32),
+        jnp.zeros((m,), jnp.int32),
+        jnp.full((m,), jnp.inf, jnp.float32),
+        jnp.zeros((m,), jnp.int32),
+    )
+
+
+def _extremes_step(ext, Pr, dirs, pm, row_offset):
+    """Fold one chunk's directional extremes into the running carry.
+
+    Strict comparisons keep the first-occurrence (lowest-row) tie-break,
+    matching the single-host running extremes. Indices are cast to int32 so
+    the scan carry dtype is stable regardless of x64 mode (the engines guard
+    against n·r overflowing int32 up front).
+    """
+    bmax, imax, bmin, imin = ext
+    vmax, lmax, vmin, lmin = hull_chunk_extremes(Pr, dirs, pm)
+    gmax = (row_offset + lmax).astype(jnp.int32)
+    gmin = (row_offset + lmin).astype(jnp.int32)
+    upd = vmax > bmax
+    bmax, imax = jnp.where(upd, vmax, bmax), jnp.where(upd, gmax, imax)
+    upd = vmin < bmin
+    bmin, imin = jnp.where(upd, vmin, bmin), jnp.where(upd, gmin, imin)
+    return bmax, imax, bmin, imin
+
+
+def _extremes_cross_shard(ext, axis_name):
+    """Cross-shard running-extreme reduction: ONE all_gather pair (values +
+    indices), then a replicated argmax; lowest shard wins ties. Returns the
+    per-direction global (argmax, argmin) row ids."""
+    bmax, imax, bmin, imin = ext
+    allv = jax.lax.all_gather(jnp.stack([bmax, -bmin]), axis_name)
+    alli = jax.lax.all_gather(jnp.stack([imax, imin]), axis_name)
+    win = jnp.argmax(allv, axis=0)  # (2, m)
+    hull_idx = jnp.take_along_axis(alli, win[None], axis=0)[0]
+    return hull_idx[0], hull_idx[1]
+
+
 def make_sharded_pass_fns(
     featurize: Callable,
     mesh: Mesh,
@@ -237,6 +374,7 @@ def make_sharded_pass_fns(
     hull: bool,
     D: int,
     p: int,
+    gram_dtype: str = "float32",
 ):
     """Build the (pass1, pass2) shard_map callables of the sharded engine.
 
@@ -251,6 +389,11 @@ def make_sharded_pass_fns(
     pass2(Y, sw_masked, mask, V, inv[, dirs]) -> row-sharded leverage, plus
     (when ``hull``) the per-direction global argmax/argmin row indices from
     the cross-shard running-extreme reduction (one all_gather pair).
+
+    ``gram_dtype="float64"`` carries (and psums) the Gram in f64 — the
+    sharded realization of ``TwoPassExact(gram_dtype="float64")`` — which
+    requires jax x64 mode (the single-host engine accumulates host-side
+    instead and needs no flag).
     """
     r = rows_per_point
     cps = chunks_per_shard
@@ -258,12 +401,10 @@ def make_sharded_pass_fns(
     sizes = [mesh.shape[a] for a in axes]
     axis_name = axes if len(axes) > 1 else axes[0]
     row_spec = _spec_el(axes)
+    f64 = gram_dtype == "float64"
 
     def _shard_index():
-        idx = jax.lax.axis_index(axes[0])
-        for a, s in zip(axes[1:], sizes[1:]):
-            idx = idx * s + jax.lax.axis_index(a)
-        return idx
+        return _shard_index_fn(axes, sizes)
 
     def _chunked(a):
         return a.reshape((cps, chunk) + a.shape[1:])
@@ -278,10 +419,15 @@ def make_sharded_pass_fns(
                 Pr = Pr * jnp.repeat(mc, r)[:, None]
             else:
                 Pr = None
-            return pass1_update(carry[0], carry[1], carry[2], X, Pr, swc), None
+            return (
+                pass1_update(
+                    carry[0], carry[1], carry[2], X, Pr, swc, gram_dtype=gram_dtype
+                ),
+                None,
+            )
 
         init = (
-            jnp.zeros((D, D), jnp.float32),
+            jnp.zeros((D, D), jnp.float64 if f64 else jnp.float32),
             jnp.zeros((p,), jnp.float32),
             jnp.zeros((p, p), jnp.float32),
         )
@@ -300,45 +446,25 @@ def make_sharded_pass_fns(
     )
 
     def pass2_hull_body(ys, swm, mask, V, inv, dirs):
-        m = dirs.shape[0]
         base = _shard_index() * per
 
         def step(carry, xs):
-            bmax, imax, bmin, imin = carry
             ci, yc, swc, mc = xs
             X, Pr = featurize(yc)
             u = leverage_chunk(X, swc, V, inv)
             pm = jnp.repeat(mc, r) > 0
-            vmax, lmax, vmin, lmin = hull_chunk_extremes(Pr, dirs, pm)
-            off = (base + ci * chunk) * r
-            gmax, gmin = off + lmax, off + lmin
-            # strict comparison keeps first-occurrence (lowest-row) tie-break,
-            # matching the single-host chunked pass 2
-            upd = vmax > bmax
-            bmax, imax = jnp.where(upd, vmax, bmax), jnp.where(upd, gmax, imax)
-            upd = vmin < bmin
-            bmin, imin = jnp.where(upd, vmin, bmin), jnp.where(upd, gmin, imin)
-            return (bmax, imax, bmin, imin), u
+            carry = _extremes_step(carry, Pr, dirs, pm, (base + ci * chunk) * r)
+            return carry, u
 
-        init = (
-            jnp.full((m,), -jnp.inf, jnp.float32),
-            jnp.zeros((m,), jnp.int32),
-            jnp.full((m,), jnp.inf, jnp.float32),
-            jnp.zeros((m,), jnp.int32),
-        )
-        (bmax, imax, bmin, imin), u = jax.lax.scan(
+        ext, u = jax.lax.scan(
             step,
-            init,
+            _extremes_init(dirs.shape[0]),
             (jnp.arange(cps), _chunked(ys), _chunked(swm), _chunked(mask)),
         )
-        # cross-shard running-extreme reduction: one all_gather pair (values
-        # + indices), then a replicated argmax — the distributed analogue of
-        # the host-side chunk loop in ScoringEngine._score_chunked
-        allv = jax.lax.all_gather(jnp.stack([bmax, -bmin]), axis_name)
-        alli = jax.lax.all_gather(jnp.stack([imax, imin]), axis_name)
-        win = jnp.argmax(allv, axis=0)  # (2, m) lowest shard wins ties
-        hull_idx = jnp.take_along_axis(alli, win[None], axis=0)[0]
-        return u.reshape(per), hull_idx[0], hull_idx[1]
+        # the distributed analogue of the host-side chunk loop in
+        # ScoringEngine._drive
+        gimax, gimin = _extremes_cross_shard(ext, axis_name)
+        return u.reshape(per), gimax, gimin
 
     def pass2_body(ys, swm, V, inv):
         def step(_, xs):
@@ -375,6 +501,101 @@ def make_sharded_pass_fns(
     return pass1, pass2
 
 
+def make_sharded_onepass_fn(
+    featurize: Callable,
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    *,
+    chunk: int,
+    chunks_per_shard: int,
+    rows_per_point: int,
+    hull: bool,
+    D: int,
+    q: int | None,
+    sketch_size: int,
+):
+    """The sharded ``OnePassSketched`` sweep — ONE shard_map callable.
+
+    Each shard scans its local chunks exactly once, accumulating the
+    strategy's carried state (the row CountSketch SX — it joins the one
+    fused psum, exactly like the two-pass (G, Σp, Σppᵀ); the one-pass net is
+    fixed upfront so no hull moments are carried) while tracking the running
+    directional hull extremes and emitting the sketch-projected rows
+    z = (√w·X)Ω. No second data sweep exists: leverage is read off the
+    row-sharded z at finalize.
+
+    fn(Y, sw_masked, mask, rows, signs, *extras) with ``rows``/``signs`` the
+    row-sharded global CountSketch plan, extras = (Ω,) when ``q`` plus
+    (dirs,) when ``hull``. Returns (z row-sharded, SX replicated
+    [, global argmax/argmin row ids]).
+    """
+    r = rows_per_point
+    cps = chunks_per_shard
+    per = cps * chunk
+    sizes = [mesh.shape[a] for a in axes]
+    axis_name = axes if len(axes) > 1 else axes[0]
+    row_spec = _spec_el(axes)
+    width = q if q else D
+
+    def _chunked(a):
+        return a.reshape((cps, chunk) + a.shape[1:])
+
+    def body(ys, swm, mask, rows, signs, *extra):
+        omega = extra[0] if q else None
+        dirs = extra[-1] if hull else None
+        m = dirs.shape[0] if hull else 0
+        base = _shard_index_fn(axes, sizes) * per
+
+        def step(carry, xs):
+            SX, ext = carry
+            ci, yc, swc, mc, rc, sc = xs
+            X, Pr = featurize(yc)
+            Xw = X * swc[:, None]
+            SX = SX.at[rc].add(sc[:, None] * Xw)
+            if hull:
+                pm = jnp.repeat(mc, r) > 0
+                ext = _extremes_step(ext, Pr, dirs, pm, (base + ci * chunk) * r)
+            z = Xw if omega is None else Xw @ omega
+            return (SX, ext), z
+
+        init = (jnp.zeros((sketch_size, D), jnp.float32), _extremes_init(m))
+        (SX, ext), z = jax.lax.scan(
+            step,
+            init,
+            (
+                jnp.arange(cps),
+                _chunked(ys),
+                _chunked(swm),
+                _chunked(mask),
+                _chunked(rows),
+                _chunked(signs),
+            ),
+        )
+        # ONE collective for the strategy state, same as the two-pass pass 1
+        SX = jax.lax.psum(SX, axis_name)
+        outs = (z.reshape(per, width), SX)
+        if hull:
+            outs = outs + _extremes_cross_shard(ext, axis_name)
+        return outs
+
+    row = P(row_spec)
+    in_specs = (P(row_spec, None), row, row, row, row)
+    if q:
+        in_specs = in_specs + (P(None, None),)
+    if hull:
+        in_specs = in_specs + (P(None, None),)
+    out_specs = (P(row_spec, None), P(None, None))
+    if hull:
+        out_specs = out_specs + (P(None), P(None))
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )
+
+
 class DistributedScoringEngine:
     """Sharded + chunked pre-sampling phase of Algorithm 1 (see module doc).
 
@@ -386,8 +607,9 @@ class DistributedScoringEngine:
     Parameters mirror ``ScoringEngine``; ``featurize`` must be jax-traceable
     (it runs inside the shard_map scan body). ``axis`` may be one mesh axis
     name or a tuple of names (e.g. ``("pod", "data")`` on a multi-pod mesh).
-    CountSketch pass-1 (``sketch_size``) is not yet sharded — see the ROADMAP
-    sketched-pass-1 item.
+    ``sketch_size > 0`` (or an explicit ``OnePassSketched`` strategy) routes
+    through the fused one-pass sweep — each row featurized exactly once, the
+    sketch state joining the single pass-1 psum.
     """
 
     def __init__(
@@ -401,6 +623,7 @@ class DistributedScoringEngine:
         chunk_size: int | None = DEFAULT_CHUNK,
         rows_per_point: int | None = None,
         hull_oversample: int = 4,
+        gram_dtype: str = "float32",
     ):
         if featurize is None:
             if cfg is None or scaler is None:
@@ -415,7 +638,8 @@ class DistributedScoringEngine:
         self.chunk_size = int(chunk_size) if chunk_size else 0
         self.rows_per_point = int(rows_per_point or 1)
         self.hull_oversample = hull_oversample
-        self._fns: dict = {}  # (chunk, cps, hull, D, p) → jitted pass fns
+        self.gram_dtype = gram_dtype
+        self._fns: dict = {}  # layout/strategy signature → jitted pass fns
 
     # --------------------------------------------------------------- helpers
 
@@ -428,7 +652,7 @@ class DistributedScoringEngine:
         cps = -(-per_needed // chunk)
         return chunk, cps, cps * chunk * shards
 
-    def _pass_fns(self, chunk: int, cps: int, hull: bool, width, dtype):
+    def _feature_shapes(self, chunk: int, hull: bool, width, dtype):
         sds = jax.ShapeDtypeStruct((chunk,) + width, dtype)
         X_s, P_s = jax.eval_shape(self.featurize, sds)
         if hull and P_s is None:
@@ -437,7 +661,11 @@ class DistributedScoringEngine:
         # without a hull stage s1/s2 stay zero — carry (and psum) scalars,
         # not a (p, p) dead weight the size of the Gram
         p = int(P_s.shape[1]) if (hull and P_s is not None) else 1
-        key = (chunk, cps, hull, D, p)
+        return D, p
+
+    def _pass_fns(self, chunk: int, cps: int, hull: bool, width, dtype, gram_dtype):
+        D, p = self._feature_shapes(chunk, hull, width, dtype)
+        key = ("two-pass", chunk, cps, hull, D, p, gram_dtype)
         if key not in self._fns:
             p1, p2 = make_sharded_pass_fns(
                 self.featurize,
@@ -449,8 +677,32 @@ class DistributedScoringEngine:
                 hull=hull,
                 D=D,
                 p=p,
+                gram_dtype=gram_dtype,
             )
             self._fns[key] = (jax.jit(p1), jax.jit(p2))
+        return self._fns[key]
+
+    def _onepass_fn(
+        self, chunk: int, cps: int, hull: bool, width, dtype, proj_size, sketch_size
+    ):
+        D, _ = self._feature_shapes(chunk, hull, width, dtype)
+        # same normalization as OnePassSketched.begin: Ω only when it shrinks
+        q = proj_size if (proj_size is not None and proj_size < D) else None
+        key = ("one-pass", chunk, cps, hull, D, q, sketch_size)
+        if key not in self._fns:
+            fn = make_sharded_onepass_fn(
+                self.featurize,
+                self.mesh,
+                self.axes,
+                chunk=chunk,
+                chunks_per_shard=cps,
+                rows_per_point=self.rows_per_point,
+                hull=hull,
+                D=D,
+                q=q,
+                sketch_size=sketch_size,
+            )
+            self._fns[key] = (jax.jit(fn), D)
         return self._fns[key]
 
     def _shard_put(self, x, row_sharded: bool = True):
@@ -463,6 +715,66 @@ class DistributedScoringEngine:
 
     # ---------------------------------------------------------------- public
 
+    def stage_rows(self, blocks, n: int, width: int, dtype=jnp.float32):
+        """Zero-copy sharded staging of n feature rows from host blocks.
+
+        ``blocks`` iterates host arrays of shape (b_i, width) with Σb_i = n
+        (any block sizes; O(chunk) each keeps host RSS at O(chunk·width)).
+        Each block is split at shard boundaries and device_put straight to
+        its target device(s); the padded row-sharded (n_pad, width) global
+        array — the exact layout ``score`` uses — is assembled with
+        ``make_array_from_single_device_arrays`` without ever materializing
+        the (n, width) matrix on the host. Pass the result to
+        ``score(..., n_valid=n)``.
+
+        Single-process meshes only (every device must be addressable).
+        """
+        _, _, n_pad = self._shard_layout(n)
+        sharding = NamedSharding(self.mesh, P(_spec_el(self.axes), None))
+        dmap = sharding.devices_indices_map((n_pad, width))
+        # devices grouped by their row range (replicated non-data axes mean
+        # several devices can carry the same rows)
+        by_range: dict[tuple[int, int], list] = {}
+        for dev, idx in dmap.items():
+            lo, hi, _ = idx[0].indices(n_pad)
+            by_range.setdefault((lo, hi), []).append(dev)
+        pieces: dict = {dev: [] for dev in dmap}
+        off = 0
+        first_row = None
+        for block in blocks:
+            block = np.asarray(block, dtype)
+            if first_row is None and block.shape[0]:
+                first_row = block[:1].copy()
+            hi = off + block.shape[0]
+            for (rlo, rhi), devs in by_range.items():
+                a, b = max(off, rlo), min(hi, rhi)
+                if a < b:
+                    piece = block[a - off : b - off]
+                    for dev in devs:
+                        pieces[dev].append(jax.device_put(piece, dev))
+            off = hi
+        if off != n or first_row is None:
+            raise ValueError(f"stage_rows: blocks carried {off} rows, expected {n}")
+        shard_arrays = []
+        for dev, idx in dmap.items():
+            rlo, rhi, _ = idx[0].indices(n_pad)
+            have = sum(int(p.shape[0]) for p in pieces[dev])
+            want = rhi - rlo
+            if have < want:
+                # pad with copies of a REAL row, matching score()'s own
+                # padding: zeros could featurize to NaN (e.g. log features)
+                # and NaN·0 masking would poison the psum'd statistics
+                pieces[dev].append(
+                    jax.device_put(
+                        np.broadcast_to(first_row, (want - have, width)).copy(), dev
+                    )
+                )
+            ps = pieces[dev]
+            shard_arrays.append(ps[0] if len(ps) == 1 else jnp.concatenate(ps))
+        return jax.make_array_from_single_device_arrays(
+            (n_pad, width), sharding, shard_arrays
+        )
+
     def score(
         self,
         Y,
@@ -472,30 +784,81 @@ class DistributedScoringEngine:
         hull_k: int = 0,
         hull_key: jax.Array | None = None,
         ridge_reg: float = 1.0,
+        sketch_size: int = 0,
+        key: jax.Array | None = None,
+        strategy=None,
+        gram_dtype: str | None = None,
+        n_valid: int | None = None,
     ) -> ScoringResult:
-        """Score all n points on the mesh; same semantics as the single-host
-        ``ScoringEngine.score`` (minus ``sketch_size``)."""
+        """Score all n points on the mesh; same semantics (and the same pass
+        strategies) as the single-host ``ScoringEngine.score``.
+
+        ``n_valid``: pass when ``Y`` was pre-staged with ``stage_rows`` —
+        ``Y`` is then the already padded+sharded (n_pad, …) array and
+        ``n_valid`` the true row count.
+        """
         if method not in SCORE_METHODS:
             raise ValueError(f"unknown scoring method: {method}")
         if hull_k > 0 and hull_key is None:
             raise ValueError("hull_k > 0 requires hull_key")
-        Y = jnp.asarray(Y)
-        n = int(Y.shape[0])
-        if n == 0:
-            raise ValueError("cannot score an empty dataset")
+        strat = resolve_strategy(
+            strategy,
+            sketch_size=sketch_size,
+            gram_dtype=gram_dtype or self.gram_dtype,
+        )
+        if strat.needs_key and key is None:
+            raise ValueError("sketch_size > 0 requires key")
+        if isinstance(strat, TwoPassSketched):
+            raise NotImplementedError(
+                "TwoPassSketched is not sharded (a sketch caller has already "
+                "accepted constant-factor scores — use the one-pass strategy)"
+            )
+        f64 = isinstance(strat, TwoPassExact) and strat.gram_dtype == "float64"
+        if f64 and not jax.config.jax_enable_x64:
+            raise ValueError(
+                "gram_dtype='float64' on the sharded engine carries the Gram "
+                "in f64 inside the mesh and requires x64 mode "
+                "(JAX_ENABLE_X64=1); the single-host engine accumulates "
+                "host-side instead and needs no flag"
+            )
         r = self.rows_per_point
         hull = hull_k > 0
 
-        chunk, cps, n_pad = self._shard_layout(n)
-        pad = n_pad - n
-        # pad with copies of row 0 (valid data — no NaN risk through the
-        # featurizer); masks keep pads out of every statistic
-        if pad:
-            Y_pad = jnp.concatenate(
-                [Y, jnp.broadcast_to(Y[:1], (pad,) + Y.shape[1:])], axis=0
+        if hull and int(np.shape(Y)[0]) * r > np.iinfo(np.int32).max:
+            # the running-extreme carries hold global P-row ids as int32 (a
+            # stable scan-carry dtype with or without x64); refuse loudly
+            # instead of wrapping silently at pod-extreme n·r
+            raise ValueError(
+                "hull selection over more than 2^31-1 derivative rows would "
+                "overflow the int32 hull-index carries; shard the input or "
+                "reduce rows_per_point"
             )
-        else:
+        if n_valid is not None:
+            n = int(n_valid)
+            chunk, cps, n_pad = self._shard_layout(n)
+            if int(Y.shape[0]) != n_pad:
+                raise ValueError(
+                    f"staged input has {Y.shape[0]} rows but the layout for "
+                    f"n={n} needs {n_pad} (use stage_rows)"
+                )
+            pad = n_pad - n
             Y_pad = Y
+        else:
+            Y = jnp.asarray(Y)
+            n = int(Y.shape[0])
+            chunk, cps, n_pad = self._shard_layout(n)
+            pad = n_pad - n
+            # pad with copies of row 0 (valid data — no NaN risk through the
+            # featurizer); masks keep pads out of every statistic
+            if pad:
+                Y_pad = jnp.concatenate(
+                    [Y, jnp.broadcast_to(Y[:1], (pad,) + Y.shape[1:])], axis=0
+                )
+            else:
+                Y_pad = Y
+            Y_pad = self._shard_put(Y_pad)
+        if n == 0:
+            raise ValueError("cannot score an empty dataset")
         mask = (jnp.arange(n_pad) < n).astype(jnp.float32)
         sw = (
             jnp.sqrt(jnp.asarray(weights, jnp.float32))
@@ -504,11 +867,23 @@ class DistributedScoringEngine:
         )
         swm = jnp.concatenate([sw, jnp.zeros((pad,), jnp.float32)]) if pad else sw
 
-        Y_pad = self._shard_put(Y_pad)
         mask = self._shard_put(mask)
         swm = self._shard_put(swm)
+        shards = _num_shards(self.mesh, self.axes)
 
-        pass1, pass2 = self._pass_fns(chunk, cps, hull, Y.shape[1:], Y_pad.dtype)
+        if isinstance(strat, OnePassSketched):
+            u, G_host, hull_rows = self._score_one_pass(
+                strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps,
+                method, ridge_reg, hull_k, hull_key,
+            )
+            return finalize_scoring(
+                n, cps * shards, method, G_host, u, hull_rows, r
+            )
+
+        pass1, pass2 = self._pass_fns(
+            chunk, cps, hull, Y_pad.shape[1:], Y_pad.dtype,
+            strat.gram_dtype,
+        )
 
         # ---- pass 1 (sharded, chunked): one fused psum of (G, Σp, Σppᵀ)
         G, s1, s2 = pass1(Y_pad, swm, mask)
@@ -539,8 +914,63 @@ class DistributedScoringEngine:
             u_pad = pass2(Y_pad, swm, V, inv)
 
         u = host_gather(u_pad)[:n]
-        shards = _num_shards(self.mesh, self.axes)
         return finalize_scoring(n, cps * shards, method, G_host, u, hull_rows, r)
+
+    def _score_one_pass(
+        self, strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps,
+        method, ridge_reg, hull_k, hull_key,
+    ):
+        """The sharded one-pass sweep: ONE data pass, ONE fused state psum."""
+        r = self.rows_per_point
+        hull = hull_k > 0
+        fn, D = self._onepass_fn(
+            chunk, cps, hull, Y_pad.shape[1:], Y_pad.dtype,
+            strat.proj_size, strat.sketch_size,
+        )
+        # the global CountSketch plan — identical draws to the single-host
+        # engine, so the two layouts emit the same estimates; pad entries
+        # carry zero sign (and zero √w) so they cannot touch the sketch
+        rows, signs, omega = strat.begin(n, D, key)
+        pad = n_pad - n
+        if pad:
+            rows = jnp.concatenate([rows, jnp.zeros((pad,), rows.dtype)])
+            signs = jnp.concatenate([signs, jnp.zeros((pad,), signs.dtype)])
+        rows = self._shard_put(rows)
+        signs = self._shard_put(signs)
+        extras = ()
+        if omega is not None:
+            extras = extras + (omega,)
+        dirs1 = None
+        if hull:
+            dirs1 = jnp.asarray(
+                upfront_directions(hull_key, self._p_rows_width(chunk, Y_pad),
+                                   hull_k, self.hull_oversample)
+            )
+            extras = extras + (dirs1,)
+
+        outs = fn(Y_pad, swm, mask, rows, signs, *extras)
+        z, SX = outs[:2]
+        SX_host = host_gather(SX)
+        SXp = SX_host if omega is None else SX_host @ np.asarray(omega)
+        V, inv = projection_from_gram(SXp.T @ SXp, method, ridge_reg)
+        u = host_gather(_z_leverage_jit(z, V, inv))[:n]
+        hull_rows = None
+        if hull:
+            gimax, gimin = outs[2], outs[3]
+            cand = np.concatenate(
+                [host_gather(gimax), host_gather(gimin)]
+            ).astype(np.int64)
+            hull_rows = stable_first_unique(cand)
+        G_host = SX_host.T @ SX_host  # reported Gram: the full sketched Gram
+        return u, G_host, hull_rows
+
+    def _p_rows_width(self, chunk, Y_pad) -> int:
+        """Width p of the featurizer's P rows (for the upfront net)."""
+        sds = jax.ShapeDtypeStruct((chunk,) + Y_pad.shape[1:], Y_pad.dtype)
+        _, P_s = jax.eval_shape(self.featurize, sds)
+        if P_s is None:
+            raise ValueError("hull_k > 0 requires a featurize that returns P rows")
+        return int(P_s.shape[1])
 
 
 def distributed_build_coreset(
@@ -554,13 +984,15 @@ def distributed_build_coreset(
     key: jax.Array,
     axis="data",
     alpha: float = 0.8,
+    sketch_size: int = 0,
     chunk_size: int | None = DEFAULT_CHUNK,
 ):
     """Paper Algorithm 1 with the pre-sampling phase fully distributed.
 
     Same contract (and same key-split structure) as ``coreset.build_coreset``
     — returns a ``CoresetResult`` — but scoring runs on ``mesh`` through the
-    ``DistributedScoringEngine``.
+    ``DistributedScoringEngine``. ``sketch_size > 0`` routes through the
+    fused one-pass sketched sweep (each row featurized exactly once).
     """
     from repro.core.coreset import CoresetResult, coreset_from_scoring
 
@@ -574,15 +1006,19 @@ def distributed_build_coreset(
         w = np.full(k, n / k)
         return CoresetResult(idx, w, None, method, time.perf_counter() - t0)
 
-    # same 3-way split as build_coreset (k_score reserved for the sketched
-    # pass-1 follow-on) so the two paths draw identical samples when their
-    # scores agree
-    _k_score, k_hull_key, k_draw = jax.random.split(key, 3)
+    # same 3-way split as build_coreset (k_score feeds the sketch plan) so
+    # the two paths draw identical samples when their scores agree
+    k_score, k_hull_key, k_draw = jax.random.split(key, 3)
     k_hull = k - int(np.floor(alpha * k)) if method == "l2-hull" else 0
     engine = DistributedScoringEngine(
         cfg, scaler, mesh=mesh, axis=axis, chunk_size=chunk_size
     )
     res = engine.score(
-        jnp.asarray(Y), method=method, hull_k=k_hull, hull_key=k_hull_key
+        jnp.asarray(Y),
+        method=method,
+        hull_k=k_hull,
+        hull_key=k_hull_key,
+        sketch_size=sketch_size,
+        key=k_score if sketch_size > 0 else None,
     )
     return coreset_from_scoring(res, n, k, method, alpha, k_draw, t0)

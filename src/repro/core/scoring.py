@@ -1,50 +1,76 @@
-"""Chunked two-pass scoring engine for Algorithm 1's pre-sampling phase.
+"""Pass-strategy scoring core for Algorithm 1's pre-sampling phase.
 
 The paper's construction must score *all n* points before it ever samples:
 leverage scores u_i of the flattened basis matrix X̃ ∈ R^{n×Jd}, plus the
 directional hull extremes of the derivative rows {a'_ij} ⊂ R^d that feed the
-ε-kernel augmentation. The naive realization materializes the full (n, J, d)
-basis tensor (twice — once for scores, once for the hull) and computes the
-Gram in one dense shot, so peak memory grows linearly in n. This engine
-replaces that with a streaming pipeline whose peak memory is O(chunk·J·d):
+ε-kernel augmentation. ``ScoringEngine`` streams row-chunks of Y through a
+fused featurize and keeps peak memory at O(chunk·J·d) — but *how many times*
+each row is streamed, and what small sufficient statistic is carried across
+chunks, is owned by a pluggable **pass strategy**.
 
-  Pass 1 — statistics. Stream row-chunks of Y through the fused Bernstein
-    basis+derivative evaluation and accumulate three small sufficient
-    statistics: the Gram G = X̃ᵀX̃ ∈ R^{Jd×Jd} (via the tiled Pallas
-    ``gram_kernel`` when compiled on TPU, the XLA oracle elsewhere — see
-    ``repro.kernels.gram.ops.gram_matrix``), and the first/second moments of
-    the derivative rows P (Σp, Σppᵀ) from which the hull direction net's PCA
-    axes are derived. With ``sketch_size > 0`` the Gram is replaced by the
-    CountSketch Gram (SX)ᵀ(SX) (Woodruff 2014 Thm 2.13), still accumulated
-    chunk-by-chunk. Everything kept across chunks is O((Jd)²).
+Pass-strategy contract (every strategy implements)
+--------------------------------------------------
+  state    — the cross-chunk carry, a jax pytree of O((Jd)²)-ish arrays
+             (``init_state``). On the sharded engine the whole state tuple
+             joins the ONE fused psum at the end of the shard-local scan, so
+             anything a strategy carries must be sum-reducible across shards:
+             ``TwoPassExact`` carries (G = X̃ᵀX̃, Σp, Σppᵀ),
+             ``TwoPassSketched`` carries (SX = CountSketch(X̃), Σp, Σppᵀ),
+             ``OnePassSketched`` carries just SX (its direction net is fixed
+             upfront, so the moments would be dead weight).
+  update   — per-chunk accumulation (``update(state, X, P, sw, plan_slice)``),
+             pure and traceable (it runs inside jit / lax.scan / shard_map
+             bodies). May additionally *emit* a per-row block: the one-pass
+             strategy returns z = (√w·X)Ω, the sketch-projected rows leverage
+             is later read off from.
+  finalize — ``gram``/``result_gram``/``moments`` read the accumulated state:
+             ``gram`` feeds the (tiny, host-side f64) eigh that produces the
+             leverage projection (V, w⁺); ``moments`` feed the hull direction
+             net. The chunk loop, hull running-extreme reduction, and the
+             ``ScoringResult`` assembly live in the engine driver and are
+             written exactly once for all strategies and both engines.
 
-  Between passes — tiny host-side algebra: one eigh of G gives the projection
-    (V, w⁺) such that u_i = ‖X̃_i V‖²_{w⁺}; the direction net (random +
-    ±principal axes, exactly ``hull.hull_directions``) is built from the
-    accumulated P moments.
-
-  Pass 2 — scores. Re-stream the same chunks to emit leverage scores
-    u_i = Σ_m (X̃_i V)²_m · w⁺_m and, fused into the same sweep, the running
-    per-direction max/min of ⟨p, v⟩ with first-occurrence argmax semantics —
-    the chunked equivalent of ``hull.epsilon_kernel_indices``. No (n, Jd) or
-    (n·J, m) array is ever materialized.
-
-When the input fits in a single chunk the engine takes a dense fast path that
-evaluates the basis exactly once and shares it between both "passes" (the
-recompute-over-store tradeoff only pays off once n exceeds the chunk size).
-
-Weighted inputs (Merge & Reduce streaming buckets) scale X̃ rows by √w —
-leverage of the weighted matrix — while the hull operates on the raw
-derivative rows, matching the batch construction.
+Strategies
+----------
+  ``TwoPassExact``   — pass 1 accumulates the exact Gram (plus hull moments),
+      pass 2 re-streams the chunks to emit leverage and the fused directional
+      hull extremes. ``gram_dtype="float64"`` accumulates the Gram host-side
+      in f64 so degree-6 Bernstein bases no longer sit at the f32 rcond
+      cutoff (the sharded engine instead casts inside the scan body, which
+      requires x64 mode).
+  ``TwoPassSketched`` — pass 1 accumulates the CountSketch Gram (SX)ᵀ(SX)
+      (Woodruff 2014 Thm 2.13); pass 2 re-streams as above. Constant-factor
+      leverage at O(nnz) pass-1 cost, but still two data sweeps.
+  ``OnePassSketched`` — TRUE one-pass: the single sweep accumulates the row
+      CountSketch SX, tracks the directional hull extremes against an
+      upfront direction net, and emits the sketch-projected row blocks
+      z_c = (√w·X_c)Ω. Leverage is finalized from z against the sketched
+      Gram — u_i = z_i ((SXΩ)ᵀSXΩ)⁺ z_iᵀ — without ever touching a row
+      twice, which is the shape insertion-only streams (Merge & Reduce
+      blocks) and one-shot sharded I/O need. The saved sweep is bought with
+      retention: the z blocks are O(n·q) device memory (q = Jd with
+      ``proj_size=None``, where Ω = identity and the estimate reproduces the
+      classic sketched leverage ‖X̃_i R⁻¹‖² exactly; ``proj_size=q < Jd``
+      compresses retention at a rank-truncation cost). Callers who need
+      O(chunk) peak memory more than they need the single sweep should ask
+      for ``strategy="two-pass-sketched"`` instead. Because the direction
+      net cannot see the data covariance before the sweep, its ±principal
+      axes are replaced by the coordinate axes (an identity covariance prior
+      through the same ``hull_directions``); the random directions are drawn
+      identically to the two-pass net.
 
 The per-chunk math (``pass1_update``, ``leverage_chunk``,
 ``hull_chunk_extremes``) and the between-pass host algebra
 (``projection_from_gram``, ``directions_from_moments``, ``finalize_scoring``)
 are module-level functions so the sharded realization
-(``repro.core.distributed_coreset.DistributedScoringEngine`` — the chunk loop
-inside a shard_map body, pass-1 state psum'd once) reuses them verbatim; the
-remaining follow-on (see ROADMAP) is a sketched pass 1 that avoids the second
-data sweep entirely.
+(``repro.core.distributed_coreset.DistributedScoringEngine`` — the same
+strategies driven inside a shard_map body, state psum'd once) reuses them
+verbatim.
+
+When the input fits in a single chunk the engine featurizes exactly once and
+shares the block between sweeps. Weighted inputs (Merge & Reduce streaming
+buckets) scale X̃ rows by √w — leverage of the weighted matrix — while the
+hull operates on the raw derivative rows, matching the batch construction.
 """
 from __future__ import annotations
 
@@ -63,6 +89,14 @@ __all__ = [
     "ScoringResult",
     "score_chunks",
     "gram_projection",
+    "PassStrategy",
+    "TwoPassExact",
+    "TwoPassSketched",
+    "OnePassSketched",
+    "resolve_strategy",
+    "sketch_plan",
+    "upfront_directions",
+    "RunningExtremes",
     "pass1_update",
     "leverage_chunk",
     "hull_chunk_extremes",
@@ -75,6 +109,7 @@ __all__ = [
 DEFAULT_CHUNK = 65_536
 
 SCORE_METHODS = ("l2-only", "l2-hull", "ridge-lss", "root-l2")
+GRAM_DTYPES = ("float32", "float64")
 
 
 def _spectrum_inverse(w, *, ridge_reg: float, rcond: float, xp):
@@ -168,14 +203,21 @@ def _mctm_featurize(cfg, scaler) -> Callable[[jax.Array], tuple[jax.Array, jax.A
 # --------------------------------------------------------------------------
 
 
-def pass1_update(G, s1, s2, X, P, sw):
+def pass1_update(G, s1, s2, X, P, sw, gram_dtype: str | None = None):
     """Pass-1 accumulation: Gram of √w-scaled rows + P first/second moments.
 
     Pure (traceable anywhere — jit, scan bodies, shard_map). ``P is None``
-    skips the hull moments.
+    skips the hull moments. ``gram_dtype="float64"`` casts the Gram update
+    to f64 (requires an f64 carry and x64 mode; straight XᵀX — the Pallas
+    gram kernel is f32-only); this is the sharded engine's f64 carry, the
+    single-host ``TwoPassExact`` accumulates host-side instead.
     """
     Xw = X * sw[:, None]
-    G = G + gram_matrix(Xw)
+    if gram_dtype == "float64":
+        Xw64 = Xw.astype(jnp.float64)
+        G = G + Xw64.T @ Xw64
+    else:
+        G = G + gram_matrix(Xw)
     if P is not None:
         s1 = s1 + jnp.sum(P, axis=0)
         s2 = s2 + P.T @ P
@@ -212,20 +254,51 @@ def hull_chunk_extremes(P, dirs, mask=None):
     return vmax, imax, vmin, imin
 
 
-_acc_stats = jax.jit(pass1_update)
-_leverage_chunk = jax.jit(leverage_chunk)
-_hull_chunk = jax.jit(hull_chunk_extremes)
+def _moments_update(s1, s2, P):
+    """Hull-moment half of ``pass1_update`` (the f64-Gram host path still
+    accumulates moments on device in f32). Pure."""
+    return s1 + jnp.sum(P, axis=0), s2 + P.T @ P
 
 
-@jax.jit
-def _acc_sketch(SX, s1, s2, X, P, sw, rows, signs):
-    """Pass-1 CountSketch accumulation: SX += S_chunk · (√w·X) chunk."""
+def _sketch_update(SX, s1, s2, X, P, sw, rows, signs):
+    """CountSketch accumulation: SX += S_chunk · (√w·X) chunk. Pure."""
     Xw = X * sw[:, None]
     SX = SX.at[rows].add(signs[:, None] * Xw)
     if P is not None:
-        s1 = s1 + jnp.sum(P, axis=0)
-        s2 = s2 + P.T @ P
+        s1, s2 = _moments_update(s1, s2, P)
     return SX, s1, s2
+
+
+def _weighted_project(X, sw, omega):
+    """z = (√w·X)Ω — the one-pass strategy's per-row emission (Ω=None → √w·X).
+    Pure."""
+    Xw = X * sw[:, None]
+    return Xw if omega is None else Xw @ omega
+
+
+def _z_leverage(z, V, inv):
+    """Leverage read-off from stored (already √w-scaled) row blocks. Pure."""
+    return jnp.sum(jnp.square(z @ V) * inv, axis=1)
+
+
+_acc_stats = jax.jit(pass1_update, static_argnames=("gram_dtype",))
+_acc_moments = jax.jit(_moments_update)
+_acc_sketch = jax.jit(_sketch_update)
+_leverage_chunk = jax.jit(leverage_chunk)
+_hull_chunk = jax.jit(hull_chunk_extremes)
+_project_rows = jax.jit(_weighted_project)
+_z_leverage_jit = jax.jit(_z_leverage)
+_weighted_rows = jax.jit(lambda X, sw: X * sw[:, None])
+
+
+def sketch_plan(key, n: int, sketch_size: int):
+    """CountSketch rows/signs for all n rows — identical draws to
+    ``leverage.sketched_leverage`` so the strategies and the standalone
+    baseline are comparable row for row."""
+    k1, k2 = jax.random.split(key)
+    rows = jax.random.randint(k1, (n,), 0, sketch_size)
+    signs = jax.random.rademacher(k2, (n,), dtype=jnp.float32)
+    return rows, signs
 
 
 # --------------------------------------------------------------------------
@@ -263,6 +336,49 @@ def directions_from_moments(
     return hull_directions(hull_key, cov, m).astype(np.float32)
 
 
+def upfront_directions(
+    hull_key, p: int, hull_k: int, oversample: int = 4
+) -> np.ndarray:
+    """Direction net for one-pass strategies — buildable BEFORE any data is
+    seen. Same ``hull_directions`` construction and identical random draws as
+    the two-pass net, but with an identity covariance prior, so the
+    ±principal axes degenerate to the coordinate axes of the P rows.
+    """
+    m = max(oversample * hull_k, 8)
+    return hull_directions(hull_key, np.eye(p), m).astype(np.float32)
+
+
+class RunningExtremes:
+    """Host-side running (max, argmax, min, argmin) per direction across
+    chunks. Strict comparisons keep the first-occurrence (lowest-row)
+    tie-break of a dense ``np.argmax`` over the full score matrix — the same
+    reduction the sharded engine performs across shards via all_gather.
+    """
+
+    def __init__(self, m: int):
+        self.best_max = np.full(m, -np.inf, np.float32)
+        self.best_min = np.full(m, np.inf, np.float32)
+        self.best_imax = np.zeros(m, np.int64)
+        self.best_imin = np.zeros(m, np.int64)
+
+    def update(self, vmax, imax, vmin, imin, offset: int) -> None:
+        # widen the device int32 argmax ids BEFORE adding the chunk offset:
+        # n·rows_per_point may exceed int32 on the single-host path
+        vmax, imax = np.asarray(vmax), np.asarray(imax, np.int64) + offset
+        vmin, imin = np.asarray(vmin), np.asarray(imin, np.int64) + offset
+        upd = vmax > self.best_max
+        self.best_max[upd], self.best_imax[upd] = vmax[upd], imax[upd]
+        upd = vmin < self.best_min
+        self.best_min[upd], self.best_imin[upd] = vmin[upd], imin[upd]
+
+    def candidates(self) -> np.ndarray:
+        """ALL distinct extremal row ids, first-occurrence order (≤ 2m):
+        truncating to hull_k rows here would discard genuine extremal points
+        after the row → point dedup when rows_per_point > 1."""
+        cand = np.concatenate([self.best_imax, self.best_imin])
+        return stable_first_unique(cand)
+
+
 def finalize_scoring(
     n: int, n_chunks: int, method: str, G, u, hull_rows, rows_per_point: int
 ) -> ScoringResult:
@@ -288,8 +404,215 @@ def finalize_scoring(
     )
 
 
+# --------------------------------------------------------------------------
+# pass strategies
+# --------------------------------------------------------------------------
+
+
+class PassStrategy:
+    """Base contract — see the module doc. Subclasses set ``one_pass`` /
+    ``needs_key`` and implement ``init_state`` / ``update`` / ``gram``;
+    ``result_gram`` defaults to ``gram`` and ``moments`` to the (s1, s2)
+    slots of the state tuple."""
+
+    one_pass = False
+    needs_key = False
+    n_data_passes = 2
+
+    def begin(self, n: int, D: int, key):
+        """Per-call plan (sketch rows/signs, Ω). ``None`` when stateless."""
+        return None
+
+    def slice_plan(self, plan, lo: int, hi: int) -> tuple:
+        """The per-chunk slice of the plan fed to ``update``."""
+        return ()
+
+    def moments(self, state):
+        return state[1], state[2]
+
+    def result_gram(self, state, plan=None):
+        return self.gram(state, plan)
+
+    # init_state / update / gram: subclass responsibility
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoPassExact(PassStrategy):
+    """Exact Gram accumulation; re-streams for the leverage/extremes pass.
+
+    ``gram_dtype="float64"`` accumulates G host-side in f64 (order-independent
+    to ~1e-15, so chunk/shard layouts agree even when genuine degree-6
+    eigenvalues sit at the f32 rcond cutoff). The moments stay f32 on device —
+    the direction net only needs the covariance's coarse shape.
+    """
+
+    gram_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.gram_dtype not in GRAM_DTYPES:
+            raise ValueError(f"gram_dtype must be one of {GRAM_DTYPES}")
+
+    def init_state(self, D: int, p: int | None):
+        if self.gram_dtype == "float64":
+            G = np.zeros((D, D), np.float64)
+        else:
+            G = jnp.zeros((D, D), jnp.float32)
+        if p is None:
+            return (G, None, None)
+        return (G, jnp.zeros((p,), jnp.float32), jnp.zeros((p, p), jnp.float32))
+
+    def update(self, state, X, P, sw, plan_slice=()):
+        G, s1, s2 = state
+        if self.gram_dtype == "float64":
+            Xw = np.asarray(_weighted_rows(X, sw), np.float64)
+            G = G + Xw.T @ Xw
+            if P is not None:
+                s1, s2 = _acc_moments(s1, s2, P)
+            return (G, s1, s2), None
+        return _acc_stats(G, s1, s2, X, P, sw), None
+
+    def gram(self, state, plan=None):
+        return state[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class _SketchedBase(PassStrategy):
+    """Shared CountSketch plan/state for the sketched strategies."""
+
+    sketch_size: int = 0
+
+    needs_key = True
+
+    def __post_init__(self):
+        if self.sketch_size <= 0:
+            raise ValueError("sketched strategies require sketch_size > 0")
+
+    def begin(self, n: int, D: int, key):
+        return sketch_plan(key, n, self.sketch_size)
+
+    def slice_plan(self, plan, lo: int, hi: int) -> tuple:
+        return (plan[0][lo:hi], plan[1][lo:hi])
+
+    def init_state(self, D: int, p: int | None):
+        SX = jnp.zeros((self.sketch_size, D), jnp.float32)
+        if p is None:
+            return (SX, None, None)
+        return (SX, jnp.zeros((p,), jnp.float32), jnp.zeros((p, p), jnp.float32))
+
+    def gram(self, state, plan=None):
+        return state[0].T @ state[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoPassSketched(_SketchedBase):
+    """CountSketch Gram in pass 1; still re-streams for pass 2 (the engine's
+    pre-refactor ``sketch_size`` behavior, kept as an explicit strategy)."""
+
+    def update(self, state, X, P, sw, plan_slice=()):
+        rows, signs = plan_slice
+        return _acc_sketch(state[0], state[1], state[2], X, P, sw, rows, signs), None
+
+
+@dataclasses.dataclass(frozen=True)
+class OnePassSketched(_SketchedBase):
+    """True one-pass sketched scoring — see the module doc.
+
+    ``proj_size=None`` stores the √w-scaled rows themselves (Ω = identity):
+    leverage is then exactly the classic sketched estimate ‖X̃_i R⁻¹‖², at
+    O(n·Jd) retained memory. ``proj_size=q < Jd`` right-projects the retained
+    rows through a fixed Gaussian Ω (drawn from the same key), shrinking
+    retention to O(n·q); leverage of XΩ equals leverage of X whenever q ≥
+    rank(X) (rank-preserving right-multiplication), and degrades gracefully
+    below.
+    """
+
+    proj_size: int | None = None
+
+    one_pass = True
+    n_data_passes = 1
+
+    def begin(self, n: int, D: int, key):
+        rows, signs = sketch_plan(key, n, self.sketch_size)
+        omega = None
+        if self.proj_size is not None and self.proj_size < D:
+            ok = jax.random.fold_in(key, 0x0E60)
+            omega = jax.random.normal(
+                ok, (D, self.proj_size), jnp.float32
+            ) / np.sqrt(self.proj_size)
+        return (rows, signs, omega)
+
+    def slice_plan(self, plan, lo: int, hi: int) -> tuple:
+        return (plan[0][lo:hi], plan[1][lo:hi], plan[2])
+
+    def init_state(self, D: int, p: int | None = None):
+        # no (p, p) moment gram: the one-pass net is fixed upfront, so the
+        # moments would be dead weight on the hot streaming path
+        return (jnp.zeros((self.sketch_size, D), jnp.float32), None, None)
+
+    def update(self, state, X, P, sw, plan_slice=()):
+        rows, signs, omega = plan_slice
+        state = _acc_sketch(state[0], state[1], state[2], X, None, sw, rows, signs)
+        return state, _project_rows(X, sw, omega)
+
+    def gram(self, state, plan=None):
+        """Projection Gram — (SXΩ)ᵀ(SXΩ), the Gram of the retained z rows."""
+        SX = state[0]
+        if plan is not None and plan[2] is not None:
+            SX = SX @ plan[2]
+        return SX.T @ SX
+
+    def result_gram(self, state, plan=None):
+        """Reported Gram stays the full (D, D) sketched Gram."""
+        return state[0].T @ state[0]
+
+
+_STRATEGY_NAMES = ("two-pass", "two-pass-sketched", "one-pass")
+
+
+def resolve_strategy(
+    strategy, *, sketch_size: int = 0, gram_dtype: str = "float32"
+) -> PassStrategy:
+    """Resolve the ``strategy=`` argument of ``score``.
+
+    ``None`` decides from ``sketch_size``: exact two-pass without a sketch,
+    ONE-pass sketched with one — a deliberate default change from the
+    pre-strategy engine (which re-streamed a second sweep even when
+    sketching): a sketch caller has already accepted constant-factor scores,
+    so the second data sweep buys nothing the retained z rows don't. Note
+    the trade: one-pass retains O(n·proj_size) sketch-projected rows and
+    draws its hull net from the upfront (identity-prior) directions — pass
+    ``strategy="two-pass-sketched"`` to keep the old O(chunk)-memory,
+    moment-net sketched behavior. Strings name the built-ins; instances
+    pass through untouched.
+    """
+    if isinstance(strategy, PassStrategy):
+        return strategy
+    if strategy is None:
+        if sketch_size > 0:
+            return OnePassSketched(sketch_size)
+        return TwoPassExact(gram_dtype)
+    if strategy == "two-pass":
+        return TwoPassExact(gram_dtype)
+    if strategy == "two-pass-sketched":
+        return TwoPassSketched(sketch_size)
+    if strategy == "one-pass":
+        return OnePassSketched(sketch_size)
+    raise ValueError(
+        f"unknown pass strategy {strategy!r} (expected one of {_STRATEGY_NAMES} "
+        "or a PassStrategy instance)"
+    )
+
+
+# --------------------------------------------------------------------------
+# the engine — one driver for every strategy
+# --------------------------------------------------------------------------
+
+
 class ScoringEngine:
-    """Drives the pre-sampling phase of Algorithm 1 with O(chunk) memory.
+    """Drives the pre-sampling phase of Algorithm 1 with O(chunk) memory
+    (two-pass strategies; the one-pass strategy additionally retains the
+    O(n·proj_size) sketch-projected rows it reads leverage from — see the
+    module doc).
 
     Parameters
     ----------
@@ -303,6 +626,8 @@ class ScoringEngine:
         dense fast path (single basis evaluation). ``None``/0 → never chunk.
     rows_per_point: how many P rows each input point contributes (J for the
         MCTM derivative rows, 1 for generic features).
+    gram_dtype: default Gram accumulation dtype for auto-resolved
+        ``TwoPassExact`` strategies ("float64" → host-side f64, see above).
     """
 
     def __init__(
@@ -314,18 +639,22 @@ class ScoringEngine:
         chunk_size: int | None = DEFAULT_CHUNK,
         rows_per_point: int | None = None,
         hull_oversample: int = 4,
+        gram_dtype: str = "float32",
     ):
         if featurize is None:
             if cfg is None or scaler is None:
                 raise ValueError("either (cfg, scaler) or featurize is required")
             featurize = _mctm_featurize(cfg, scaler)
             rows_per_point = cfg.J
+        if gram_dtype not in GRAM_DTYPES:
+            raise ValueError(f"gram_dtype must be one of {GRAM_DTYPES}")
         self.cfg = cfg
         self.scaler = scaler
         self.featurize = featurize
         self.chunk_size = int(chunk_size) if chunk_size else 0
         self.rows_per_point = int(rows_per_point or 1)
         self.hull_oversample = hull_oversample
+        self.gram_dtype = gram_dtype
 
     # ---------------------------------------------------------------- public
 
@@ -340,6 +669,8 @@ class ScoringEngine:
         ridge_reg: float = 1.0,
         hull_k: int = 0,
         hull_key: jax.Array | None = None,
+        strategy=None,
+        gram_dtype: str | None = None,
     ) -> ScoringResult:
         """Score all n points (and optionally select hull candidates).
 
@@ -349,6 +680,8 @@ class ScoringEngine:
         direction net and returns ALL distinct ε-kernel candidate rows in
         first-occurrence order (requires ``hull_key``); truncation to k
         points happens at coreset assembly (``coreset.exact_hull_points``).
+        ``strategy`` selects the pass strategy (name or instance — see
+        ``resolve_strategy``); the default is decided by ``sketch_size``.
         """
         if method not in SCORE_METHODS:
             raise ValueError(f"unknown scoring method: {method}")
@@ -358,37 +691,22 @@ class ScoringEngine:
             raise ValueError("cannot score an empty dataset")
         if hull_k > 0 and hull_key is None:
             raise ValueError("hull_k > 0 requires hull_key")
-        if sketch_size > 0 and key is None:
+        strat = resolve_strategy(
+            strategy,
+            sketch_size=sketch_size,
+            gram_dtype=gram_dtype or self.gram_dtype,
+        )
+        if strat.needs_key and key is None:
             raise ValueError("sketch_size > 0 requires key")
         sqrt_w = (
             jnp.sqrt(jnp.asarray(weights, jnp.float32)) if weights is not None else None
         )
-
         chunk = self.chunk_size if self.chunk_size > 0 else n
-        if n <= chunk:
-            out = self._score_dense(
-                Y, sqrt_w, n, method, key, sketch_size, ridge_reg, hull_k, hull_key
-            )
-        else:
-            out = self._score_chunked(
-                Y, sqrt_w, n, chunk, method, key, sketch_size, ridge_reg, hull_k, hull_key
-            )
-        return out
+        return self._drive(
+            strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key
+        )
 
     # --------------------------------------------------------------- helpers
-
-    def _sketch_plan(self, key, n: int, sketch_size: int):
-        """CountSketch rows/signs for all n rows — identical draws to
-        ``leverage.sketched_leverage`` so the two paths are comparable."""
-        k1, k2 = jax.random.split(key)
-        rows = jax.random.randint(k1, (n,), 0, sketch_size)
-        signs = jax.random.rademacher(k2, (n,), dtype=jnp.float32)
-        return rows, signs
-
-    def _finalize(self, n, n_chunks, method, G, u, hull_rows) -> ScoringResult:
-        return finalize_scoring(
-            n, n_chunks, method, G, u, hull_rows, self.rows_per_point
-        )
 
     def _projection(self, G, method, ridge_reg, rcond=1e-6):
         """See ``projection_from_gram``."""
@@ -400,129 +718,98 @@ class ScoringEngine:
             hull_key, s1, s2, n_rows, hull_k, self.hull_oversample
         )
 
-    # ----------------------------------------------------------- dense path
+    # ---------------------------------------------------------------- driver
 
-    def _score_dense(
-        self, Y, sqrt_w, n, method, key, sketch_size, ridge_reg, hull_k, hull_key
+    def _drive(
+        self, strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key
     ) -> ScoringResult:
-        X, P = self.featurize(Y)
-        if hull_k > 0 and P is None:
-            raise ValueError("hull_k > 0 requires a featurize that returns P rows")
-        if hull_k == 0:
-            P = None  # no hull stage → don't pay for the P moment gram
-        sw = sqrt_w if sqrt_w is not None else jnp.ones((n,), jnp.float32)
-        zeros = self._zero_stats(X, P)
-        if sketch_size > 0:
-            rows, signs = self._sketch_plan(key, n, sketch_size)
-            SX = jnp.zeros((sketch_size, X.shape[1]), jnp.float32)
-            SX, s1, s2 = _acc_sketch(SX, zeros[1], zeros[2], X, P, sw, rows, signs)
-            G = SX.T @ SX
-        else:
-            G, s1, s2 = _acc_stats(zeros[0], zeros[1], zeros[2], X, P, sw)
-        V, inv = self._projection(G, method, ridge_reg)
-        u = _leverage_chunk(X, sw, V, inv)
-        hull_rows = None
-        if hull_k > 0:
-            dirs = jnp.asarray(
-                self._directions(hull_key, s1, s2, int(P.shape[0]), hull_k)
-            )
-            bmax, imax, bmin, imin = _hull_chunk(P, dirs)
-            cand = np.concatenate([np.asarray(imax), np.asarray(imin)])
-            # keep EVERY distinct candidate row (first-occurrence order, ≤ 2m
-            # of them): truncating to hull_k rows here would discard genuine
-            # extremal points after the row → point dedup when r > 1
-            hull_rows = stable_first_unique(cand)
-        return self._finalize(n, 1, method, G, u, hull_rows)
+        """The shared chunk loop — ONE implementation for every strategy.
 
-    # --------------------------------------------------------- chunked path
-
-    def _score_chunked(
-        self, Y, sqrt_w, n, chunk, method, key, sketch_size, ridge_reg, hull_k, hull_key
-    ) -> ScoringResult:
+        Sweep 1 streams every chunk through ``strat.update`` (plus, for
+        one-pass strategies, the fused hull running-extreme tracking against
+        the upfront direction net). Two-pass strategies then re-stream the
+        same chunks for leverage emission + extremes against the moment-
+        derived net; one-pass strategies read leverage off the retained z
+        blocks instead. Dense inputs (one chunk) featurize exactly once and
+        share the block between sweeps.
+        """
         featurize = self.featurize
         r = self.rows_per_point
-        n_chunks = (n + chunk - 1) // chunk
+        want_hull = hull_k > 0
+        n_chunks = -(-n // chunk)
 
-        def chunk_iter():
-            for lo in range(0, n, chunk):
-                hi = min(lo + chunk, n)
-                Xc, Pc = featurize(Y[lo:hi])
-                if hull_k == 0:
-                    Pc = None  # no hull stage → skip the P moment gram
-                swc = (
-                    sqrt_w[lo:hi]
-                    if sqrt_w is not None
-                    else jnp.ones((hi - lo,), jnp.float32)
-                )
-                yield lo, hi, Xc, Pc, swc
+        def _prep(lo, hi):
+            Xc, Pc = featurize(Y[lo:hi])
+            if want_hull and Pc is None:
+                raise ValueError("hull_k > 0 requires a featurize that returns P rows")
+            if not want_hull:
+                Pc = None  # no hull stage → don't pay for the P moment gram
+            swc = (
+                sqrt_w[lo:hi]
+                if sqrt_w is not None
+                else jnp.ones((hi - lo,), jnp.float32)
+            )
+            return lo, hi, Xc, Pc, swc
 
-        # ---- pass 1: Gram (or sketch) + P moments, O((Jd)²) carried state
-        if sketch_size > 0:
-            rows_all, signs_all = self._sketch_plan(key, n, sketch_size)
-        G = s1 = s2 = SX = None
-        for lo, hi, Xc, Pc, swc in chunk_iter():
-            if G is None and SX is None:
-                if hull_k > 0 and Pc is None:
-                    raise ValueError(
-                        "hull_k > 0 requires a featurize that returns P rows"
+        if n_chunks == 1:
+            # dense fast path: featurize once, share the block between sweeps
+            cached = [_prep(0, n)]
+            chunks = lambda: iter(cached)  # noqa: E731
+        else:
+            chunks = lambda: (  # noqa: E731
+                _prep(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)
+            )
+
+        # ---- sweep 1: strategy accumulation (the only data sweep for
+        # one-pass strategies), O((Jd)²)-ish carried state
+        state = plan = None
+        z_blocks: list = []
+        ext = dirs1 = None
+        for lo, hi, Xc, Pc, swc in chunks():
+            if state is None:
+                D = int(Xc.shape[1])
+                p = int(Pc.shape[1]) if Pc is not None else None
+                plan = strat.begin(n, D, key)
+                state = strat.init_state(D, p)
+                if strat.one_pass and want_hull:
+                    dirs1 = jnp.asarray(
+                        upfront_directions(hull_key, p, hull_k, self.hull_oversample)
                     )
-                zG, zs1, zs2 = self._zero_stats(Xc, Pc)
-                if sketch_size > 0:
-                    SX = jnp.zeros((sketch_size, Xc.shape[1]), jnp.float32)
-                else:
-                    G = zG
-                s1, s2 = zs1, zs2
-            if sketch_size > 0:
-                SX, s1, s2 = _acc_sketch(
-                    SX, s1, s2, Xc, Pc, swc, rows_all[lo:hi], signs_all[lo:hi]
-                )
-            else:
-                G, s1, s2 = _acc_stats(G, s1, s2, Xc, Pc, swc)
-        if sketch_size > 0:
-            G = SX.T @ SX
+                    ext = RunningExtremes(int(dirs1.shape[0]))
+            state, z = strat.update(state, Xc, Pc, swc, strat.slice_plan(plan, lo, hi))
+            if z is not None:
+                z_blocks.append(z)
+            if ext is not None:
+                ext.update(*_hull_chunk(Pc, dirs1), offset=lo * r)
 
-        # ---- between passes: (Jd)² algebra only
-        V, inv = self._projection(G, method, ridge_reg)
-        dirs = None
-        if hull_k > 0:
-            dirs = jnp.asarray(self._directions(hull_key, s1, s2, n * r, hull_k))
-            m = int(dirs.shape[0])
-            best_max = np.full(m, -np.inf, np.float32)
-            best_min = np.full(m, np.inf, np.float32)
-            best_imax = np.zeros(m, np.int64)
-            best_imin = np.zeros(m, np.int64)
-
-        # ---- pass 2: leverage emission + fused directional hull extremes
-        u = np.empty(n, np.float32)
-        for lo, hi, Xc, Pc, swc in chunk_iter():
-            u[lo:hi] = np.asarray(_leverage_chunk(Xc, swc, V, inv))
-            if dirs is not None:
-                bmax, imax, bmin, imin = _hull_chunk(Pc, dirs)
-                bmax, imax = np.asarray(bmax), np.asarray(imax) + lo * r
-                bmin, imin = np.asarray(bmin), np.asarray(imin) + lo * r
-                # strict comparison keeps the first-occurrence argmax semantics
-                # of the dense np.argmax over the full score matrix
-                upd = bmax > best_max
-                best_max[upd], best_imax[upd] = bmax[upd], imax[upd]
-                upd = bmin < best_min
-                best_min[upd], best_imin[upd] = bmin[upd], imin[upd]
+        # ---- between sweeps: (Jd)²-scale host algebra only
+        V, inv = self._projection(strat.gram(state, plan), method, ridge_reg)
 
         hull_rows = None
-        if dirs is not None:
-            cand = np.concatenate([best_imax, best_imin])
-            hull_rows = stable_first_unique(cand)  # all candidates — see dense path
-        return self._finalize(n, n_chunks, method, G, u, hull_rows)
+        if strat.one_pass:
+            u = np.concatenate(
+                [np.asarray(_z_leverage_jit(z, V, inv)) for z in z_blocks]
+            )
+            if ext is not None:
+                hull_rows = ext.candidates()
+        else:
+            # ---- sweep 2: leverage emission + fused directional hull extremes
+            if want_hull:
+                s1, s2 = strat.moments(state)
+                dirs = jnp.asarray(
+                    self._directions(hull_key, s1, s2, n * r, hull_k)
+                )
+                ext = RunningExtremes(int(dirs.shape[0]))
+            u = np.empty(n, np.float32)
+            for lo, hi, Xc, Pc, swc in chunks():
+                u[lo:hi] = np.asarray(_leverage_chunk(Xc, swc, V, inv))
+                if ext is not None:
+                    ext.update(*_hull_chunk(Pc, dirs), offset=lo * r)
+            if ext is not None:
+                hull_rows = ext.candidates()
 
-    @staticmethod
-    def _zero_stats(X, P):
-        D = X.shape[1]
-        if P is None:
-            return jnp.zeros((D, D), jnp.float32), None, None
-        p = P.shape[1]
-        return (
-            jnp.zeros((D, D), jnp.float32),
-            jnp.zeros((p,), jnp.float32),
-            jnp.zeros((p, p), jnp.float32),
+        return finalize_scoring(
+            n, n_chunks, method, strat.result_gram(state, plan), u, hull_rows, r
         )
 
 

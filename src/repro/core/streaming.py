@@ -5,6 +5,11 @@ merged pairwise up a binary tree, keeping O(log(n/chunk)) buckets in memory.
 Reduction of a *weighted* set uses weighted leverage scores (rows scaled by
 √w leave the leverage definition intact) plus the hull augmentation, so the
 stream result matches the batch construction up to the usual (1±ε) slack.
+
+``sketch_size > 0`` routes every reduction through the engine's one-pass
+sketched strategy (``scoring.OnePassSketched``): each block is featurized
+and streamed exactly once per reduce — the pass shape merge-reduce assumes —
+at a constant-factor cost in score accuracy.
 """
 from __future__ import annotations
 
@@ -49,11 +54,13 @@ class MergeReduceCoreset:
         key: jax.Array,
         alpha: float = 0.8,
         chunk_size: int | None = DEFAULT_CHUNK,
+        sketch_size: int = 0,
     ):
         self.cfg = cfg
         self.scaler = scaler
         self.k = k
         self.alpha = alpha
+        self.sketch_size = sketch_size
         self._key = key
         self._buckets: list[WeightedSet | None] = []
         self.n_seen = 0
@@ -75,15 +82,24 @@ class MergeReduceCoreset:
             return ws
         k1 = int(np.floor(self.alpha * self.k))
         k2 = self.k - k1
-        draw_key, hull_key = jax.random.split(key)
-        # one engine sweep: √w-weighted leverage + hull extremes, chunked —
-        # merged buckets larger than chunk_size never materialize (m, J, d)
+        if self.sketch_size > 0:
+            # extra stream for the sketch plan; the split count differs from
+            # the exact path so existing exact streams replay unchanged
+            draw_key, hull_key, score_key = jax.random.split(key, 3)
+        else:
+            draw_key, hull_key = jax.random.split(key)
+            score_key = None
+        # ONE engine sweep: √w-weighted leverage + hull extremes, chunked —
+        # merged buckets larger than chunk_size never materialize (m, J, d),
+        # and with sketch_size > 0 each block row is streamed exactly once
         res = self._engine.score(
             jnp.asarray(ws.Y),
             method="l2-hull",
             weights=ws.weights,
             hull_k=k2,
             hull_key=hull_key,
+            sketch_size=self.sketch_size,
+            key=score_key,
         )
         scores = res.scores
         probs = scores / scores.sum()

@@ -87,11 +87,14 @@ class CoresetSelector:
     ``DistributedScoringEngine`` — featurize still runs host-side (it may be
     arbitrary Python), but the leverage/hull passes over the (n, D) feature
     rows execute row-sharded on the mesh with one pass-1 psum. ``axis``
-    selects the data axis (name or tuple of names). Note the mesh path
-    stages the (n, D) feature matrix once on the host before sharding — the
-    O(chunk) saving applies to the scoring passes, not the featurize staging
-    (zero-copy per-shard staging is a ROADMAP item); D here is the pooled
-    feature width, comparable to the raw example width.
+    selects the data axis (name or tuple of names). Featurize blocks are
+    staged straight onto their target devices (``stage_rows`` →
+    ``make_array_from_single_device_arrays``), so host RSS stays at
+    O(chunk·D) — the full (n, D) matrix only ever exists row-sharded in
+    device memory.
+
+    ``sketch_size``: score through the engines' one-pass sketched strategy
+    (constant-factor leverage, each feature row streamed exactly once).
     """
 
     def __init__(
@@ -103,6 +106,7 @@ class CoresetSelector:
         chunk_size: int | None = DEFAULT_CHUNK,
         mesh=None,
         axis="data",
+        sketch_size: int = 0,
     ):
         if method not in ("l2-hull", "l2-only", "uniform"):
             raise ValueError(method)
@@ -111,6 +115,7 @@ class CoresetSelector:
         self.method = method
         self.chunk_size = chunk_size
         self.mesh = mesh
+        self.sketch_size = sketch_size
 
         def _feat(Yc):
             F = jnp.asarray(self.featurize(np.asarray(Yc)), jnp.float32)
@@ -136,16 +141,26 @@ class CoresetSelector:
                 featurize=_feat, chunk_size=chunk_size, rows_per_point=1
             )
 
-    def _features_host(self, examples: np.ndarray) -> jnp.ndarray:
-        """Chunked host-side featurize for the mesh path (featurize may be
-        arbitrary Python — it cannot run inside shard_map)."""
+    def _stage_features(self, examples: np.ndarray):
+        """Zero-copy sharded staging for the mesh path: featurize blocks of
+        ≤ chunk rows go straight to their target devices (featurize may be
+        arbitrary Python — it cannot run inside shard_map), so the host never
+        holds more than O(chunk·D) of features at once."""
         n = examples.shape[0]
         chunk = self.chunk_size or n
-        blocks = [
-            np.asarray(self.featurize(examples[lo : min(lo + chunk, n)]))
-            for lo in range(0, n, chunk)
-        ]
-        return jnp.asarray(np.concatenate(blocks, axis=0), jnp.float32)
+
+        def blocks():
+            for lo in range(0, n, chunk):
+                yield np.asarray(
+                    self.featurize(examples[lo : min(lo + chunk, n)]), np.float32
+                )
+
+        it = blocks()
+        first = next(it)
+        width = int(first.shape[1])
+        import itertools
+
+        return self._engine.stage_rows(itertools.chain([first], it), n, width)
 
     def select(self, examples: np.ndarray, k: int, key: jax.Array) -> WeightedSubset:
         n = examples.shape[0]
@@ -156,11 +171,26 @@ class CoresetSelector:
 
         k1 = int(np.floor(self.alpha * k)) if self.method == "l2-hull" else k
         k2 = k - k1 if self.method == "l2-hull" else 0
-        k_draw, k_hull = jax.random.split(key)
-        data = self._features_host(examples) if self.mesh is not None else examples
-        res = self._engine.score(
-            data, method="l2-only", hull_k=k2, hull_key=k_hull
+        if self.sketch_size > 0:
+            # extra stream for the sketch plan; exact selection keeps the old
+            # 2-way split so existing pipelines replay unchanged
+            k_draw, k_hull, k_score = jax.random.split(key, 3)
+        else:
+            k_draw, k_hull = jax.random.split(key)
+            k_score = None
+        score_kw = dict(
+            method="l2-only",
+            hull_k=k2,
+            hull_key=k_hull,
+            sketch_size=self.sketch_size,
+            key=k_score,
         )
+        if self.mesh is not None:
+            data = self._stage_features(examples)
+            score_kw["n_valid"] = n
+        else:
+            data = examples
+        res = self._engine.score(data, **score_kw)
         probs = res.scores / res.scores.sum()
         idx = np.asarray(
             jax.random.choice(k_draw, n, shape=(k1,), replace=True, p=jnp.asarray(probs))

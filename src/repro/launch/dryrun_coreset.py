@@ -9,12 +9,15 @@ production mesh. Four variants:
               (what a straight port of the single-node algorithm does)
   psum      — the shard_map formulation: per-shard Gram, one (dJ)² psum,
               local projections (repro.core.distributed_coreset)
-  sketch    — CountSketch to 4·dJ rows per shard before the Gram psum
-              (Woodruff Thm 2.13 path; least FLOPs, same collective)
-  engine    — the DistributedScoringEngine pass structure: the chunk loop
-              runs INSIDE the shard body (lax.scan over per-shard chunks),
-              one fused pass-1 psum, chunked pass-2 leverage emission —
-              per-chip peak O(chunk·D) instead of O(per_shard·D)
+  sketch    — the engine's ONE-PASS sketched sweep (make_sharded_onepass_fn,
+              the sharded OnePassSketched strategy): scan over per-shard
+              chunks accumulating the row CountSketch, one fused state psum,
+              leverage read off the retained rows — each row touched once
+              (Woodruff Thm 2.13 path; least FLOPs AND least I/O)
+  engine    — the DistributedScoringEngine two-pass structure: the chunk
+              loop runs INSIDE the shard body (lax.scan over per-shard
+              chunks), one fused pass-1 psum, chunked pass-2 leverage
+              emission — per-chip peak O(chunk·D) instead of O(per_shard·D)
 
 Writes results/dryrun/coreset__score__<mesh>__opt-<variant>.json — the
 paper-representative §Perf cell.
@@ -29,7 +32,10 @@ import numpy as np
 from repro.utils.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed_coreset import make_sharded_pass_fns
+from repro.core.distributed_coreset import (
+    make_sharded_onepass_fn,
+    make_sharded_pass_fns,
+)
 from repro.core.leverage import leverage_from_gram
 from repro.core.scoring import gram_projection
 from repro.launch.mesh import data_axes, make_production_mesh
@@ -69,28 +75,40 @@ def score_fn(variant: str, mesh, n: int, D: int, sketch: int = 0, chunk: int = 4
         return fn, (x_shard,), (X_sds,)
 
     if variant == "sketch":
-        rows_sds = jax.ShapeDtypeStruct((n,), jnp.int32)
-        signs_sds = jax.ShapeDtypeStruct((n,), jnp.float32)
-
-        def body(xs, rows, signs):
-            SX = jnp.zeros((sketch, xs.shape[1]), xs.dtype).at[rows[:, 0]].add(
-                signs[:, 0][:, None] * xs
-            )
-            G = jax.lax.psum(SX.T @ SX, axis)
-            return leverage_from_gram(xs, G) + 1.0 / n
-
-        fn = shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(P(data_axes, None), P(data_axes), P(data_axes)),
-            out_specs=P(data_axes),
+        # the sharded OnePassSketched strategy: ONE fused sweep — scan over
+        # per-shard chunks accumulating the row CountSketch (state joins the
+        # single psum), leverage read off the retained z rows. n divisible by
+        # the shard count at dry-run scale, as for "engine".
+        shards = int(np.prod([mesh.shape[a] for a in axes]))
+        per = n // shards
+        chunk = min(chunk, per)
+        assert per % chunk == 0, "dry-run shapes: per-shard rows % chunk == 0"
+        onepass = make_sharded_onepass_fn(
+            lambda x: (x, x),
+            mesh,
+            axes,
+            chunk=chunk,
+            chunks_per_shard=per // chunk,
+            rows_per_point=1,
+            hull=False,
+            D=D,
+            q=None,
+            sketch_size=sketch,
         )
-        r_shard = NamedSharding(mesh, P(data_axes))
+        sw_sds = jax.ShapeDtypeStruct((n,), jnp.float32)
+        rows_sds = jax.ShapeDtypeStruct((n,), jnp.int32)
+        r_shard = NamedSharding(mesh, P(axes))
 
-        def wrapper(X, rows, signs):
-            return fn(X, rows[:, None], signs[:, None])
+        def fn(X, sw, mask, rows, signs):
+            z, SX = onepass(X, sw, mask, rows, signs)
+            V, inv = gram_projection(SX.T @ SX)  # (D,D) algebra, replicated
+            return jnp.sum(jnp.square(z @ V) * inv, axis=1) + 1.0 / n
 
-        return wrapper, (x_shard, r_shard, r_shard), (X_sds, rows_sds, signs_sds)
+        return (
+            fn,
+            (x_shard, r_shard, r_shard, r_shard, r_shard),
+            (X_sds, sw_sds, sw_sds, rows_sds, sw_sds),
+        )
 
     if variant == "engine":
         # the DistributedScoringEngine's sharded+chunked Algorithm 1 on raw

@@ -11,11 +11,13 @@ import pytest
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_in_subprocess(code: str):
+def run_in_subprocess(code: str, extra_env: dict | None = None):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = REPO_SRC
     env["JAX_PLATFORMS"] = "cpu"
+    if extra_env:
+        env.update(extra_env)
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True,
@@ -113,9 +115,10 @@ def test_sharded_engine_matches_single_host():
         rng = np.random.default_rng(0)
         n = 1003  # ragged: 1003 % 8 != 0, and per-shard chunking is ragged too
         Y = rng.random((n, 2)).astype(np.float32)
-        # degree 5: Gram spectrum fully above the f32 noise floor, so the two
-        # accumulation orders must agree to ~1e-8 (degree 6 puts genuine edge
-        # modes at the rcond cutoff — the known f32-conditioning ROADMAP item)
+        # degree 5 for the f32 default path: Gram spectrum fully above the
+        # f32 noise floor, so the two accumulation orders must agree to
+        # ~1e-8. Degree 6 is covered by the gram_dtype="float64" test below
+        # (test_sharded_engine_f64_gram_unpins_degree6).
         cfg = M.MCTMConfig(J=2, degree=5)
         scaler = DataScaler.fit(Y)
         key = jax.random.PRNGKey(3)
@@ -152,6 +155,178 @@ def test_sharded_engine_matches_single_host():
                                         chunk_size=64)
         np.testing.assert_array_equal(cs.indices, dcs.indices)
         np.testing.assert_allclose(cs.weights, dcs.weights, rtol=1e-4)
+        print("OK")
+        """
+    )
+
+
+def test_sharded_one_pass_sketched_matches_single_host():
+    """The tentpole acceptance: DistributedScoringEngine accepts
+    sketch_size > 0 through the fused one-pass sweep, whose estimates and
+    hull candidates match the single-host one-pass strategy (same CountSketch
+    plan + upfront net) to f32 psum noise on a ragged mesh — and the sweep
+    invokes the sharded callable exactly ONCE (no second data pass)."""
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core import mctm as M
+        from repro.core.bernstein import DataScaler
+        from repro.core.scoring import OnePassSketched, ScoringEngine
+        from repro.core import distributed_coreset as DC
+
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        n = 1003  # ragged shards AND ragged per-shard chunking
+        Y = rng.random((n, 2)).astype(np.float32)
+        cfg = M.MCTMConfig(J=2, degree=5)
+        scaler = DataScaler.fit(Y)
+        hkey, skey = jax.random.PRNGKey(3), jax.random.PRNGKey(9)
+
+        single = ScoringEngine(cfg, scaler, chunk_size=128).score(
+            jnp.asarray(Y), method="l2-hull", hull_k=20, hull_key=hkey,
+            sketch_size=256, key=skey)
+
+        calls = []
+        orig = DC.make_sharded_onepass_fn
+        def counting(*a, **kw):
+            fn = orig(*a, **kw)
+            def wrapped(*args):
+                calls.append(1)
+                return fn(*args)
+            return wrapped
+        DC.make_sharded_onepass_fn = counting
+        dist = DC.DistributedScoringEngine(cfg, scaler, mesh=mesh, chunk_size=64).score(
+            jnp.asarray(Y), method="l2-hull", hull_k=20, hull_key=hkey,
+            sketch_size=256, key=skey)
+        assert calls == [1], "one-pass must launch exactly one sharded sweep"
+
+        assert np.abs(single.scores - dist.scores).max() <= 1e-6
+        from repro.core.coreset import exact_hull_points
+        np.testing.assert_array_equal(single.hull_rows[:20], dist.hull_rows[:20])
+        np.testing.assert_array_equal(
+            exact_hull_points(single, single.scores, 20),
+            exact_hull_points(dist, dist.scores, 20))
+
+        # Ω-projected retention, weighted rows (Merge & Reduce shape)
+        w = rng.random(n) * 3.0 + 0.1
+        strat = OnePassSketched(256, proj_size=8)
+        su = ScoringEngine(cfg, scaler, chunk_size=128).score(
+            jnp.asarray(Y), method="l2-only", weights=w, key=skey, strategy=strat)
+        du = DC.DistributedScoringEngine(cfg, scaler, mesh=mesh, chunk_size=64).score(
+            jnp.asarray(Y), method="l2-only", weights=w, key=skey, strategy=strat)
+        assert np.abs(su.scores - du.scores).max() <= 5e-6
+
+        # end-to-end: same key + sketch → identical coreset on both engines
+        from repro.core.coreset import build_coreset
+        cs = build_coreset(cfg, scaler, Y, 100, "l2-hull",
+                           key=jax.random.PRNGKey(7), sketch_size=256,
+                           chunk_size=256)
+        dcs = DC.distributed_build_coreset(cfg, scaler, Y, 100, "l2-hull",
+                                           mesh=mesh, key=jax.random.PRNGKey(7),
+                                           sketch_size=256, chunk_size=64)
+        np.testing.assert_array_equal(cs.indices, dcs.indices)
+        np.testing.assert_allclose(cs.weights, dcs.weights, rtol=1e-4)
+        print("OK")
+        """
+    )
+
+
+def test_sharded_engine_f64_gram_unpins_degree6():
+    """gram_dtype="float64" (x64 subprocess): the degree-6 restriction of the
+    1e-6 sharded-vs-single-host equivalence is lifted — the f64 Gram carry
+    makes the two accumulation orders agree exactly where f32 legitimately
+    drifts to ~1e-4 (genuine eigenvalues at the f32 rcond cutoff)."""
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core import mctm as M
+        from repro.core.bernstein import DataScaler
+        from repro.core.scoring import ScoringEngine
+        from repro.core.distributed_coreset import DistributedScoringEngine
+
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        n = 1003
+        Y = rng.standard_normal((n, 2)).astype(np.float32)  # heavy tails
+        cfg = M.MCTMConfig(J=2, degree=6)  # previously pinned to degree 5
+        scaler = DataScaler.fit(Y)
+        key = jax.random.PRNGKey(3)
+
+        single = ScoringEngine(cfg, scaler, chunk_size=128,
+                               gram_dtype="float64").score(
+            jnp.asarray(Y), method="l2-hull", hull_k=20, hull_key=key)
+        dist = DistributedScoringEngine(cfg, scaler, mesh=mesh, chunk_size=64,
+                                        gram_dtype="float64").score(
+            jnp.asarray(Y), method="l2-hull", hull_k=20, hull_key=key)
+        assert np.abs(single.scores - dist.scores).max() <= 1e-6
+        np.testing.assert_array_equal(single.hull_rows[:20], dist.hull_rows[:20])
+        print("OK")
+        """,
+        extra_env={"JAX_ENABLE_X64": "1"},
+    )
+
+
+def test_sharded_engine_f64_requires_x64():
+    """Without x64 the sharded engine must refuse f64 Grams loudly (a silent
+    f32 downcast would claim precision it does not deliver)."""
+    run_in_subprocess(
+        """
+        import jax, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core import mctm as M
+        from repro.core.bernstein import DataScaler
+        from repro.core.distributed_coreset import DistributedScoringEngine
+        mesh = make_mesh((8,), ("data",))
+        Y = np.random.default_rng(0).random((64, 2)).astype(np.float32)
+        cfg = M.MCTMConfig(J=2, degree=5)
+        eng = DistributedScoringEngine(cfg, DataScaler.fit(Y), mesh=mesh,
+                                       gram_dtype="float64")
+        try:
+            eng.score(Y, method="l2-only")
+        except ValueError as e:
+            assert "x64" in str(e)
+        else:
+            raise AssertionError("f64 without x64 must raise")
+        print("OK")
+        """
+    )
+
+
+def test_stage_rows_zero_copy_staging():
+    """stage_rows assembles the engine-layout padded row-sharded array from
+    O(chunk) host blocks; scoring the staged array (n_valid=) matches scoring
+    the host matrix, including ragged n and hull selection."""
+    run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core.distributed_coreset import DistributedScoringEngine
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        eng = DistributedScoringEngine(featurize=lambda F: (F, F), mesh=mesh,
+                                       chunk_size=64, rows_per_point=1)
+        for n in (1003, 64, 7):
+            F = rng.standard_normal((n, 6)).astype(np.float32)
+            blocks = (F[lo:lo + 100] for lo in range(0, n, 100))
+            arr = eng.stage_rows(blocks, n, 6)
+            assert arr.shape[0] >= n and len(arr.sharding.device_set) == 8
+            np.testing.assert_array_equal(np.asarray(arr)[:n], F)
+            hkey = jax.random.PRNGKey(1)
+            ref = eng.score(jnp.asarray(F), method="l2-hull", hull_k=4,
+                            hull_key=hkey)
+            got = eng.score(arr, method="l2-hull", hull_k=4, hull_key=hkey,
+                            n_valid=n)
+            assert np.abs(ref.scores - got.scores).max() <= 1e-6
+            np.testing.assert_array_equal(ref.hull_rows, got.hull_rows)
+        # row-count mismatch is refused, not silently mis-scored
+        try:
+            eng.stage_rows(iter([np.zeros((3, 6), np.float32)]), 5, 6)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("short block stream must raise")
         print("OK")
         """
     )

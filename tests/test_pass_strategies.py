@@ -1,0 +1,214 @@
+"""Pass-strategy layer: one-pass sketched scoring, f64 Gram conditioning,
+plan determinism, and the strategy↔strategy equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.leverage import flatten_features, leverage_scores_gram, sketched_leverage
+from repro.core.scoring import (
+    OnePassSketched,
+    ScoringEngine,
+    TwoPassExact,
+    TwoPassSketched,
+    resolve_strategy,
+)
+
+
+def _setup(n=503, J=2, degree=5, seed=0, uniform=True):
+    rng = np.random.default_rng(seed)
+    Y = rng.random((n, J)) if uniform else rng.standard_normal((n, J))
+    cfg = M.MCTMConfig(J=J, degree=degree)
+    scaler = DataScaler.fit(Y)
+    return cfg, scaler, Y
+
+
+def _counting_engine(chunk):
+    """Identity-featurize engine that records every chunk streamed."""
+    calls = []
+
+    def featurize(Yc):
+        calls.append(int(Yc.shape[0]))
+        F = jnp.asarray(Yc, jnp.float32)
+        return F, F
+
+    return ScoringEngine(featurize=featurize, chunk_size=chunk, rows_per_point=1), calls
+
+
+def test_one_pass_streams_each_row_exactly_once():
+    """THE one-pass contract: every row featurized exactly once per score
+    call, hull stage included (fused into the same sweep) — vs the two-pass
+    strategy's two sweeps over the same chunks."""
+    rng = np.random.default_rng(0)
+    Y = rng.standard_normal((200, 6)).astype(np.float32)
+    key = jax.random.PRNGKey(1)
+    hkey = jax.random.PRNGKey(2)
+
+    engine, calls = _counting_engine(chunk=64)
+    engine.score(Y, method="l2-hull", hull_k=4, hull_key=hkey,
+                 sketch_size=128, key=key)
+    assert len(calls) == 4          # ⌈200/64⌉ chunks, ONE sweep
+    assert sum(calls) == 200        # each row streamed exactly once
+    assert max(calls) <= 64         # O(chunk) working set preserved
+
+    calls.clear()
+    engine.score(Y, method="l2-hull", hull_k=4, hull_key=hkey)  # two-pass
+    assert len(calls) == 2 * 4 and sum(calls) == 2 * 200
+
+    # dense fast path: both strategies featurize exactly once
+    engine, calls = _counting_engine(chunk=0)
+    engine.score(Y, method="l2-only", sketch_size=128, key=key)
+    assert calls == [200]
+
+
+def test_one_pass_matches_two_pass_sketched_exactly():
+    """Same CountSketch plan → identical leverage estimates, whether the rows
+    are re-streamed (two-pass-sketched) or retained (one-pass, Ω=identity).
+    Both match the standalone ``sketched_leverage`` baseline."""
+    cfg, scaler, Y = _setup(seed=3)
+    key = jax.random.PRNGKey(11)
+    for chunk in (0, 100):
+        engine = ScoringEngine(cfg, scaler, chunk_size=chunk)
+        one = engine.score(jnp.asarray(Y), method="l2-only",
+                           sketch_size=256, key=key)
+        two = engine.score(jnp.asarray(Y), method="l2-only", sketch_size=256,
+                           key=key, strategy="two-pass-sketched")
+        np.testing.assert_array_equal(one.leverage, two.leverage)
+        A, _ = M.basis_features(cfg, scaler, jnp.asarray(Y))
+        ref = np.asarray(sketched_leverage(flatten_features(A), key, 256))
+        np.testing.assert_allclose(one.leverage, ref, atol=1e-4)
+
+
+def test_sketched_leverage_error_shrinks_with_sketch_size():
+    """Property: the one-pass constant-factor estimates tighten as the
+    CountSketch grows (the whole point of the sketch_size knob)."""
+    rng = np.random.default_rng(0)
+    errs = {64: [], 1024: []}
+    for seed in range(5):
+        F = rng.standard_normal((1500, 12)).astype(np.float32)
+        exact = np.asarray(leverage_scores_gram(jnp.asarray(F)))
+        engine = ScoringEngine(
+            featurize=lambda Yc: (jnp.asarray(Yc), None),
+            chunk_size=256,
+            rows_per_point=1,
+        )
+        key = jax.random.PRNGKey(seed)
+        for s in errs:
+            got = engine.score(F, method="l2-only", sketch_size=s, key=key).leverage
+            rel = np.abs(got - exact) / np.maximum(exact, 1e-6)
+            errs[s].append(float(np.median(rel)))
+    small, big = np.mean(errs[64]), np.mean(errs[1024])
+    assert big < small, (errs, "larger sketch must be tighter on average")
+    assert big < 0.05  # 1024 buckets for a rank-12 subspace: few-% regime
+
+
+def test_sketch_plan_deterministic_under_fixed_key():
+    """Same key → identical scores AND hull candidates across engine
+    instances; a different key moves the estimates."""
+    cfg, scaler, Y = _setup(seed=4)
+    hkey = jax.random.PRNGKey(7)
+    a = ScoringEngine(cfg, scaler, chunk_size=100).score(
+        jnp.asarray(Y), method="l2-hull", hull_k=8, hull_key=hkey,
+        sketch_size=128, key=jax.random.PRNGKey(5))
+    b = ScoringEngine(cfg, scaler, chunk_size=100).score(
+        jnp.asarray(Y), method="l2-hull", hull_k=8, hull_key=hkey,
+        sketch_size=128, key=jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(a.scores, b.scores)
+    np.testing.assert_array_equal(a.hull_rows, b.hull_rows)
+    c = ScoringEngine(cfg, scaler, chunk_size=100).score(
+        jnp.asarray(Y), method="l2-hull", hull_k=8, hull_key=hkey,
+        sketch_size=128, key=jax.random.PRNGKey(6))
+    assert np.abs(a.scores - c.scores).max() > 0
+
+
+def test_one_pass_vs_two_pass_downstream_nll_agreement():
+    """Coresets built by the two strategies fit statistically equivalent
+    models: weighted-NLL of the full data under each coreset fit agrees."""
+    from repro.core.coreset import build_coreset
+    from repro.data.dgp import generate
+
+    Y = generate("normal_mixture", 3000, seed=0)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    key = jax.random.PRNGKey(0)
+    fit_key = jax.random.PRNGKey(1)
+
+    nlls = {}
+    for name, sketch in (("two-pass", 0), ("one-pass", 512)):
+        cs = build_coreset(cfg, scaler, Y, 300, "l2-hull", key=key,
+                           sketch_size=sketch)
+        assert cs.size == 300
+        fit = M.fit_mctm(
+            cfg, scaler, jnp.asarray(Y[cs.indices]),
+            weights=jnp.asarray(cs.weights, jnp.float32),
+            key=fit_key, steps=300, lr=5e-2,
+        )
+        A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+        nlls[name] = float(M.nll(cfg, fit.params, A, Ap))
+    rel = abs(nlls["one-pass"] - nlls["two-pass"]) / max(abs(nlls["two-pass"]), 1e-6)
+    assert rel < 0.1, nlls
+
+
+def test_gram_dtype_float64_stabilizes_degree6():
+    """f64 Gram accumulation makes degree-6 leverage chunk-layout-invariant
+    (f32 puts genuine eigenvalues at the rcond cutoff, where accumulation
+    order is visible)."""
+    cfg, scaler, Y = _setup(n=1003, degree=6, seed=0, uniform=False)
+    dense = ScoringEngine(cfg, scaler, chunk_size=0, gram_dtype="float64").score(
+        jnp.asarray(Y), method="l2-only")
+    chunked = ScoringEngine(cfg, scaler, chunk_size=64, gram_dtype="float64").score(
+        jnp.asarray(Y), method="l2-only")
+    assert np.abs(dense.scores - chunked.scores).max() <= 1e-6
+    # and the f64 Gram really is carried in f64
+    assert dense.gram.dtype == np.float64
+
+
+def test_proj_size_compression():
+    """Ω-projected retention: proj_size ≥ rank reproduces the plain one-pass
+    estimates (leverage is invariant under rank-preserving right
+    multiplication); proj_size < rank degrades gracefully."""
+    rng = np.random.default_rng(0)
+    F = rng.standard_normal((800, 12)).astype(np.float32)
+    engine = ScoringEngine(
+        featurize=lambda Yc: (jnp.asarray(Yc), None),
+        chunk_size=128,
+        rows_per_point=1,
+    )
+    key = jax.random.PRNGKey(0)
+    plain = engine.score(F, method="l2-only", sketch_size=1024, key=key)
+    full = engine.score(F, method="l2-only", key=key,
+                        strategy=OnePassSketched(1024, proj_size=12))
+    # proj_size ≥ D → Ω is skipped entirely: identical retention
+    np.testing.assert_array_equal(plain.leverage, full.leverage)
+    low = engine.score(F, method="l2-only", key=key,
+                       strategy=OnePassSketched(1024, proj_size=8))
+    exact = np.asarray(leverage_scores_gram(jnp.asarray(F)))
+    rel = np.abs(low.leverage - exact) / np.maximum(exact, 1e-6)
+    assert np.isfinite(low.leverage).all()
+    # rank-8 projection of a rank-12 row space: lossy but score-shaped
+    assert np.median(rel) < 1.0
+    assert np.corrcoef(low.leverage, exact)[0, 1] > 0.5
+
+
+def test_resolve_strategy():
+    assert isinstance(resolve_strategy(None), TwoPassExact)
+    assert isinstance(resolve_strategy(None, sketch_size=64), OnePassSketched)
+    assert isinstance(resolve_strategy("two-pass-sketched", sketch_size=64),
+                      TwoPassSketched)
+    assert resolve_strategy(None, gram_dtype="float64").gram_dtype == "float64"
+    s = OnePassSketched(32)
+    assert resolve_strategy(s) is s
+    with pytest.raises(ValueError):
+        resolve_strategy("nope")
+    with pytest.raises(ValueError):
+        resolve_strategy("one-pass", sketch_size=0)  # sketchless sketch
+    with pytest.raises(ValueError):
+        TwoPassExact("float16")
+    engine = ScoringEngine(
+        featurize=lambda Yc: (jnp.asarray(Yc), None), rows_per_point=1
+    )
+    with pytest.raises(ValueError):
+        engine.score(np.ones((4, 2), np.float32), method="l2-only",
+                     strategy="one-pass", sketch_size=64)  # key missing

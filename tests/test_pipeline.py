@@ -94,3 +94,29 @@ def test_subset_loader_emits_weights():
     np.testing.assert_array_equal(b0["x"], b0b["x"])  # deterministic
     assert b0["weights"].shape == (8,)
     assert set(b0["x"].tolist()) <= set(data["x"][sub.indices].tolist())
+
+
+def test_coreset_selector_sketched_one_pass():
+    """sketch_size: selection runs through the one-pass strategy (each
+    feature row featurized exactly once when chunked), stays deterministic
+    under a fixed key, and still returns exact-k weighted subsets."""
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((500, 6)).astype(np.float32)
+    calls = []
+
+    def featurize(e):
+        calls.append(e.shape[0])
+        return e * 2.0
+
+    sel = CoresetSelector(
+        featurize=featurize, method="l2-hull", chunk_size=128, sketch_size=256
+    )
+    sub = sel.select(X, k=64, key=jax.random.PRNGKey(0))
+    assert sum(calls) == 500 and len(calls) == 4  # one pass over 4 chunks
+    assert sub.size == 64 and (sub.weights > 0).all()
+    sub2 = CoresetSelector(
+        featurize=lambda e: e * 2.0, method="l2-hull", chunk_size=128,
+        sketch_size=256,
+    ).select(X, k=64, key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(sub.indices, sub2.indices)
+    np.testing.assert_allclose(sub.weights, sub2.weights)

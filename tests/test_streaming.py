@@ -97,3 +97,58 @@ def test_bucket_structure_is_logarithmic():
     for i in range(0, 8192, 256):
         mr.push(Y[i : i + 256])
     assert len(mr._buckets) <= int(np.log2(8192 / 256)) + 2
+
+
+def _counted_stream(Y, cfg, scaler, sketch_size):
+    """Push one 512-row block through a chunk_size=128 stream and return the
+    featurize chunk sizes the triggering reduce streamed."""
+    mr = MergeReduceCoreset(
+        cfg,
+        scaler,
+        k=128,
+        key=jax.random.PRNGKey(7),
+        chunk_size=128,
+        sketch_size=sketch_size,
+    )
+    calls = []
+    base = mr._engine.featurize
+
+    def counting(Yc):
+        calls.append(int(Yc.shape[0]))
+        return base(Yc)
+
+    mr._engine.featurize = counting
+    mr.push(Y[:512])
+    return mr, calls
+
+
+def test_one_pass_sketched_reduce_streams_blocks_once():
+    """sketch_size routes every reduction through the one-pass strategy: the
+    reduce of a 512-row block over 128-row chunks featurizes each row exactly
+    once (4 chunk calls), where the exact two-pass reduce streams them twice
+    (8) — the pass shape merge-reduce's consume-each-block-once contract
+    assumes — and the stream still tracks total mass deterministically."""
+    Y = generate("normal_mixture", 2048, seed=7)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+
+    _, calls_one = _counted_stream(Y, cfg, scaler, sketch_size=256)
+    assert calls_one == [128, 128, 128, 128]  # each row streamed ONCE
+    _, calls_two = _counted_stream(Y, cfg, scaler, sketch_size=0)
+    assert len(calls_two) == 8 and sum(calls_two) == 2 * 512
+
+    def run():
+        mr = MergeReduceCoreset(
+            cfg, scaler, k=128, key=jax.random.PRNGKey(7), sketch_size=256
+        )
+        for i in range(0, 2048, 512):
+            mr.push(Y[i : i + 512])
+        return mr.result()
+
+    res = run()
+    assert 0 < res.size <= 128
+    assert res.weights.sum() == pytest.approx(2048, rel=0.35)
+    # determinism: an identical sketched stream reproduces the coreset
+    res2 = run()
+    np.testing.assert_array_equal(res.Y, res2.Y)
+    np.testing.assert_array_equal(res.weights, res2.weights)
