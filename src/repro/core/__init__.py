@@ -2,6 +2,9 @@
 
 Public API:
   - MCTMConfig / init_params / nll / fit_mctm / log_density / sample
+  - fit_mctm_streaming / streamed_nll / coreset_epsilon (the fit layer:
+    streamed + SPMD-sharded weighted-NLL training and the (1±ε) evaluator —
+    see repro.core.mctm_fit's module doc for the contract)
   - build_coreset / evaluate_coreset (Algorithm 1 + baselines)
   - leverage scores (exact, sketched, ridge, root), hull ε-kernels
   - ScoringEngine + pass strategies (TwoPassExact / TwoPassSketched /
@@ -43,6 +46,12 @@ from repro.core.mctm import (
     nll,
     nll_terms,
     sample,
+)
+from repro.core.mctm_fit import (
+    coreset_epsilon,
+    fit_mctm_streaming,
+    likelihood_ratio,
+    streamed_nll,
 )
 from repro.core.scoring import (
     OnePassSketched,

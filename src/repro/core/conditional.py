@@ -88,6 +88,32 @@ def cnll(cfg, params, A, Ap, X, weights=None) -> jax.Array:
     return jnp.sum(terms if weights is None else weights * terms)
 
 
+class CMCTMDensityModel:
+    """``loss_fn(params, batch)`` adapter for the fit layer's generic driver
+    (``mctm_fit.fit_density_model``): conditional rows travel column-
+    concatenated (y_i, x_i) — the same layout as the conditional scoring
+    featurize — and the basis is evaluated per microbatch INSIDE the loss,
+    so conditional fits stream with the same O(chunk·J·d) discipline as the
+    unconditional ones."""
+
+    def __init__(self, cfg: CMCTMConfig, scaler: DataScaler, *, norm: float = 1.0):
+        self.cfg = cfg
+        self.scaler = scaler
+        self.norm = float(norm)
+
+    def loss_fn(self, params, batch):
+        if "A" in batch:  # dense fast path: features precomputed once
+            A, Ap, Xc = batch["A"], batch["Ap"], batch["X"]
+        else:
+            YX = batch["YX"]
+            Yc, Xc = YX[:, : self.cfg.J], YX[:, self.cfg.J :]
+            A, Ap = M.basis_features(self.cfg.base, self.scaler, Yc)
+        terms = cnll_terms(self.cfg, params, A, Ap, Xc)
+        w = batch.get("weights")
+        total = jnp.sum(terms if w is None else w * terms)
+        return total / self.norm, {}
+
+
 def fit_cmctm(
     cfg: CMCTMConfig,
     scaler: DataScaler,
@@ -98,21 +124,55 @@ def fit_cmctm(
     key=None,
     steps: int = 1500,
     lr: float = 5e-2,
+    mesh=None,
+    chunk_size: int | None = None,
+    microbatches: int | None = None,
 ) -> M.FitResult:
+    """Conditional-MCTM fit through the shared fit subsystem: ``mesh=`` runs
+    the step SPMD-sharded, ``chunk_size`` streams the basis evaluation
+    microbatch-by-microbatch for full-data fits beyond one chunk."""
+    from repro.core.mctm_fit import batch_plan, default_fit_optimizer, fit_density_model
+
     if key is None:
         key = jax.random.PRNGKey(0)
     params0 = init_cparams(key, cfg)
-    A, Ap = M.basis_features(cfg.base, scaler, jnp.asarray(Y))
-    Xj = jnp.asarray(X, jnp.float32)
-    total_w = float(Y.shape[0]) if weights is None else float(np.sum(weights))
-    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+    Yn = np.asarray(Y, np.float32)
+    n = int(Yn.shape[0])
+    w, total_w, chunk, microbatches = batch_plan(n, weights, chunk_size, microbatches)
+    YX = np.concatenate([Yn, np.asarray(X, np.float32)], axis=1)
+    model = CMCTMDensityModel(cfg, scaler, norm=total_w / microbatches)
+    if microbatches == 1:
+        # dense fast path (mirrors fit_mctm_streaming): featurize exactly
+        # once outside the step instead of once per optimizer step
+        A, Ap = M.basis_features(cfg.base, scaler, jnp.asarray(Yn))
+        batch = {"A": np.asarray(A), "Ap": np.asarray(Ap),
+                 "X": YX[:, cfg.J :], "weights": w}
+    else:
+        batch = {"YX": YX, "weights": w}
+    params, losses, _ = fit_density_model(
+        model,
+        params0,
+        batch,
+        optimizer=default_fit_optimizer(lr, steps),
+        steps=steps,
+        mesh=mesh,
+        microbatches=microbatches,
+        label="cmctm-fit",
+    )
+    params = CMCTMParams(*params)
 
-    def loss_fn(p):
-        return cnll(cfg, p, A, Ap, Xj, w) / total_w
+    @jax.jit
+    def _chunk_nll(p, YXc, wc):
+        Yc, Xc = YXc[:, : cfg.J], YXc[:, cfg.J :]
+        A, Ap = M.basis_features(cfg.base, scaler, Yc)
+        return jnp.sum(wc * cnll_terms(cfg, p, A, Ap, Xc))
 
-    params, losses = jax.jit(lambda p: M._adam_fit(loss_fn, p, steps, lr))(params0)
-    final = float(cnll(cfg, params, A, Ap, Xj, w))
-    return M.FitResult(params=params, losses=np.asarray(losses), final_nll=final)
+    final = sum(
+        float(_chunk_nll(params, jnp.asarray(YX[lo : lo + chunk]),
+                         jnp.asarray(w[lo : lo + chunk])))
+        for lo in range(0, n, chunk)
+    )
+    return M.FitResult(params=params, losses=losses, final_nll=final)
 
 
 # ---------------------------------------------------------------------------

@@ -245,10 +245,12 @@ def evaluate_coreset(
     # Evaluate with a strict η (no floor): the fit uses the paper's η = Θ(ε)
     # corrected domain, but the reported likelihood must expose any log-term
     # blow-up a coreset failed to guard against (the hull's whole purpose).
-    cfg_eval = dataclasses.replace(cfg, eta=1e-9)
-    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
-    nll_full_at_cs = float(M.nll(cfg_eval, fit.params, A, Ap))
-    nll_full_at_full = float(M.nll(cfg_eval, full_fit.params, A, Ap))
+    # Streamed (mctm_fit.streamed_nll): the full-data evaluation never
+    # materializes the (n, J, d) basis.
+    from repro.core.mctm_fit import likelihood_ratio, streamed_nll
+
+    nll_full_at_cs = streamed_nll(cfg, scaler, fit.params, Y, eta=1e-9)
+    nll_full_at_full = streamed_nll(cfg, scaler, full_fit.params, Y, eta=1e-9)
 
     from repro.core.bernstein import monotone_theta
 
@@ -257,16 +259,9 @@ def evaluate_coreset(
     param_l2 = float(jnp.linalg.norm(th_cs - th_full))
     lam_err = float(jnp.linalg.norm(fit.params.lam - full_fit.params.lam))
     # Likelihood ratio: NLL_full(θ_cs)/NLL_full(θ_full) as in the paper's
-    # experiments. When the NLL is non-positive (high-density data, e.g.
-    # small-scale returns) the raw ratio is meaningless; we use the paper's
-    # normalization idea (shift by a data-independent constant ≥ −min NLL):
-    # shift = −2·NLL_full makes LR = 1 + (NLL_cs − NLL_full)/|NLL_full|,
-    # i.e. one-plus-relative-excess, same reading (≥ ~1, →1 better).
-    if nll_full_at_full <= 1e-6:
-        shift = -2.0 * nll_full_at_full
-        lr_metric = (nll_full_at_cs + shift) / (nll_full_at_full + shift)
-    else:
-        lr_metric = nll_full_at_cs / nll_full_at_full
+    # experiments, with the shared shift normalization for non-positive NLLs
+    # (mctm_fit.likelihood_ratio).
+    lr_metric = likelihood_ratio(nll_full_at_cs, nll_full_at_full)
     return CoresetEvaluation(
         method=method,
         k=cs.size,

@@ -99,6 +99,7 @@ __all__ = [
     "make_sharded_pass_fns",
     "make_sharded_onepass_fn",
     "host_gather",
+    "shard_layout",
 ]
 
 
@@ -108,6 +109,23 @@ def _axis_tuple(axis) -> tuple[str, ...]:
 
 def _num_shards(mesh: Mesh, axes: tuple[str, ...]) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def shard_layout(mesh: Mesh, axis, n: int, chunk_size: int | None):
+    """(chunk, chunks_per_shard, n_pad) for n rows chunk-scanned over a mesh.
+
+    The one row-layout rule every sharded chunk driver in the repo follows —
+    the scoring engine's shard_map scan bodies and the fit layer's streamed
+    evaluator (``core.mctm_fit``) pad/slice with exactly this geometry, so
+    arrays staged for one are directly consumable by the other.
+    """
+    axes = _axis_tuple(axis)
+    shards = _num_shards(mesh, axes)
+    per_needed = -(-n // shards)
+    chunk = int(chunk_size) if chunk_size else per_needed
+    chunk = max(min(chunk, per_needed), 1)
+    cps = -(-per_needed // chunk)
+    return chunk, cps, cps * chunk * shards
 
 
 def _spec_el(axes: tuple[str, ...]):
@@ -645,12 +663,7 @@ class DistributedScoringEngine:
 
     def _shard_layout(self, n: int) -> tuple[int, int, int]:
         """(chunk, chunks_per_shard, n_pad) for n rows over this mesh."""
-        shards = _num_shards(self.mesh, self.axes)
-        per_needed = -(-n // shards)
-        chunk = self.chunk_size if self.chunk_size > 0 else per_needed
-        chunk = max(min(chunk, per_needed), 1)
-        cps = -(-per_needed // chunk)
-        return chunk, cps, cps * chunk * shards
+        return shard_layout(self.mesh, self.axes, n, self.chunk_size)
 
     def _feature_shapes(self, chunk: int, hull: bool, width, dtype):
         sds = jax.ShapeDtypeStruct((chunk,) + width, dtype)

@@ -15,8 +15,7 @@ reproduce the paper's experiments.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -164,43 +163,6 @@ class FitResult:
     final_nll: float
 
 
-def _adam_fit(
-    loss_fn: Callable[[MCTMParams], jax.Array],
-    params: MCTMParams,
-    steps: int,
-    lr: float,
-) -> tuple[MCTMParams, jax.Array]:
-    """Full-batch Adam with cosine decay — compact, dependency-free."""
-
-    grad_fn = jax.value_and_grad(loss_fn)
-
-    def lr_at(i):
-        frac = i / max(steps, 1)
-        return lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
-
-    def step(carry, i):
-        params, m, v = carry
-        loss, g = grad_fn(params)
-        m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
-        v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, v, g)
-        t = i + 1.0
-        mhat = jax.tree.map(lambda m_: m_ / (1 - 0.9**t), m)
-        vhat = jax.tree.map(lambda v_: v_ / (1 - 0.999**t), v)
-        params = jax.tree.map(
-            lambda p, mh, vh: p - lr_at(i) * mh / (jnp.sqrt(vh) + 1e-8),
-            params,
-            mhat,
-            vhat,
-        )
-        return (params, m, v), loss
-
-    zeros = jax.tree.map(jnp.zeros_like, params)
-    (params, _, _), losses = jax.lax.scan(
-        step, (params, zeros, zeros), jnp.arange(steps, dtype=jnp.float32)
-    )
-    return params, losses
-
-
 def fit_mctm(
     cfg: MCTMConfig,
     scaler: DataScaler,
@@ -212,38 +174,69 @@ def fit_mctm(
     steps: int = 1500,
     lr: float = 5e-2,
     method: str = "adam",
+    mesh=None,
+    chunk_size: int | None = None,
+    microbatches: int | None = None,
+    optimizer=None,
+    checkpoint=None,
+    ckpt_every: int = 0,
+    resume: bool = False,
 ) -> FitResult:
     """Weighted maximum-likelihood fit of an MCTM.
 
     ``weights`` are the coreset weights (None → unweighted full-data fit).
-    The mean-normalized objective keeps the lr scale-free across coreset sizes.
+    The mean-normalized objective keeps the lr scale-free across coreset
+    sizes.
+
+    The adam path delegates to the fit subsystem (``repro.core.mctm_fit``):
+    basis featurization streams microbatch-by-microbatch (inputs beyond
+    ``chunk_size`` rows — default ``scoring.DEFAULT_CHUNK`` — never
+    materialize an (n, J, d) tensor), ``mesh=`` runs the identical step
+    SPMD-sharded over the data axes, and ``checkpoint=`` (a
+    ``CheckpointManager``) enables periodic saves + ``resume=True`` restart.
+    The scipy lbfgs path stays the dense small-n alternative.
     """
     if init is None:
         if key is None:
             key = jax.random.PRNGKey(0)
         init = init_params(key, cfg)
+    if method == "adam":
+        from repro.core import mctm_fit
+        from repro.core.scoring import DEFAULT_CHUNK
+
+        return mctm_fit.fit_mctm_streaming(
+            cfg,
+            scaler,
+            Y,
+            weights,
+            init=init,
+            steps=steps,
+            lr=lr,
+            optimizer=optimizer,
+            mesh=mesh,
+            chunk_size=DEFAULT_CHUNK if chunk_size is None else chunk_size,
+            microbatches=microbatches,
+            checkpoint=checkpoint,
+            ckpt_every=ckpt_every,
+            resume=resume,
+        )
+    if method != "lbfgs":
+        raise ValueError(f"unknown fit method: {method}")
+
     A, Ap = basis_features(cfg, scaler, jnp.asarray(Y))
     total_w = float(Y.shape[0]) if weights is None else float(jnp.sum(weights))
 
     def loss_fn(params: MCTMParams) -> jax.Array:
         return nll(cfg, params, A, Ap, weights) / total_w
 
-    if method == "adam":
-        params, losses = jax.jit(
-            lambda p: _adam_fit(loss_fn, p, steps, lr)
-        )(init)
-        losses = np.asarray(losses)
-    elif method == "lbfgs":
-        params, losses = _scipy_lbfgs_fit(loss_fn, init)
-    else:
-        raise ValueError(f"unknown fit method: {method}")
-
+    params, losses = _scipy_lbfgs_fit(loss_fn, init)
     final = float(nll(cfg, params, A, Ap, weights))
     return FitResult(params=params, losses=np.asarray(losses), final_nll=final)
 
 
 def _scipy_lbfgs_fit(loss_fn, params0: MCTMParams):
     """L-BFGS-B via scipy on the flattened parameter vector."""
+    import jax.flatten_util  # not auto-imported on all supported jax versions
     from scipy.optimize import minimize
 
     flat0, unravel = jax.flatten_util.ravel_pytree(params0)

@@ -1,0 +1,516 @@
+"""End-to-end MCTM fit layer: streamed featurization, sharded weighted-NLL
+training, and the streamed full-data evaluator behind the (1±ε) validation.
+
+Fit-layer contract (the training-side mirror of the PassStrategy contract in
+``core.scoring``)
+-----------------------------------------------------------------------------
+What streams — basis featurization. No path below materializes an (n, J, d)
+basis tensor beyond one chunk: the train step featurizes each microbatch
+INSIDE the jitted loss (``MCTMDensityModel``), so a step over n rows with
+``microbatches = ⌈n/chunk⌉`` holds one (chunk, J, d) block at a time while
+the gradient-accumulation scan carries only O(|params|) state; the evaluator
+(``streamed_nll``) featurizes chunk-by-chunk inside a ``lax.scan``. Both
+reuse the scoring engine's fused cached featurize (``scoring._mctm_featurize``)
+and the engine's chunk/shard geometry (``distributed_coreset.shard_layout``)
+— the same chunk-driver discipline as Algorithm 1's pre-sampling phase, and
+the same ``featurize=`` override point (which is how the counting tests
+assert the no-materialization property).
+
+What shards — rows. With ``mesh=`` the step jits through
+``train.trainer.make_train_step`` / ``shard_train_step`` with the batch
+row-sharded over the data axes and the (tiny) parameter + ``repro.optim``
+optimizer state replicated, so the identical step function runs single-host
+or on a pod; ragged row counts are padded with zero-weight copies of row 0
+(valid data — no NaN through the featurizer), exactly like
+``DistributedScoringEngine``. The streamed evaluator runs its chunk scan
+INSIDE a shard_map body and reduces with ONE psum — the evaluator analogue
+of the engine's fused pass-1 collective. ``CheckpointManager`` resume is
+supported on both layouts (``train.loop.restore_train_state``).
+
+What the evaluator guarantees — ``streamed_nll`` computes the total weighted
+NLL Σᵢ wᵢ·nllᵢ(θ): the same statistic as ``mctm.nll`` on a materialized
+basis, up to f32 reassociation across chunk/shard boundaries, at
+O(chunk·J·d) peak memory on any mesh layout. It is the measurement device
+for the paper's headline claim — ``coreset_epsilon`` measures the coreset's
+realized ε = max_θ |NLL_C(θ) − NLL(θ)| / |NLL(θ)| over the fitted
+parameters, and ``launch.train_mctm`` checks the coreset-fit/full-fit
+likelihood ratio against the (1±ε) band that ε implies.
+
+Coreset weights flow through the trainer's per-example-weight path
+(``batch["weights"]``); the objective is Σ w·nll / Σw — a constant
+normalizer, so gradients match ``mctm.nll`` up to scale and the lr stays
+scale-free across coreset sizes (the contract ``fit_mctm`` always had).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mctm as M
+from repro.core.distributed_coreset import _axis_tuple, host_gather, shard_layout
+from repro.core.scoring import DEFAULT_CHUNK, _mctm_featurize
+from repro.optim import Optimizer, adamw
+from repro.train import (
+    init_train_state,
+    make_train_step,
+    restore_train_state,
+    shard_train_step,
+    train_loop,
+)
+from repro.utils.compat import shard_map
+
+__all__ = [
+    "MCTMDensityModel",
+    "fit_featurize",
+    "fit_density_model",
+    "fit_mctm_streaming",
+    "batch_plan",
+    "streamed_nll",
+    "coreset_epsilon",
+    "likelihood_ratio",
+    "cosine_decay",
+]
+
+
+def cosine_decay(lr: float, steps: int):
+    """The fit layer's default schedule — lr·½(1+cos(π·i/steps)), the exact
+    decay the retired hand-rolled ``mctm._adam_fit`` applied, so fits through
+    ``repro.optim.adamw`` reproduce the seed trajectories."""
+
+    def fn(step):
+        frac = step.astype(jnp.float32) / max(steps, 1)
+        return jnp.asarray(lr, jnp.float32) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def default_fit_optimizer(lr: float, steps: int) -> Optimizer:
+    """Adam + cosine decay matching ``_adam_fit``'s exact update math."""
+    return adamw(cosine_decay(lr, steps), b1=0.9, b2=0.999, eps=1e-8)
+
+
+def fit_featurize(cfg: M.MCTMConfig, scaler, featurize: Callable | None = None):
+    """Chunk featurizer for the fit layer: Y chunk (c, J) → (A, Ap) each
+    (c, J, d). Wraps the scoring engine's fused cached featurize (one jitted
+    trace per chunk length, shared with Algorithm 1's scoring sweeps);
+    ``featurize`` overrides the base evaluation (counting tests, custom
+    bases) with the engine's flat (X (c, J·d), P (c·J, d)) contract.
+    """
+    base = featurize if featurize is not None else _mctm_featurize(cfg, scaler)
+
+    def feat(Yc):
+        X, Pr = base(Yc)
+        c = X.shape[0]
+        return X.reshape(c, cfg.J, cfg.d), Pr.reshape(c, cfg.J, cfg.d)
+
+    return feat
+
+
+class MCTMDensityModel:
+    """``loss_fn(params, batch)`` adapter for ``train.make_train_step``.
+
+    batch is ``{"Y": (b, J), "weights": (b,)}`` — featurized INSIDE the loss
+    so a microbatched step only ever holds one (b/microbatches, J, d) block —
+    or ``{"A", "Ap", "weights"}`` when the caller pre-featurized (the dense
+    single-chunk fast path, mirroring the scoring engine's). ``norm`` is the
+    constant objective normalizer (Σ real weights / microbatches, so the
+    microbatch-mean the trainer computes equals Σ w·nll / Σw globally).
+    """
+
+    def __init__(self, cfg: M.MCTMConfig, scaler=None, *, norm: float = 1.0,
+                 featurize: Callable | None = None):
+        self.cfg = cfg
+        self.norm = float(norm)
+        self._feat = (
+            fit_featurize(cfg, scaler, featurize)
+            if (scaler is not None or featurize is not None)
+            else None
+        )
+
+    def features(self, batch):
+        if "A" in batch:
+            return batch["A"], batch["Ap"]
+        return self._feat(batch["Y"])
+
+    def loss_fn(self, params, batch):
+        A, Ap = self.features(batch)
+        terms = M.nll_terms(self.cfg, params, A, Ap)
+        w = batch.get("weights")
+        total = jnp.sum(terms if w is None else w * terms)
+        return total / self.norm, {}
+
+
+def _pad_batch(batch: dict, multiple: int) -> tuple[dict, int, int]:
+    """Pad batch rows to a multiple: zero weights, row-0 copies elsewhere
+    (valid data — no NaN through the featurizer), the same padding rule as
+    ``DistributedScoringEngine.score``. Returns (batch, n, n_pad)."""
+    n = int(batch["weights"].shape[0])
+    n_pad = -(-n // multiple) * multiple
+    if n_pad == n:
+        return batch, n, n_pad
+    pad = n_pad - n
+    out = {}
+    for k, v in batch.items():
+        v = np.asarray(v)
+        if k == "weights":
+            out[k] = np.concatenate([v, np.zeros(pad, v.dtype)])
+        else:
+            out[k] = np.concatenate(
+                [v, np.broadcast_to(v[:1], (pad,) + v.shape[1:])]
+            )
+    return out, n, n_pad
+
+
+def _replicated_specs(params):
+    """Logical sharding specs that replicate every (tiny) parameter leaf."""
+    return jax.tree.map(lambda p: (None,) * np.ndim(p), params)
+
+
+def batch_plan(n: int, weights, chunk_size: int | None, microbatches: int | None):
+    """Shared scaffolding of every full-batch density fit (MCTM and
+    conditional): resolved per-example weights, their total (the constant
+    objective normalizer), the chunk length, and the microbatch count
+    (⌈n/chunk⌉ unless given). One implementation so the two fit entry points
+    cannot drift on the streaming/normalization rules."""
+    w = (
+        np.ones(n, np.float32)
+        if weights is None
+        else np.asarray(weights, np.float32)
+    )
+    chunk = int(chunk_size) if chunk_size else n
+    if microbatches is None:
+        microbatches = max(1, -(-n // chunk))
+    return w, float(w.sum()), chunk, microbatches
+
+
+def fit_density_model(
+    model,
+    params0,
+    batch: dict,
+    *,
+    optimizer: Optimizer,
+    steps: int,
+    mesh=None,
+    microbatches: int = 1,
+    checkpoint=None,
+    ckpt_every: int = 0,
+    resume: bool = False,
+    log_every: int = 0,
+    label: str = "fit",
+):
+    """The generic full-batch density-fit driver under every MCTM-family fit.
+
+    ``model`` follows the trainer's ``loss_fn(params, batch)`` contract (the
+    MCTM and conditional-MCTM adapters both do); ``batch`` must carry a
+    ``"weights"`` row — rows are padded here to a (microbatches × shards)
+    multiple with zero weight. With ``mesh`` the step is jitted through
+    ``shard_train_step`` (batch row-sharded, params/optimizer state
+    replicated); without, a plain donated jit. ``checkpoint`` is a
+    ``CheckpointManager``; ``resume=True`` restarts from its latest step.
+
+    Returns ``(params, losses, final_state)`` with params gathered to host
+    and losses one float per executed step.
+    """
+    shards = 1 if mesh is None else int(np.prod(list(mesh.shape.values())))
+    batch, _, _ = _pad_batch(batch, max(1, microbatches) * shards)
+    step_pure = make_train_step(model, optimizer, microbatches=microbatches)
+    state = init_train_state(params0, optimizer)
+    state_sh = None
+    if mesh is not None:
+        batch_shapes = {
+            k: jax.ShapeDtypeStruct(np.shape(v), np.asarray(v).dtype)
+            for k, v in batch.items()
+        }
+        step_fn, state_sh, batch_sh = shard_train_step(
+            step_pure,
+            model,
+            optimizer,
+            mesh,
+            params_shapes=params0,
+            specs=_replicated_specs(params0),
+            batch_shapes=batch_shapes,
+        )
+        batch = {
+            k: jax.device_put(jnp.asarray(v), batch_sh[k]) for k, v in batch.items()
+        }
+        state = jax.device_put(state, state_sh)
+    else:
+        step_fn = jax.jit(step_pure, donate_argnums=(0,))
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    start = 0
+    if resume:
+        state, start = restore_train_state(checkpoint, state, shardings=state_sh)
+    state, losses = train_loop(
+        step_fn,
+        state,
+        lambda i: batch,
+        steps,
+        start=start,
+        mgr=checkpoint,
+        ckpt_every=ckpt_every,
+        log_every=log_every,
+        label=label,
+    )
+    params = jax.tree.map(lambda x: jnp.asarray(host_gather(x)), state.params)
+    return params, np.asarray([float(x) for x in losses], np.float64), state
+
+
+def fit_mctm_streaming(
+    cfg: M.MCTMConfig,
+    scaler,
+    Y,
+    weights=None,
+    *,
+    key: jax.Array | None = None,
+    init: M.MCTMParams | None = None,
+    steps: int = 1500,
+    lr: float = 5e-2,
+    optimizer: Optimizer | None = None,
+    mesh=None,
+    chunk_size: int | None = DEFAULT_CHUNK,
+    microbatches: int | None = None,
+    featurize: Callable | None = None,
+    checkpoint=None,
+    ckpt_every: int = 0,
+    resume: bool = False,
+    log_every: int = 0,
+) -> M.FitResult:
+    """Weighted maximum-likelihood MCTM fit — the engine behind
+    ``mctm.fit_mctm`` (see the module doc for the streaming/sharding
+    contract). ``weights`` are the coreset weights (None → unweighted
+    full-data fit); inputs beyond ``chunk_size`` rows are featurized
+    microbatch-by-microbatch inside the step, never as one (n, J, d) tensor.
+    """
+    Y = np.asarray(Y, np.float32)
+    n = int(Y.shape[0])
+    if n == 0:
+        raise ValueError("cannot fit an empty dataset")
+    if init is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        init = M.init_params(key, cfg)
+    w, total_w, chunk, microbatches = batch_plan(n, weights, chunk_size, microbatches)
+    model = MCTMDensityModel(
+        cfg, scaler, norm=total_w / microbatches, featurize=featurize
+    )
+    batch = {"Y": Y, "weights": w}
+    if microbatches == 1 and featurize is None:
+        # dense fast path (the scoring engine's single-chunk rule): featurize
+        # exactly once outside the step instead of once per optimizer step
+        A, Ap = fit_featurize(cfg, scaler)(jnp.asarray(Y))
+        batch = {"A": np.asarray(A), "Ap": np.asarray(Ap), "weights": w}
+    params, losses, _ = fit_density_model(
+        model,
+        init,
+        batch,
+        optimizer=optimizer or default_fit_optimizer(lr, steps),
+        steps=steps,
+        mesh=mesh,
+        microbatches=microbatches,
+        checkpoint=checkpoint,
+        ckpt_every=ckpt_every,
+        resume=resume,
+        log_every=log_every,
+        label="mctm-fit",
+    )
+    params = M.MCTMParams(*params)
+    final = streamed_nll(
+        cfg, scaler, params, Y,
+        weights=None if weights is None else w,
+        chunk=chunk, mesh=mesh, featurize=featurize,
+    )
+    return M.FitResult(params=params, losses=losses, final_nll=float(final))
+
+
+# ---------------------------------------------------------------------------
+# streamed full-data NLL evaluator
+# ---------------------------------------------------------------------------
+
+
+# evaluator closures keyed on (cfg, scaler bounds[, mesh/layout]): the driver
+# evaluates several parameter sets over the same data layout, and an uncached
+# closure would recompile the featurize→nll_terms body every call. Custom
+# featurize callables are never cached (per-call closures; an id()-keyed
+# entry could alias a GC'd closure's reused address).
+_CHUNK_NLL_CACHE: dict = {}
+_SHARDED_NLL_CACHE: dict = {}
+
+
+def _chunk_nll_fn(feat, cfg):
+    @jax.jit
+    def chunk_nll(p, Yc, wc):
+        A, Ap = feat(Yc)
+        return jnp.sum(wc * M.nll_terms(cfg, p, A, Ap))
+
+    return chunk_nll
+
+
+def _make_sharded_nll_fn(feat, cfg, mesh, axes, chunk: int, cps: int):
+    """One-psum sharded NLL sweep: each shard lax.scans its (cps, chunk, J)
+    row slices through featurize → nll_terms, then the scalar totals psum —
+    the evaluator analogue of the scoring engine's fused pass-1 collective."""
+    axis_name = axes if len(axes) > 1 else axes[0]
+    row_spec = axes if len(axes) > 1 else axes[0]
+
+    def body(params, ys, wm):
+        def step(carry, xs):
+            yc, wc = xs
+            A, Ap = feat(yc)
+            return carry + jnp.sum(wc * M.nll_terms(cfg, params, A, Ap)), None
+
+        total, _ = jax.lax.scan(
+            step,
+            jnp.zeros((), jnp.float32),
+            (ys.reshape((cps, chunk) + ys.shape[1:]), wm.reshape(cps, chunk)),
+        )
+        return jax.lax.psum(total, axis_name)
+
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(row_spec, None), P(row_spec)),
+            out_specs=P(),
+            check_vma=False,
+        )
+    )
+
+
+def streamed_nll(
+    cfg: M.MCTMConfig,
+    scaler,
+    params: M.MCTMParams,
+    Y,
+    weights=None,
+    *,
+    chunk: int | None = DEFAULT_CHUNK,
+    mesh=None,
+    axis="data",
+    featurize: Callable | None = None,
+    eta: float | None = None,
+) -> float:
+    """Total (weighted) NLL Σ w·nll(θ) streamed in O(chunk·J·d) memory.
+
+    Single-host: a host chunk loop over the jitted featurize→nll_terms body.
+    With ``mesh``: ONE psum'd shard_map sweep (chunks scanned inside the
+    body, ``DistributedScoringEngine``-style; padding rows carry zero
+    weight). ``eta`` overrides the Jacobian floor for strict evaluation
+    (``eta=1e-9`` exposes log-term blow-ups a coreset failed to guard
+    against — the convention of ``coreset.evaluate_coreset``).
+    """
+    cfg_eval = dataclasses.replace(cfg, eta=eta) if eta is not None else cfg
+    feat = fit_featurize(cfg_eval, scaler, featurize)
+    Y = np.asarray(Y, np.float32)
+    n = int(Y.shape[0])
+    w = (
+        np.ones(n, np.float32)
+        if weights is None
+        else np.asarray(weights, np.float32)
+    )
+    if mesh is None:
+        c = int(chunk) if chunk else n
+        if featurize is not None:
+            chunk_nll = _chunk_nll_fn(feat, cfg_eval)
+        else:
+            ck = (
+                cfg_eval,
+                None if scaler is None else np.asarray(scaler.low).tobytes(),
+                None if scaler is None else np.asarray(scaler.high).tobytes(),
+            )
+            chunk_nll = _CHUNK_NLL_CACHE.get(ck)
+            if chunk_nll is None:
+                if len(_CHUNK_NLL_CACHE) > 64:
+                    _CHUNK_NLL_CACHE.clear()
+                chunk_nll = _chunk_nll_fn(feat, cfg_eval)
+                _CHUNK_NLL_CACHE[ck] = chunk_nll
+        total = 0.0
+        for lo in range(0, n, c):
+            hi = min(lo + c, n)
+            total += float(chunk_nll(p=params, Yc=jnp.asarray(Y[lo:hi]),
+                                     wc=jnp.asarray(w[lo:hi])))
+        return total
+
+    axes = _axis_tuple(axis)
+    chunk_v, cps, n_pad = shard_layout(mesh, axes, n, chunk)
+    pad = n_pad - n
+    if pad:
+        Y = np.concatenate([Y, np.broadcast_to(Y[:1], (pad,) + Y.shape[1:])])
+        w = np.concatenate([w, np.zeros(pad, np.float32)])
+    if featurize is not None:
+        # custom featurize closures are per-call objects — an id()-keyed
+        # cache could alias a GC'd closure's reused address; build fresh
+        fn = _make_sharded_nll_fn(feat, cfg_eval, mesh, axes, chunk_v, cps)
+    else:
+        cache_key = (
+            cfg_eval,
+            None if scaler is None else np.asarray(scaler.low).tobytes(),
+            None if scaler is None else np.asarray(scaler.high).tobytes(),
+            mesh, axes, chunk_v, cps,
+        )
+        fn = _SHARDED_NLL_CACHE.get(cache_key)
+        if fn is None:
+            if len(_SHARDED_NLL_CACHE) > 64:
+                _SHARDED_NLL_CACHE.clear()
+            fn = _make_sharded_nll_fn(feat, cfg_eval, mesh, axes, chunk_v, cps)
+            _SHARDED_NLL_CACHE[cache_key] = fn
+    return float(host_gather(fn(params, jnp.asarray(Y), jnp.asarray(w))))
+
+
+# ---------------------------------------------------------------------------
+# (1±ε) validation helpers
+# ---------------------------------------------------------------------------
+
+
+def likelihood_ratio(nll_model: float, nll_ref: float) -> float:
+    """NLL_ref-normalized likelihood ratio (≥ ~1, →1 better), computed as
+    1 + (NLL_model − NLL_ref)/|NLL_ref|. For positive references this IS the
+    raw ratio NLL_model/NLL_ref; for non-positive references (high-density
+    data, where the raw ratio is meaningless) it equals the paper tables'
+    shift normalization (shift by −2·NLL_ref) — and unlike the two-branch
+    form it stays finite and correctly-signed for references near zero."""
+    return float(1.0 + (nll_model - nll_ref) / max(abs(nll_ref), 1e-6))
+
+
+def coreset_epsilon(
+    cfg: M.MCTMConfig,
+    scaler,
+    Y,
+    cs_Y,
+    cs_weights,
+    params_list,
+    *,
+    chunk: int | None = DEFAULT_CHUNK,
+    mesh=None,
+    axis="data",
+    eta: float | None = None,
+    full_nlls=None,
+) -> float:
+    """Measured coreset approximation parameter ε̂.
+
+    The coreset property the paper proves is |NLL_C(θ) − NLL(θ)| ≤ ε·NLL(θ);
+    this measures the realized ε at the parameters that matter (the coreset
+    fit and the full fit): ε̂ = max_θ |Σ w·nll_C(θ) − NLL_full(θ)|/|NLL_full(θ)|,
+    the full-data side streamed on the mesh, the (small) coreset side
+    single-host. ``full_nlls``: optional per-θ precomputed full-data NLLs
+    (aligned with ``params_list``, None entries computed here) — drivers that
+    already ran the full sweep for the ratio pass them in instead of paying
+    a second full-data pass per θ.
+    """
+    if full_nlls is None:
+        full_nlls = [None] * len(params_list)
+    eps = 0.0
+    for p, full in zip(params_list, full_nlls):
+        if full is None:
+            full = streamed_nll(
+                cfg, scaler, p, Y, chunk=chunk, mesh=mesh, axis=axis, eta=eta
+            )
+        cs = streamed_nll(
+            cfg, scaler, p, cs_Y, weights=cs_weights, chunk=chunk, eta=eta
+        )
+        eps = max(eps, abs(cs - full) / max(abs(full), 1e-9))
+    return float(eps)

@@ -82,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hull import hull_directions, stable_first_unique
+from repro.kernels.extremes.ops import directional_extremes
 from repro.kernels.gram.ops import gram_matrix
 
 __all__ = [
@@ -233,25 +234,14 @@ def leverage_chunk(X, sw, V, inv):
 def hull_chunk_extremes(P, dirs, mask=None):
     """Per-chunk directional extremes: (max, argmax, min, argmin) per direction.
 
-    Laid out (m, c·r) so the reductions run along the contiguous last axis —
-    axis-0 argmax over a (c·r, m) matrix is an order of magnitude slower on
-    CPU (strided) and tiles badly on TPU (sublane reduction). ``mask`` (c·r,)
-    excludes padding rows (sharded inputs padded to a shard multiple) by
-    sending their scores to ∓inf. Pure.
+    Backend-dispatched like ``gram_matrix``: the fused Pallas running-extreme
+    kernel on TPU (the (m, c·r) score block never leaves VMEM), the jnp
+    oracle elsewhere (``kernels.extremes``). ``mask`` (c·r,) excludes padding
+    rows (sharded inputs padded to a shard multiple) by sending their scores
+    to ∓inf. Pure — both the two-pass and one-pass scan bodies (single-host
+    and sharded) fold this into their running extremes.
     """
-    S = dirs @ P.T  # (m, c·r) — chunk-local only, never (n·r, m)
-    if mask is None:
-        Smax = Smin = S
-    else:
-        Smax = jnp.where(mask[None, :], S, -jnp.inf)
-        Smin = jnp.where(mask[None, :], S, jnp.inf)
-    imax = jnp.argmax(Smax, axis=1)
-    imin = jnp.argmin(Smin, axis=1)
-    # gather the extreme values instead of separate max/min passes — argmax
-    # and argmin are the only full sweeps over S
-    vmax = jnp.take_along_axis(Smax, imax[:, None], axis=1)[:, 0]
-    vmin = jnp.take_along_axis(Smin, imin[:, None], axis=1)[:, 0]
-    return vmax, imax, vmin, imin
+    return directional_extremes(P, dirs, mask)
 
 
 def _moments_update(s1, s2, P):

@@ -22,6 +22,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.utils.tree import is_spec_leaf as _is_spec
+
 PyTree = Any
 
 
@@ -93,9 +95,7 @@ def resolve_tree(
         ps = resolve_spec(tuple(spec), tuple(arr.shape), mesh, rules)
         return NamedSharding(mesh, ps)
 
-    return jax.tree.map(
-        one, specs, shapes, is_leaf=lambda s: isinstance(s, tuple)
-    )
+    return jax.tree.map(one, specs, shapes, is_leaf=_is_spec)
 
 
 def batch_specs(batch_shapes: dict, mesh: Mesh, rules: ShardingRules) -> dict:

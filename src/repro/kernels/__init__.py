@@ -9,6 +9,8 @@ Kernels:
   bernstein        — fused Bernstein basis + derivative evaluation (the
                      coreset scoring front-end: bandwidth-bound, one pass)
   gram             — tiled Gram-matrix accumulation XᵀX (leverage scores)
+  extremes         — fused directional extremes dirs @ Pᵀ → running
+                     (max, argmax, min, argmin) accumulator (hull selection)
   flash_attention  — blockwise-softmax causal attention (training hot-spot)
   ssd              — Mamba2 SSD within-chunk kernel (ssm family hot-spot)
 

@@ -1,0 +1,8 @@
+from repro.kernels.extremes.ops import default_extremes_backend, directional_extremes
+from repro.kernels.extremes.ref import directional_extremes_ref
+
+__all__ = [
+    "directional_extremes",
+    "directional_extremes_ref",
+    "default_extremes_backend",
+]

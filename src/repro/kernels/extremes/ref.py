@@ -1,0 +1,33 @@
+"""jnp oracle: fused directional extremes (max, argmax, min, argmin).
+
+This is the exact math of the scoring engines' hull stage — kept here so the
+Pallas kernel and every engine path validate against a single reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def directional_extremes_ref(P, dirs, mask=None):
+    """Per-block directional extremes: (max, argmax, min, argmin) per direction.
+
+    Laid out (m, c·r) so the reductions run along the contiguous last axis —
+    axis-0 argmax over a (c·r, m) matrix is an order of magnitude slower on
+    CPU (strided) and tiles badly on TPU (sublane reduction). ``mask`` (c·r,)
+    excludes padding rows (sharded inputs padded to a shard multiple) by
+    sending their scores to ∓inf. Pure (traceable in jit / scan / shard_map).
+    """
+    S = dirs @ P.T  # (m, c·r) — block-local only, never (n·r, m)
+    if mask is None:
+        Smax = Smin = S
+    else:
+        Smax = jnp.where(mask[None, :], S, -jnp.inf)
+        Smin = jnp.where(mask[None, :], S, jnp.inf)
+    imax = jnp.argmax(Smax, axis=1)
+    imin = jnp.argmin(Smin, axis=1)
+    # gather the extreme values instead of separate max/min passes — argmax
+    # and argmin are the only full sweeps over S
+    vmax = jnp.take_along_axis(Smax, imax[:, None], axis=1)[:, 0]
+    vmin = jnp.take_along_axis(Smin, imin[:, None], axis=1)[:, 0]
+    return vmax, imax, vmin, imin

@@ -1,0 +1,59 @@
+"""Shared launcher stages.
+
+Both launch drivers (``launch.train`` for the LM configs, ``launch.train_mctm``
+for the paper's density experiment) build their runs from the same pieces so
+they cannot drift: the corpus→coreset data-reduction stage lives here, the
+step loop + checkpoint resume live in ``repro.train.loop``, and the fit-layer
+mechanics in ``repro.core.mctm_fit``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.data.pipeline import CoresetSelector, subset_loader
+from repro.utils.compat import make_mesh
+
+__all__ = ["coreset_subset_loader", "data_mesh"]
+
+
+def data_mesh(axis: str = "data"):
+    """Mesh over all available devices with a single data axis — the layout
+    every data-sharded stage here uses (``DistributedScoringEngine``, the
+    sharded fit step, the streamed evaluator). On a multi-pod run build the
+    mesh with ``make_production_mesh`` + ``data_axes`` instead."""
+    return make_mesh((len(jax.devices()),), (axis,))
+
+
+def coreset_subset_loader(
+    data: dict,
+    featurize: Callable,
+    *,
+    k: int,
+    key: jax.Array,
+    batch: int,
+    method: str = "l2-hull",
+    examples_key: str = "tokens",
+    mesh=None,
+    axis="data",
+    sketch_size: int = 0,
+    chunk_size: int | None = None,
+):
+    """The generic coreset data-reduction stage: score ``data[examples_key]``
+    once with Algorithm 1 (``CoresetSelector`` — optionally on a mesh, or
+    through the one-pass sketched strategy) and return a ``sample_fn`` over
+    the weighted subset, coreset weights attached per example for the
+    trainer's per-example-weight loss path.
+    """
+    kwargs = {} if chunk_size is None else {"chunk_size": chunk_size}
+    sel = CoresetSelector(
+        featurize=featurize,
+        method=method,
+        mesh=mesh,
+        axis=axis,
+        sketch_size=sketch_size,
+        **kwargs,
+    )
+    subset = sel.select(data[examples_key], k=k, key=key)
+    return subset_loader(data, subset, batch)

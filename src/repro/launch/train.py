@@ -11,18 +11,17 @@ full config over ``make_production_mesh()``.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_reduced_config
-from repro.data.pipeline import CoresetSelector, subset_loader
 from repro.data.synthetic_lm import TokenStreamConfig, sample_batch, sample_modality_stub
+from repro.launch.stages import coreset_subset_loader
 from repro.models import build_model
 from repro.optim import adamw, chain, clip_by_global_norm, cosine_warmup
-from repro.train import init_train_state, make_train_step
+from repro.train import init_train_state, make_train_step, restore_train_state, train_loop
 
 
 def build_batch_fn(cfg, batch_size: int, seq_len: int, coreset: str, coreset_k: int, key):
@@ -42,7 +41,8 @@ def build_batch_fn(cfg, batch_size: int, seq_len: int, coreset: str, coreset_k: 
     if coreset == "none":
         return lambda step: augment(sample_batch(stream, batch_size, step), step)
 
-    # coreset data-reduction stage: score a corpus once, train on the subset
+    # coreset data-reduction stage (shared with launch.train_mctm's stage
+    # helpers): score a corpus once, train on the weighted subset
     corpus = [sample_batch(stream, 64, s) for s in range(max(coreset_k // 16, 8))]
     data = {k: np.concatenate([c[k] for c in corpus]) for k in ("tokens", "labels")}
     rng = np.random.default_rng(0)
@@ -51,9 +51,9 @@ def build_batch_fn(cfg, batch_size: int, seq_len: int, coreset: str, coreset_k: 
     def featurize(tokens):  # cheap proxy: random-projected bag of tokens
         return proj[tokens].mean(axis=1)
 
-    sel = CoresetSelector(featurize=featurize, method=coreset)
-    subset = sel.select(data["tokens"], k=coreset_k, key=key)
-    fn = subset_loader(data, subset, batch_size)
+    fn = coreset_subset_loader(
+        data, featurize, method=coreset, k=coreset_k, key=key, batch=batch_size
+    )
     return lambda step: augment(fn(step), step)
 
 
@@ -83,33 +83,29 @@ def main():
     state = init_train_state(params, opt)
     mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
     start = 0
-    if mgr and args.resume and mgr.latest_step() is not None:
-        state = mgr.restore(jax.tree.map(np.zeros_like, state))
-        from repro.train.state import TrainState
-
-        state = TrainState(*[jax.tree.map(jax.numpy.asarray, s) for s in state])
-        start = int(state.step)
-        print(f"[resume] from step {start}")
+    if mgr and args.resume:
+        state, start = restore_train_state(mgr, state)
+        if start:
+            print(f"[resume] from step {start}")
 
     batch_fn = build_batch_fn(
         cfg, args.batch, args.seq, args.coreset, args.coreset_k, jax.random.PRNGKey(7)
     )
     step_fn = jax.jit(make_train_step(model, opt))
-    t0 = time.time()
-    for i in range(start, args.steps):
-        state, metrics = step_fn(state, batch_fn(i))
-        if (i + 1) % args.log_every == 0:
-            print(
-                f"step {i + 1:5d} loss {float(metrics['loss']):.4f} "
-                f"gnorm {float(metrics['grad_norm']):.3f} "
-                f"({(time.time() - t0) / (i - start + 1):.3f}s/step)",
-                flush=True,
-            )
-        if mgr and (i + 1) % args.ckpt_every == 0:
-            mgr.save(i + 1, state)
-    if mgr:
-        mgr.save(args.steps, state)
-    print(f"done: {args.steps} steps, final loss {float(metrics['loss']):.4f}")
+    state, losses = train_loop(
+        step_fn,
+        state,
+        batch_fn,
+        args.steps,
+        start=start,
+        mgr=mgr,
+        ckpt_every=args.ckpt_every,
+        log_every=args.log_every,
+        label="train",
+        keep_losses=False,  # production runs: only the final loss is read
+    )
+    final = float(losses[-1]) if losses else float("nan")
+    print(f"done: {args.steps} steps, final loss {final:.4f}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils.tree import is_spec_leaf as _is_spec
+
 PyTree = Any
 Schedule = Callable[[jax.Array], jax.Array]
 
@@ -26,10 +28,6 @@ class Optimizer(NamedTuple):
     state_specs: Callable[[PyTree], PyTree] | None = None
     # state_specs(param_logical_specs) -> logical specs for the opt state
     # (moments inherit the param axes; factored moments drop reduced axes)
-
-
-def _is_spec(x) -> bool:
-    return isinstance(x, tuple)
 
 
 def _map_specs(fn, specs):

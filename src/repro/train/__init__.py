@@ -1,3 +1,4 @@
+from repro.train.loop import restore_train_state, train_loop
 from repro.train.state import TrainState, init_train_state
 from repro.train.trainer import make_train_step, make_serve_steps, shard_train_step
 
@@ -7,4 +8,6 @@ __all__ = [
     "make_train_step",
     "make_serve_steps",
     "shard_train_step",
+    "restore_train_state",
+    "train_loop",
 ]

@@ -1,0 +1,83 @@
+"""Shared step-loop and checkpoint-resume mechanics.
+
+The launch drivers (``launch.train``, ``launch.train_mctm``) and the MCTM fit
+layer (``core.mctm_fit``) all drive the same loop: step → collect loss →
+periodic log → periodic checkpoint → final checkpoint, with restart-after-
+failure resuming from the latest restorable step. Written once here so the
+launchers cannot drift.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["restore_train_state", "train_loop"]
+
+
+def restore_train_state(mgr, state, *, shardings=None):
+    """Restore the latest checkpoint into ``state``'s structure.
+
+    No-op (returns ``(state, 0)``) when ``mgr`` is None or holds no steps.
+    ``shardings``: optional pytree of NamedShardings matching ``state`` —
+    restored host arrays are device_put straight to their target shardings
+    (the sharded-fit resume path); otherwise plain ``jnp.asarray``.
+    """
+    if mgr is None or mgr.latest_step() is None:
+        return state, 0
+    host = mgr.restore(jax.tree.map(np.asarray, state))
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s), host, shardings
+        )
+    else:
+        state = jax.tree.map(jnp.asarray, host)
+    return state, int(np.asarray(state.step))
+
+
+def train_loop(
+    step_fn: Callable,
+    state,
+    batch_fn: Callable[[int], dict],
+    steps: int,
+    *,
+    start: int = 0,
+    mgr=None,
+    ckpt_every: int = 0,
+    log_every: int = 0,
+    label: str = "train",
+    keep_losses: bool = True,
+):
+    """Drive ``step_fn(state, batch_fn(i))`` from ``start`` to ``steps``.
+
+    Returns ``(state, losses)`` with one loss scalar per executed step
+    (device scalars — callers convert lazily, avoiding a sync per step).
+    ``keep_losses=False`` retains only the latest loss (long production runs:
+    one live device buffer instead of one per step). Checkpoints every
+    ``ckpt_every`` steps plus a final save when ``mgr`` is given and any
+    step ran.
+    """
+    losses = []
+    t0 = time.time()
+    metrics = None
+    for i in range(start, steps):
+        state, metrics = step_fn(state, batch_fn(i))
+        if keep_losses:
+            losses.append(metrics["loss"])
+        else:
+            losses = [metrics["loss"]]
+        if log_every and (i + 1) % log_every == 0:
+            print(
+                f"[{label}] step {i + 1:5d} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"({(time.time() - t0) / (i - start + 1):.3f}s/step)",
+                flush=True,
+            )
+        if mgr is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+            mgr.save(i + 1, state)
+    if mgr is not None and steps > start:
+        mgr.save(steps, state)
+    return state, losses

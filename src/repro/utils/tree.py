@@ -6,6 +6,14 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def is_spec_leaf(x) -> bool:
+    """Logical-sharding-spec leaves are plain tuples of axis names; param
+    containers may themselves be NamedTuples (e.g. MCTMParams), which are
+    tuples too — exclude them so spec trees can mirror any param pytree.
+    Shared by the sharding resolver and the optimizer state_specs maps."""
+    return isinstance(x, tuple) and not hasattr(x, "_fields")
+
+
 def tree_size(tree) -> int:
     """Total number of array elements in a pytree."""
     return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

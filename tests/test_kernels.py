@@ -44,6 +44,60 @@ def test_gram_kernel_sweep(shape, dtype):
     np.testing.assert_allclose(got, ref, rtol=tol, atol=tol * np.abs(ref).max())
 
 
+# ----------------------------------------------------------- extremes
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 8, 5), (777, 24, 7), (1024, 130, 14)])
+def test_extremes_kernel_sweep(n, m, d):
+    from repro.kernels.extremes.ops import directional_extremes
+    from repro.kernels.extremes.ref import directional_extremes_ref
+
+    rng = np.random.default_rng(n + m)
+    P = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    dirs = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    got = directional_extremes(P, dirs, interpret=True)
+    ref = directional_extremes_ref(P, dirs)
+    for g, r in zip(got, ref):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float64), np.asarray(r, np.float64), atol=1e-4
+        )
+
+
+def test_extremes_kernel_mask_and_ties():
+    """Tail masks (the engines' shard-padding pattern) and exact duplicates:
+    masked rows can never win, ties break to the lowest row id — matching the
+    dense-argmax oracle bit for bit on the indices."""
+    from repro.kernels.extremes.ops import directional_extremes
+    from repro.kernels.extremes.ref import directional_extremes_ref
+
+    rng = np.random.default_rng(0)
+    P_np = rng.standard_normal((300, 6)).astype(np.float32)
+    P_np[100:200] = P_np[:100]  # duplicate block → cross-block ties
+    P = jnp.asarray(P_np)
+    dirs = jnp.asarray(rng.standard_normal((16, 6)), jnp.float32)
+    n_valid = 257  # ragged tail mask
+    mask = jnp.arange(300) < n_valid
+    vmax, imax, vmin, imin = directional_extremes(P, dirs, mask, interpret=True)
+    rvmax, rimax, rvmin, rimin = directional_extremes_ref(P, dirs, mask)
+    np.testing.assert_array_equal(np.asarray(imax), np.asarray(rimax))
+    np.testing.assert_array_equal(np.asarray(imin), np.asarray(rimin))
+    np.testing.assert_allclose(np.asarray(vmax), np.asarray(rvmax), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(vmin), np.asarray(rvmin), atol=1e-4)
+    assert int(np.max(imax)) < n_valid and int(np.max(imin)) < n_valid
+    # any direction whose max lives in the duplicated block must have resolved
+    # the cross-block tie toward the first copy (rows < 100)
+    assert not np.any((np.asarray(imax) >= 100) & (np.asarray(imax) < 200))
+
+
+def test_extremes_backend_dispatch():
+    from repro.kernels.extremes.ops import directional_extremes
+
+    P = jnp.ones((4, 2), jnp.float32)
+    dirs = jnp.ones((3, 2), jnp.float32)
+    with pytest.raises(ValueError):
+        directional_extremes(P, dirs, backend="nope")
+
+
 # ----------------------------------------------------------- flash attention
 
 

@@ -1,0 +1,272 @@
+"""Fit-layer tests (core.mctm_fit): streamed featurization, sharded parity,
+checkpoint resume, the streamed evaluator, and the coreset (1±ε) check."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core import mctm_fit as F
+from repro.core.bernstein import DataScaler
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _gaussian(n=2000, seed=0, rho=0.7):
+    rng = np.random.default_rng(seed)
+    L = np.linalg.cholesky(np.array([[1, rho], [rho, 1]]))
+    Y = rng.standard_normal((n, 2)) @ L.T
+    cfg = M.MCTMConfig(J=2, degree=5)
+    return cfg, DataScaler.fit(Y), Y
+
+
+def _counting_featurize(cfg, scaler, calls):
+    from repro.core.scoring import _mctm_featurize
+
+    base = _mctm_featurize(cfg, scaler)
+
+    def feat(Yc):
+        calls.append(int(Yc.shape[0]))
+        return base(Yc)
+
+    return feat
+
+
+# ------------------------------------------------------------- streaming
+
+
+def test_streamed_fit_never_materializes_full_basis():
+    """THE streaming contract: with chunk_size < n, no featurize call — at
+    trace time or run time — ever sees more than one chunk of rows, so an
+    (n, J, d) basis tensor cannot exist (the counting-featurize assertion of
+    tests/test_pass_strategies.py, applied to the fit layer)."""
+    cfg, scaler, Y = _gaussian(n=1000)
+    calls: list = []
+    fit = F.fit_mctm_streaming(
+        cfg, scaler, Y, steps=8, chunk_size=128,
+        featurize=_counting_featurize(cfg, scaler, calls),
+    )
+    assert len(calls) >= 1
+    assert max(calls) <= 128          # O(chunk·J·d) peak, never (n, J, d)
+    assert np.isfinite(fit.final_nll)
+
+    # the evaluator streams too (featurize traces once per distinct chunk
+    # shape under jit — full-size 128 plus the 104-row ragged tail — so the
+    # materialization bound is on the largest call, not the call count)
+    calls.clear()
+    F.streamed_nll(
+        cfg, scaler, fit.params, Y, chunk=128,
+        featurize=_counting_featurize(cfg, scaler, calls),
+    )
+    assert calls and max(calls) <= 128
+    assert sorted(set(calls)) == [1000 % 128, 128]
+
+
+def test_streamed_fit_matches_dense_fast_path():
+    """Microbatched streaming optimizes the identical objective: the final
+    NLL agrees with the dense single-chunk fast path to float noise."""
+    cfg, scaler, Y = _gaussian(n=600)
+    opt_args = dict(steps=150, lr=5e-2, key=jax.random.PRNGKey(1))
+    dense = F.fit_mctm_streaming(cfg, scaler, Y, chunk_size=0, **opt_args)
+    chunked = F.fit_mctm_streaming(cfg, scaler, Y, chunk_size=128, **opt_args)
+    rel = abs(dense.final_nll - chunked.final_nll) / abs(dense.final_nll)
+    assert rel < 1e-3, (dense.final_nll, chunked.final_nll)
+
+
+def test_streamed_nll_matches_dense():
+    cfg, scaler, Y = _gaussian(n=1003)  # ragged vs chunk on purpose
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y, jnp.float32))
+    w = np.random.default_rng(0).random(1003).astype(np.float32) + 0.5
+    dense = float(M.nll(cfg, params, A, Ap, jnp.asarray(w)))
+    streamed = F.streamed_nll(cfg, scaler, params, Y, weights=w, chunk=97)
+    assert abs(dense - streamed) / abs(dense) < 1e-5
+
+    # eta override = evaluating under a strict-η config
+    import dataclasses
+
+    strict = dataclasses.replace(cfg, eta=1e-9)
+    dense_strict = float(M.nll(strict, params, A, Ap, jnp.asarray(w)))
+    streamed_strict = F.streamed_nll(
+        cfg, scaler, params, Y, weights=w, chunk=97, eta=1e-9
+    )
+    assert abs(dense_strict - streamed_strict) / abs(dense_strict) < 1e-5
+
+
+def test_weighted_fit_equals_mctm_nll_objective():
+    """Coreset weights flow through the per-example-weight path: a weighted
+    fit's final NLL is the weighted mctm.nll at the fitted parameters."""
+    cfg, scaler, Y = _gaussian(n=400)
+    w = np.random.default_rng(1).random(400).astype(np.float32) * 3 + 0.1
+    fit = F.fit_mctm_streaming(cfg, scaler, Y, weights=w, steps=100)
+    A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y, jnp.float32))
+    dense = float(M.nll(cfg, fit.params, A, Ap, jnp.asarray(w)))
+    assert abs(dense - fit.final_nll) / abs(dense) < 1e-5
+
+
+# ------------------------------------------------------------- checkpointing
+
+
+def test_checkpoint_resume_reproduces_straight_run(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    cfg, scaler, Y = _gaussian(n=500)
+    # one shared optimizer so the lr schedule sees the same total horizon
+    opt = F.default_fit_optimizer(5e-2, 60)
+    common = dict(key=jax.random.PRNGKey(2), optimizer=opt, chunk_size=128)
+    straight = F.fit_mctm_streaming(cfg, scaler, Y, steps=60, **common)
+
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+    F.fit_mctm_streaming(
+        cfg, scaler, Y, steps=30, checkpoint=mgr, ckpt_every=10, **common
+    )
+    assert mgr.latest_step() == 30
+    resumed = F.fit_mctm_streaming(
+        cfg, scaler, Y, steps=60, checkpoint=mgr, resume=True, **common
+    )
+    # restore roundtrips f32 bits exactly; the remaining 30 steps replay the
+    # identical jitted computation
+    np.testing.assert_allclose(
+        np.asarray(resumed.params.theta_raw),
+        np.asarray(straight.params.theta_raw),
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(resumed.params.lam), np.asarray(straight.params.lam), atol=1e-6
+    )
+    assert len(resumed.losses) == 30  # only the replayed tail ran
+
+
+# ------------------------------------------------------------- sharded paths
+
+
+def _run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_fit_matches_single_host_ragged():
+    """Acceptance: the sharded fit on a ragged fake-device mesh matches the
+    single-host fit's final NLL to ≤ 1e-4 (relative), weights included."""
+    _run_in_subprocess(
+        """
+        import jax, numpy as np
+        from repro.core import mctm as M
+        from repro.core import mctm_fit as F
+        from repro.core.bernstein import DataScaler
+        from repro.utils.compat import make_mesh
+
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        Y = rng.standard_normal((1501, 2)).astype(np.float32)  # ragged
+        w = (rng.random(1501) * 3 + 0.1).astype(np.float32)
+        cfg = M.MCTMConfig(J=2, degree=5)
+        scaler = DataScaler.fit(Y)
+        kw = dict(weights=w, steps=250, key=jax.random.PRNGKey(3), chunk_size=256)
+        single = F.fit_mctm_streaming(cfg, scaler, Y, **kw)
+        shard = F.fit_mctm_streaming(cfg, scaler, Y, mesh=mesh, **kw)
+        rel = abs(single.final_nll - shard.final_nll) / abs(single.final_nll)
+        assert rel <= 1e-4, (single.final_nll, shard.final_nll, rel)
+        print("OK", rel)
+        """
+    )
+
+
+def test_sharded_streamed_nll_one_psum():
+    """The sharded evaluator matches the dense NLL on a ragged mesh AND
+    lowers to exactly ONE all-reduce — the fused-collective contract."""
+    _run_in_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import mctm as M
+        from repro.core import mctm_fit as F
+        from repro.core.bernstein import DataScaler
+        from repro.core.distributed_coreset import shard_layout
+        from repro.utils.compat import make_mesh
+        from repro.utils.hlo import collective_stats
+
+        mesh = make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        Y = rng.standard_normal((1203, 2)).astype(np.float32)
+        w = (rng.random(1203) + 0.5).astype(np.float32)
+        cfg = M.MCTMConfig(J=2, degree=5)
+        scaler = DataScaler.fit(Y)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        A, Ap = M.basis_features(cfg, scaler, jnp.asarray(Y))
+        dense = float(M.nll(cfg, params, A, Ap, jnp.asarray(w)))
+        got = F.streamed_nll(cfg, scaler, params, Y, weights=w, chunk=128, mesh=mesh)
+        assert abs(dense - got) / abs(dense) < 1e-5, (dense, got)
+
+        # ONE collective: lower the evaluator and census its all-reduces
+        chunk, cps, n_pad = shard_layout(mesh, ("data",), 1203, 128)
+        feat = F.fit_featurize(cfg, scaler)
+        fn = F._make_sharded_nll_fn(feat, cfg, mesh, ("data",), chunk, cps)
+        pad = n_pad - 1203
+        Yp = np.concatenate([Y, np.broadcast_to(Y[:1], (pad, 2))]).astype(np.float32)
+        wp = np.concatenate([w, np.zeros(pad, np.float32)])
+        hlo = fn.lower(params, jnp.asarray(Yp), jnp.asarray(wp)).compile().as_text()
+        stats = collective_stats(hlo)
+        n_ar = stats["by_op"].get("all-reduce", {}).get("count", 0)
+        assert n_ar == 1, stats["by_op"]
+        print("OK", n_ar)
+        """
+    )
+
+
+# ------------------------------------------------------- (1±ε) validation
+
+
+def test_coreset_fit_nll_ratio_within_measured_epsilon():
+    """The paper's headline loop, in miniature: build an l2-hull coreset,
+    fit on it, measure the realized ε̂, and check the coreset-fit/full-fit
+    NLL ratio lands in the (1±ε̂) band (with the finite-step slack the
+    driver uses)."""
+    from repro.core.coreset import build_coreset
+    from repro.data.dgp import generate
+
+    Y = generate("normal_mixture", 4000, seed=0).astype(np.float32)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    full = F.fit_mctm_streaming(
+        cfg, scaler, Y, steps=300, key=jax.random.PRNGKey(0)
+    )
+    cs = build_coreset(cfg, scaler, Y, 400, "l2-hull", key=jax.random.PRNGKey(1))
+    fit = F.fit_mctm_streaming(
+        cfg, scaler, Y[cs.indices],
+        weights=np.asarray(cs.weights, np.float32),
+        steps=300, key=jax.random.PRNGKey(2),
+    )
+    eps = F.coreset_epsilon(
+        cfg, scaler, Y, Y[cs.indices], np.asarray(cs.weights, np.float32),
+        [fit.params, full.params], eta=1e-9,
+    )
+    nll_cs = F.streamed_nll(cfg, scaler, fit.params, Y, eta=1e-9)
+    nll_full = F.streamed_nll(cfg, scaler, full.params, Y, eta=1e-9)
+    ratio = F.likelihood_ratio(nll_cs, nll_full)
+    slack = 0.02
+    lo, hi = 1.0 - eps - slack, (1.0 + eps) / (1.0 - eps) + slack
+    assert lo <= ratio <= hi, (ratio, eps)
+    assert eps < 0.5  # the measured ε must be a meaningful bound, not junk
+
+
+def test_likelihood_ratio_shift_normalization():
+    assert F.likelihood_ratio(110.0, 100.0) == pytest.approx(1.1)
+    # negative reference NLL: one-plus-relative-excess reading
+    assert F.likelihood_ratio(-90.0, -100.0) == pytest.approx(1.1)
+    assert F.likelihood_ratio(-100.0, -100.0) == pytest.approx(1.0)
