@@ -1,0 +1,247 @@
+"""Bench-regression gate: diff freshly generated BENCH_*.json records against
+checked-in baselines and FAIL (exit 1) on regression, instead of only
+uploading artifacts.
+
+Convention (recorded in ROADMAP.md): CI smoke runs write their records to
+``results/bench/BENCH_*_smoke*.json``; the committed reference records for
+the same smoke configuration live in ``benchmarks/baselines/``. The gate
+compares generated vs baseline per metric class:
+
+* **time-ratio metrics** (speedups — dimensionless ratios of two timings on
+  the SAME machine, so they transfer across runners): a regression of more
+  than ``--time-ratio`` (default 1.5×) fails, i.e. generated must be
+  ≥ baseline / 1.5. Raw wall-clock seconds are never gated — they don't
+  transfer across runners.
+* **exact-tolerance metrics** (ε̂, score diffs, sketch errors — quality
+  numbers that only move with code/version changes): generated must stay
+  within a small multiplicative + absolute envelope of the baseline
+  (``value ≤ baseline·rel + abs``), so a quality regression can't hide
+  behind runner noise.
+* **invariants** (booleans like ``all_within_band``/``hull_points_equal``
+  and config fields like n/degree/chunk): must hold exactly; a config
+  mismatch means the comparison is meaningless and also fails.
+
+Usage::
+
+    python scripts/bench_gate.py                         # gate all defaults
+    python scripts/bench_gate.py --generated results/bench/BENCH_scoring_smoke.json \
+        --baseline benchmarks/baselines/BENCH_scoring_smoke.json
+
+Missing generated files fail (the bench didn't run); missing baselines fail
+(the gate is wired but unbaselined) unless ``--allow-missing-baseline``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Any
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+GENERATED_DIR = os.path.join("results", "bench")
+BASELINE_DIR = os.path.join("benchmarks", "baselines")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One gated metric. ``path`` is a dotted path into the record;
+    ``[]`` segments map over list elements (e.g. ``per_k.[].eps_hat``)."""
+
+    path: str
+    kind: str            # "time_ratio" | "exact" | "invariant"
+    rel: float = 1.5     # exact: multiplicative envelope
+    abs: float = 0.0     # exact: additive envelope
+    ratio: float | None = None  # time_ratio: per-rule override of --time-ratio
+
+
+# Per-file rule sets, keyed by the basename prefix of the generated record.
+RULES: dict[str, list[Rule]] = {
+    "BENCH_scoring": [
+        Rule("n", "invariant"),
+        Rule("degree", "invariant"),
+        Rule("chunk_size", "invariant"),
+        Rule("speedup", "time_ratio"),
+        Rule("max_abs_score_diff", "exact", rel=4.0, abs=1e-6),
+        Rule("one_pass_vs_two_pass.speedup", "time_ratio"),
+        Rule("one_pass_vs_two_pass.one_pass_rows_streamed", "invariant"),
+        Rule("one_pass_vs_two_pass.one_pass_featurize_calls", "invariant"),
+        Rule("one_pass_vs_two_pass.median_rel_score_err", "exact", rel=2.0, abs=0.01),
+        Rule("one_pass_vs_two_pass.max_rel_score_err", "exact", rel=2.0, abs=0.05),
+    ],
+    "BENCH_dist_scoring": [
+        Rule("n", "invariant"),
+        Rule("degree", "invariant"),
+        Rule("devices", "invariant"),
+        Rule("hull_points_equal", "invariant"),
+        Rule("speedup", "time_ratio"),
+        Rule("max_abs_score_diff", "exact", rel=4.0, abs=1e-7),
+    ],
+    "BENCH_mctm_fit": [
+        Rule("n", "invariant"),
+        Rule("degree", "invariant"),
+        Rule("steps", "invariant"),
+        Rule("fit_method", "invariant"),
+        Rule("ref_method", "invariant"),
+        Rule("all_within_band", "invariant"),
+        Rule("full_nll_per_point", "exact", rel=1.0, abs=0.01),
+        Rule("per_k.[].within_band", "invariant"),
+        Rule("per_k.[].eps_hat", "exact", rel=1.5, abs=0.01),
+        # numerator (long ref fit) and denominator (seconds-long coreset
+        # build+fit) are timed at different points of the run, so transient
+        # runner load skews this ratio far more than the back-to-back
+        # scoring speedups — wider envelope, still catches order-of-magnitude
+        # regressions
+        Rule("per_k.[].speedup_vs_full_fit", "time_ratio", ratio=3.0),
+    ],
+}
+
+# Default gate targets: (generated relpath, baseline relpath).
+DEFAULT_PAIRS = [
+    ("BENCH_scoring_smoke.json", "BENCH_scoring_smoke.json"),
+    ("BENCH_dist_scoring_smoke.json", "BENCH_dist_scoring_smoke.json"),
+    ("BENCH_mctm_fit_smoke.json", "BENCH_mctm_fit_smoke.json"),
+    ("BENCH_mctm_fit_smoke_lbfgs.json", "BENCH_mctm_fit_smoke_lbfgs.json"),
+    ("BENCH_mctm_fit_smoke_minibatch.json", "BENCH_mctm_fit_smoke_minibatch.json"),
+]
+
+
+def _lookup(record: Any, path: str) -> list[tuple[str, Any]]:
+    """Resolve a dotted path; ``[]`` fans out over list elements. Returns
+    (concrete_path, value) pairs — missing keys resolve to a single
+    ``(path, KeyError)`` marker the caller reports."""
+    out = [("", record)]
+    for seg in path.split("."):
+        nxt = []
+        for prefix, val in out:
+            if seg == "[]":
+                if not isinstance(val, list):
+                    return [(path, KeyError(f"{prefix or '<root>'} is not a list"))]
+                nxt.extend((f"{prefix}[{i}]", v) for i, v in enumerate(val))
+            else:
+                if not isinstance(val, dict) or seg not in val:
+                    return [(path, KeyError(f"missing key {seg!r} under "
+                                            f"{prefix or '<root>'}"))]
+                nxt.append((f"{prefix}.{seg}".lstrip("."), val[seg]))
+        out = nxt
+    return out
+
+
+def check_rule(rule: Rule, generated: dict, baseline: dict,
+               time_ratio: float) -> list[str]:
+    """Return failure messages for one rule (empty = pass)."""
+    gen = _lookup(generated, rule.path)
+    base = _lookup(baseline, rule.path)
+    if any(isinstance(v, KeyError) for _, v in gen):
+        return [f"{rule.path}: {gen[0][1]} in generated record"]
+    if any(isinstance(v, KeyError) for _, v in base):
+        return [f"{rule.path}: {base[0][1]} in baseline record"]
+    if len(gen) != len(base):
+        return [f"{rule.path}: generated has {len(gen)} entries, "
+                f"baseline {len(base)} — records not comparable"]
+    fails = []
+    for (where, g), (_, b) in zip(gen, base):
+        if rule.kind == "invariant":
+            if g != b:
+                fails.append(f"{where}: invariant {g!r} != baseline {b!r}")
+        elif rule.kind == "time_ratio":
+            ratio = rule.ratio if rule.ratio is not None else time_ratio
+            floor = float(b) / ratio
+            if float(g) < floor:
+                fails.append(
+                    f"{where}: {float(g):.4g} regressed more than "
+                    f"{ratio}x vs baseline {float(b):.4g} "
+                    f"(floor {floor:.4g})"
+                )
+        elif rule.kind == "exact":
+            ceiling = float(b) * rule.rel + rule.abs
+            if float(g) > ceiling:
+                fails.append(
+                    f"{where}: {float(g):.6g} exceeds tolerance ceiling "
+                    f"{ceiling:.6g} (baseline {float(b):.6g} × {rule.rel} "
+                    f"+ {rule.abs})"
+                )
+        else:  # pragma: no cover - rule table is static
+            raise ValueError(rule.kind)
+    return fails
+
+
+def rules_for(path: str) -> list[Rule] | None:
+    name = os.path.basename(path)
+    for prefix in sorted(RULES, key=len, reverse=True):
+        if name.startswith(prefix):
+            return RULES[prefix]
+    return None
+
+
+def gate_pair(gen_path: str, base_path: str, *, time_ratio: float,
+              allow_missing_baseline: bool = False) -> list[str]:
+    """Gate one generated/baseline file pair; returns failure messages."""
+    rules = rules_for(gen_path)
+    if rules is None:
+        return [f"{gen_path}: no rule set matches this filename"]
+    if not os.path.exists(gen_path):
+        return [f"{gen_path}: generated record missing (bench did not run?)"]
+    if not os.path.exists(base_path):
+        if allow_missing_baseline:
+            print(f"[bench_gate] SKIP {gen_path} (no baseline at {base_path})")
+            return []
+        return [f"{base_path}: baseline missing — generate it and commit "
+                f"(see ROADMAP bench-gate convention)"]
+    with open(gen_path) as f:
+        generated = json.load(f)
+    with open(base_path) as f:
+        baseline = json.load(f)
+    fails = []
+    for rule in rules:
+        fails.extend(
+            f"{os.path.basename(gen_path)} :: {msg}"
+            for msg in check_rule(rule, generated, baseline, time_ratio)
+        )
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--generated", default=None,
+                    help="one generated record (requires --baseline)")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--generated-dir", default=os.path.join(REPO_ROOT, GENERATED_DIR))
+    ap.add_argument("--baseline-dir", default=os.path.join(REPO_ROOT, BASELINE_DIR))
+    ap.add_argument("--time-ratio", type=float, default=1.5,
+                    help="max tolerated wall-clock-ratio regression")
+    ap.add_argument("--allow-missing-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    if (args.generated is None) != (args.baseline is None):
+        ap.error("--generated and --baseline must be passed together")
+    if args.generated:
+        pairs = [(args.generated, args.baseline)]
+    else:
+        pairs = [
+            (os.path.join(args.generated_dir, g), os.path.join(args.baseline_dir, b))
+            for g, b in DEFAULT_PAIRS
+        ]
+
+    failures = []
+    for gen_path, base_path in pairs:
+        fails = gate_pair(
+            gen_path, base_path, time_ratio=args.time_ratio,
+            allow_missing_baseline=args.allow_missing_baseline,
+        )
+        if fails:
+            failures.extend(fails)
+        elif os.path.exists(gen_path):
+            print(f"[bench_gate] PASS {os.path.relpath(gen_path, REPO_ROOT)}")
+    if failures:
+        print(f"[bench_gate] {len(failures)} regression(s):", file=sys.stderr)
+        for msg in failures:
+            print(f"  FAIL {msg}", file=sys.stderr)
+        return 1
+    print("[bench_gate] all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

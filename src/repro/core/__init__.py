@@ -2,9 +2,11 @@
 
 Public API:
   - MCTMConfig / init_params / nll / fit_mctm / log_density / sample
-  - fit_mctm_streaming / streamed_nll / coreset_epsilon (the fit layer:
-    streamed + SPMD-sharded weighted-NLL training and the (1±ε) evaluator —
-    see repro.core.mctm_fit's module doc for the contract)
+  - fit_density_model / fit_mctm_streaming / streamed_nll / coreset_epsilon
+    (the fit layer: streamed + SPMD-sharded weighted-NLL training behind one
+    method= contract — full-batch adam, streaming-HVP lbfgs, sampled
+    minibatch — and the (1±ε) evaluator; see repro.core.mctm_fit's
+    module-doc method table for the contract)
   - build_coreset / evaluate_coreset (Algorithm 1 + baselines)
   - leverage scores (exact, sketched, ridge, root), hull ε-kernels
   - ScoringEngine + pass strategies (TwoPassExact / TwoPassSketched /
@@ -48,7 +50,9 @@ from repro.core.mctm import (
     sample,
 )
 from repro.core.mctm_fit import (
+    FIT_METHODS,
     coreset_epsilon,
+    fit_density_model,
     fit_mctm_streaming,
     likelihood_ratio,
     streamed_nll,

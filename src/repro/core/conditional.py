@@ -124,24 +124,41 @@ def fit_cmctm(
     key=None,
     steps: int = 1500,
     lr: float = 5e-2,
+    method: str = "adam",
     mesh=None,
     chunk_size: int | None = None,
     microbatches: int | None = None,
+    batch_size: int | None = None,
+    checkpoint=None,
+    ckpt_every: int = 0,
+    resume: bool = False,
 ) -> M.FitResult:
     """Conditional-MCTM fit through the shared fit subsystem: ``mesh=`` runs
     the step SPMD-sharded, ``chunk_size`` streams the basis evaluation
-    microbatch-by-microbatch for full-data fits beyond one chunk."""
-    from repro.core.mctm_fit import batch_plan, default_fit_optimizer, fit_density_model
+    microbatch-by-microbatch for full-data fits beyond one chunk, and
+    ``method`` selects any fit mode of the ``mctm_fit`` method table
+    (``"adam"`` / ``"lbfgs"`` streaming-HVP / ``"minibatch"`` with
+    ``batch_size`` sampled rows per step) — the conditional rows travel
+    column-concatenated (y_i, x_i), so the sampled-minibatch loader and the
+    L-BFGS oracles stream them like any other batch. ``checkpoint=`` +
+    ``resume=True`` restart from the latest saved step in every mode."""
+    from repro.core.mctm_fit import (
+        default_fit_optimizer,
+        fit_density_model,
+        method_batch_plan,
+    )
 
     if key is None:
         key = jax.random.PRNGKey(0)
     params0 = init_cparams(key, cfg)
     Yn = np.asarray(Y, np.float32)
     n = int(Yn.shape[0])
-    w, total_w, chunk, microbatches = batch_plan(n, weights, chunk_size, microbatches)
+    w, total_w, chunk, microbatches, batch_size, norm = method_batch_plan(
+        method, n, weights, chunk_size, microbatches, batch_size, mesh
+    )
     YX = np.concatenate([Yn, np.asarray(X, np.float32)], axis=1)
-    model = CMCTMDensityModel(cfg, scaler, norm=total_w / microbatches)
-    if microbatches == 1:
+    model = CMCTMDensityModel(cfg, scaler, norm=norm)
+    if method == "adam" and microbatches == 1:
         # dense fast path (mirrors fit_mctm_streaming): featurize exactly
         # once outside the step instead of once per optimizer step
         A, Ap = M.basis_features(cfg.base, scaler, jnp.asarray(Yn))
@@ -155,9 +172,14 @@ def fit_cmctm(
         batch,
         optimizer=default_fit_optimizer(lr, steps),
         steps=steps,
+        method=method,
         mesh=mesh,
         microbatches=microbatches,
-        label="cmctm-fit",
+        batch_size=batch_size,
+        checkpoint=checkpoint,
+        ckpt_every=ckpt_every,
+        resume=resume,
+        label=f"cmctm-{method}",
     )
     params = CMCTMParams(*params)
 

@@ -39,6 +39,9 @@ def greedy_hull_projection(
     (q − t). Returns (t, support_indices, distances) with support_indices the
     sequence of extremal points touched (−1 padding).
     """
+    # match q to P's dtype: a mixed-precision query (e.g. f64 q under
+    # JAX_ENABLE_X64) would otherwise promote the scan carry mid-body
+    q = jnp.asarray(q, P.dtype)
     d0 = jnp.sum(jnp.square(P - q), axis=1)
     i0 = jnp.argmin(d0)
     t0 = P[i0]

@@ -177,6 +177,7 @@ def fit_mctm(
     mesh=None,
     chunk_size: int | None = None,
     microbatches: int | None = None,
+    batch_size: int | None = None,
     optimizer=None,
     checkpoint=None,
     ckpt_every: int = 0,
@@ -188,19 +189,22 @@ def fit_mctm(
     The mean-normalized objective keeps the lr scale-free across coreset
     sizes.
 
-    The adam path delegates to the fit subsystem (``repro.core.mctm_fit``):
-    basis featurization streams microbatch-by-microbatch (inputs beyond
+    ``method`` selects a fit-subsystem mode (``repro.core.mctm_fit`` — see
+    its module-doc method table): ``"adam"`` full-batch first-order,
+    ``"lbfgs"`` streaming-HVP quasi-Newton (``steps`` are iterations), or
+    ``"minibatch"`` (``batch_size`` sampled weighted rows per step). All
+    three stream the basis microbatch-by-microbatch (inputs beyond
     ``chunk_size`` rows — default ``scoring.DEFAULT_CHUNK`` — never
-    materialize an (n, J, d) tensor), ``mesh=`` runs the identical step
-    SPMD-sharded over the data axes, and ``checkpoint=`` (a
-    ``CheckpointManager``) enables periodic saves + ``resume=True`` restart.
-    The scipy lbfgs path stays the dense small-n alternative.
+    materialize an (n, J, d) tensor), run SPMD-sharded with ``mesh=``, and
+    support ``checkpoint=`` (a ``CheckpointManager``) periodic saves +
+    ``resume=True`` restart. ``method="scipy-lbfgs"`` is the dense small-n
+    oracle kept for tests (scipy L-BFGS-B on a materialized basis).
     """
     if init is None:
         if key is None:
             key = jax.random.PRNGKey(0)
         init = init_params(key, cfg)
-    if method == "adam":
+    if method in ("adam", "lbfgs", "minibatch"):
         from repro.core import mctm_fit
         from repro.core.scoring import DEFAULT_CHUNK
 
@@ -213,29 +217,40 @@ def fit_mctm(
             steps=steps,
             lr=lr,
             optimizer=optimizer,
+            method=method,
             mesh=mesh,
             chunk_size=DEFAULT_CHUNK if chunk_size is None else chunk_size,
             microbatches=microbatches,
+            batch_size=batch_size,
             checkpoint=checkpoint,
             ckpt_every=ckpt_every,
             resume=resume,
         )
-    if method != "lbfgs":
+    if method != "scipy-lbfgs":
         raise ValueError(f"unknown fit method: {method}")
 
-    A, Ap = basis_features(cfg, scaler, jnp.asarray(Y))
-    total_w = float(Y.shape[0]) if weights is None else float(jnp.sum(weights))
+    Yj = jnp.asarray(Y)
+    wj = None if weights is None else jnp.asarray(weights)
+    total_w = float(Y.shape[0]) if weights is None else float(jnp.sum(wj))
 
     def loss_fn(params: MCTMParams) -> jax.Array:
-        return nll(cfg, params, A, Ap, weights) / total_w
+        # featurize INSIDE the (jitted) objective: the (n, J, d) basis exists
+        # only for the duration of each evaluation instead of sitting in this
+        # closure for the whole optimize
+        A, Ap = basis_features(cfg, scaler, Yj)
+        return nll(cfg, params, A, Ap, wj) / total_w
 
     params, losses = _scipy_lbfgs_fit(loss_fn, init)
-    final = float(nll(cfg, params, A, Ap, weights))
+    final = float(jax.jit(loss_fn)(params)) * total_w
     return FitResult(params=params, losses=np.asarray(losses), final_nll=final)
 
 
 def _scipy_lbfgs_fit(loss_fn, params0: MCTMParams):
-    """L-BFGS-B via scipy on the flattened parameter vector."""
+    """L-BFGS-B via scipy on the flattened parameter vector — the dense
+    small-n oracle the streaming L-BFGS (``mctm_fit``, ``method="lbfgs"``)
+    is tested against. ``loss_fn`` should featurize inside its (jitted) body
+    rather than close over a materialized basis, so nothing O(n·J·d) lives
+    across the optimize."""
     import jax.flatten_util  # not auto-imported on all supported jax versions
     from scipy.optimize import minimize
 

@@ -4,6 +4,42 @@ training, and the streamed full-data evaluator behind the (1±ε) validation.
 Fit-layer contract (the training-side mirror of the PassStrategy contract in
 ``core.scoring``)
 -----------------------------------------------------------------------------
+Fit methods — ``fit_density_model(method=...)`` is the single entry point
+under every MCTM-family fit; each method is one row of this table (state /
+update / streaming guarantee):
+
+===========  =======================  ==========================  ===========================
+method       state                    update                      streaming guarantee
+===========  =======================  ==========================  ===========================
+``adam``     ``TrainState`` (params,  one full-batch first-order  basis featurized per
+(default)    ``repro.optim`` moments  step per iteration          microbatch inside the
+             — O(|params|))           (``make_train_step``,       gradient-accumulation scan;
+                                      grad-accumulated over       O(chunk·J·d) peak, never
+                                      microbatches)               (n, J, d)
+``lbfgs``    ``LBFGSState`` (flat     quasi-Newton two-loop       every oracle — loss, grad,
+             iterate + (m, P)         direction + Armijo          AND the Hessian-vector
+             curvature-pair ring,     backtracking line search;   product that forms the
+             m·P ≪ data)              curvature pairs y = H·s     curvature pairs — is the
+                                      from a streamed HVP         same microbatched chunk
+                                      (Byrd et al. 2016 style)    scan; O(chunk·J·d) peak
+``minibatch``  ``TrainState``         one first-order step per    each step touches only
+             (identical to adam)      iteration on a sampled      ``batch_size`` sampled rows
+                                      weighted microbatch         (``data.pipeline``'s
+                                      (unbiased estimate of the   ``subset_loader`` — pure
+                                      full weighted-NLL           function of (seed, step),
+                                      objective)                  so resume replays exactly)
+===========  =======================  ==========================  ===========================
+
+All three run single-host or SPMD row-sharded (``mesh=``), all three support
+``CheckpointManager`` periodic save + ``resume=True`` replay through the one
+shared ``train.loop`` (``adam``/``minibatch`` checkpoint a ``TrainState``;
+``lbfgs`` checkpoints its ``LBFGSState`` — params, curvature ring, counters —
+so a resumed run replays the identical deterministic iteration sequence).
+``minibatch`` is the mode for datasets whose *coreset* exceeds device memory;
+``lbfgs`` makes the paper's quasi-Newton full-data reference fit streaming-
+scalable (the dense ``mctm._scipy_lbfgs_fit`` stays only as a small-n test
+oracle).
+
 What streams — basis featurization. No path below materializes an (n, J, d)
 basis tensor beyond one chunk: the train step featurizes each microbatch
 INSIDE the jitted loss (``MCTMDensityModel``), so a step over n rows with
@@ -40,6 +76,10 @@ Coreset weights flow through the trainer's per-example-weight path
 (``batch["weights"]``); the objective is Σ w·nll / Σw — a constant
 normalizer, so gradients match ``mctm.nll`` up to scale and the lr stays
 scale-free across coreset sizes (the contract ``fit_mctm`` always had).
+Every method optimizes this same objective: ``adam``/``lbfgs`` evaluate it
+exactly per step, ``minibatch`` estimates it unbiasedly (uniform rows with
+replacement, the sampled Σ w·nll rescaled by n/batch — see
+``method_batch_plan``, the one place the per-method normalizer rules live).
 """
 from __future__ import annotations
 
@@ -51,9 +91,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from typing import NamedTuple
+
 from repro.core import mctm as M
 from repro.core.distributed_coreset import _axis_tuple, host_gather, shard_layout
 from repro.core.scoring import DEFAULT_CHUNK, _mctm_featurize
+from repro.distributed.sharding import batch_specs, default_rules, replicated
 from repro.optim import Optimizer, adamw
 from repro.train import (
     init_train_state,
@@ -62,19 +105,27 @@ from repro.train import (
     shard_train_step,
     train_loop,
 )
+from repro.train.trainer import microbatch_split, tree_acc
 from repro.utils.compat import shard_map
 
 __all__ = [
     "MCTMDensityModel",
+    "LBFGSState",
     "fit_featurize",
     "fit_density_model",
     "fit_mctm_streaming",
     "batch_plan",
+    "method_batch_plan",
+    "resolve_batch_size",
+    "make_streamed_oracles",
     "streamed_nll",
     "coreset_epsilon",
     "likelihood_ratio",
     "cosine_decay",
+    "FIT_METHODS",
 ]
+
+FIT_METHODS = ("adam", "lbfgs", "minibatch")
 
 
 def cosine_decay(lr: float, steps: int):
@@ -188,10 +239,140 @@ def batch_plan(n: int, weights, chunk_size: int | None, microbatches: int | None
     return w, float(w.sum()), chunk, microbatches
 
 
+def _num_shards(mesh) -> int:
+    return 1 if mesh is None else int(np.prod(list(mesh.shape.values())))
+
+
+def resolve_batch_size(batch_size: int, microbatches: int = 1, mesh=None) -> int:
+    """Round a requested minibatch size UP to the (microbatches × shards)
+    multiple the step geometry needs — sampled batches carry no padding, so
+    the size itself must already be divisible."""
+    mult = max(1, microbatches) * _num_shards(mesh)
+    return -(-int(batch_size) // mult) * mult
+
+
+def method_batch_plan(
+    method: str,
+    n: int,
+    weights,
+    chunk_size: int | None,
+    microbatches: int | None,
+    batch_size: int | None = None,
+    mesh=None,
+):
+    """``batch_plan`` extended with the per-method microbatch + objective-
+    normalizer rules — the ONE place they live, shared by ``fit_mctm_streaming``
+    and ``conditional.fit_cmctm`` so the entry points cannot drift.
+
+    Returns ``(w, total_w, chunk, microbatches, batch_size, norm)`` where
+    ``norm`` is the constant divisor handed to the density model so that:
+
+    * ``adam`` — the trainer's microbatch-mean equals Σ w·nll / Σw
+      (norm = Σw / microbatches);
+    * ``lbfgs`` — the oracles SUM over microbatches, so the streamed loss
+      equals Σ w·nll / Σw exactly (norm = Σw);
+    * ``minibatch`` — uniform-with-replacement sampling of ``batch_size``
+      rows makes E[Σ_sampled w·nll] = (batch_size/n)·Σ w·nll, so
+      norm = Σw·batch_size / (n·microbatches) gives an unbiased estimate of
+      the same Σ w·nll / Σw objective.
+    """
+    w, total_w, chunk, mb_full = batch_plan(n, weights, chunk_size, microbatches)
+    if method == "minibatch":
+        # clamp to n: past that, extra with-replacement draws only add cost
+        # and variance over a full-batch step of the same size
+        bs = min(int(batch_size), n) if batch_size else min(n, 4096)
+        mb = microbatches or max(1, -(-bs // chunk))
+        bs = resolve_batch_size(bs, mb, mesh)
+        return w, total_w, chunk, mb, bs, total_w * bs / (n * mb)
+    if method == "lbfgs":
+        return w, total_w, chunk, mb_full, None, total_w
+    if method == "adam":
+        return w, total_w, chunk, mb_full, None, total_w / mb_full
+    raise ValueError(f"unknown fit method: {method!r} (one of {FIT_METHODS})")
+
+
 def fit_density_model(
     model,
     params0,
     batch: dict,
+    *,
+    optimizer: Optimizer | None = None,
+    steps: int,
+    method: str = "adam",
+    mesh=None,
+    microbatches: int = 1,
+    batch_size: int | None = None,
+    sample_seed: int = 0,
+    history: int = 10,
+    gtol: float = 1e-6,
+    max_linesearch: int = 20,
+    checkpoint=None,
+    ckpt_every: int = 0,
+    resume: bool = False,
+    log_every: int = 0,
+    label: str = "fit",
+):
+    """The generic density-fit driver under every MCTM-family fit — one
+    ``method=`` contract over the three modes of the module-doc table.
+
+    ``model`` follows the trainer's ``loss_fn(params, batch)`` contract (the
+    MCTM and conditional-MCTM adapters both do); ``batch`` must carry a
+    ``"weights"`` row. ``method="adam"`` (any first-order ``repro.optim``
+    ``optimizer``) takes one full-batch step per iteration, rows padded here
+    to a (microbatches × shards) multiple with zero weight.
+    ``method="lbfgs"`` ignores ``optimizer`` and runs the streaming-HVP
+    quasi-Newton driver (``history`` curvature pairs, Armijo backtracking
+    capped at ``max_linesearch`` halvings, convergence at ``gtol`` gradient
+    norm). ``method="minibatch"`` samples ``batch_size`` weighted rows per
+    step via ``data.pipeline.subset_loader`` (seeded by ``sample_seed``; the
+    caller sets the model's normalizer so the estimate is unbiased — see
+    ``method_batch_plan``). With ``mesh`` every mode jits its step/oracles
+    with the batch row-sharded and params (plus any optimizer/curvature
+    state) replicated; without, a plain jit. ``checkpoint`` is a
+    ``CheckpointManager``; ``resume=True`` restarts from its latest step and
+    replays identically in every mode.
+
+    Returns ``(params, losses, final_state)`` with params gathered to host
+    and losses one float per executed step.
+    """
+    if method == "lbfgs":
+        return _fit_lbfgs(
+            model, params0, batch, steps=steps, mesh=mesh,
+            microbatches=microbatches, history=history, gtol=gtol,
+            max_linesearch=max_linesearch, checkpoint=checkpoint,
+            ckpt_every=ckpt_every, resume=resume, log_every=log_every,
+            label=label,
+        )
+    if method not in FIT_METHODS:
+        raise ValueError(f"unknown fit method: {method!r} (one of {FIT_METHODS})")
+    if optimizer is None:
+        raise ValueError(f"method={method!r} requires an optimizer")
+    if method == "minibatch":
+        if not batch_size:
+            raise ValueError("method='minibatch' requires batch_size")
+        return _fit_minibatch(
+            model, params0, batch, optimizer=optimizer, steps=steps,
+            mesh=mesh, microbatches=microbatches, batch_size=batch_size,
+            sample_seed=sample_seed, checkpoint=checkpoint,
+            ckpt_every=ckpt_every, resume=resume, log_every=log_every,
+            label=label,
+        )
+    batch, _, _ = _pad_batch(batch, max(1, microbatches) * _num_shards(mesh))
+    return _train_state_loop(
+        model, params0, batch,
+        # full-batch: device_put the padded batch once, reuse it every step
+        lambda put: (lambda i, b=put(batch): b),
+        optimizer=optimizer, steps=steps, mesh=mesh, microbatches=microbatches,
+        checkpoint=checkpoint, ckpt_every=ckpt_every, resume=resume,
+        log_every=log_every, label=label,
+    )
+
+
+def _train_state_loop(
+    model,
+    params0,
+    batch_template: dict,
+    make_batch_fn,
     *,
     optimizer: Optimizer,
     steps: int,
@@ -203,28 +384,19 @@ def fit_density_model(
     log_every: int = 0,
     label: str = "fit",
 ):
-    """The generic full-batch density-fit driver under every MCTM-family fit.
-
-    ``model`` follows the trainer's ``loss_fn(params, batch)`` contract (the
-    MCTM and conditional-MCTM adapters both do); ``batch`` must carry a
-    ``"weights"`` row — rows are padded here to a (microbatches × shards)
-    multiple with zero weight. With ``mesh`` the step is jitted through
-    ``shard_train_step`` (batch row-sharded, params/optimizer state
-    replicated); without, a plain donated jit. ``checkpoint`` is a
-    ``CheckpointManager``; ``resume=True`` restarts from its latest step.
-
-    Returns ``(params, losses, final_state)`` with params gathered to host
-    and losses one float per executed step.
+    """The shared ``TrainState`` driver tail of the adam and minibatch modes:
+    step construction, sharding, resume, loop, host gather — written once so
+    the two first-order modes cannot drift. ``batch_template`` fixes the
+    per-step batch shapes/dtypes; ``make_batch_fn(put)`` receives the
+    device-placement function for those shapes and returns ``batch_fn(i)``.
     """
-    shards = 1 if mesh is None else int(np.prod(list(mesh.shape.values())))
-    batch, _, _ = _pad_batch(batch, max(1, microbatches) * shards)
     step_pure = make_train_step(model, optimizer, microbatches=microbatches)
     state = init_train_state(params0, optimizer)
     state_sh = None
     if mesh is not None:
         batch_shapes = {
             k: jax.ShapeDtypeStruct(np.shape(v), np.asarray(v).dtype)
-            for k, v in batch.items()
+            for k, v in batch_template.items()
         }
         step_fn, state_sh, batch_sh = shard_train_step(
             step_pure,
@@ -235,20 +407,24 @@ def fit_density_model(
             specs=_replicated_specs(params0),
             batch_shapes=batch_shapes,
         )
-        batch = {
-            k: jax.device_put(jnp.asarray(v), batch_sh[k]) for k, v in batch.items()
-        }
+
+        def put(b):
+            return {k: jax.device_put(jnp.asarray(v), batch_sh[k]) for k, v in b.items()}
+
         state = jax.device_put(state, state_sh)
     else:
         step_fn = jax.jit(step_pure, donate_argnums=(0,))
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+
+        def put(b):
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
     start = 0
     if resume:
         state, start = restore_train_state(checkpoint, state, shardings=state_sh)
     state, losses = train_loop(
         step_fn,
         state,
-        lambda i: batch,
+        make_batch_fn(put),
         steps,
         start=start,
         mgr=checkpoint,
@@ -258,6 +434,292 @@ def fit_density_model(
     )
     params = jax.tree.map(lambda x: jnp.asarray(host_gather(x)), state.params)
     return params, np.asarray([float(x) for x in losses], np.float64), state
+
+
+# ---------------------------------------------------------------------------
+# streaming-HVP L-BFGS
+# ---------------------------------------------------------------------------
+
+
+def make_streamed_oracles(model, microbatches: int):
+    """``(value_and_grad, value, hvp)`` pure functions over a padded batch.
+
+    Each streams the batch microbatch-by-microbatch through ``model.loss_fn``
+    with an O(|params|) ``lax.scan`` carry — the identical chunk driver
+    ``make_train_step`` uses for gradient accumulation, so the featurize-
+    inside-the-loss streaming guarantee carries over verbatim (the basis
+    exists one (chunk, J, d) block at a time, for the HVP too: ``jvp`` of the
+    per-microbatch gradient keeps the tangent pass inside the scan body).
+    Totals are SUMS over microbatches (no 1/microbatches) — the L-BFGS
+    objective normalizer is the model's ``norm`` alone.
+    """
+    microbatches = max(1, microbatches)
+
+    def _mb(batch):
+        return microbatch_split(batch, microbatches)
+
+    def value_and_grad(params, batch):
+        def body(carry, mbatch):
+            loss, grads = carry
+            (li, _), gi = jax.value_and_grad(model.loss_fn, has_aux=True)(
+                params, mbatch
+            )
+            return (tree_acc(loss, li), tree_acc(grads, gi)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), _mb(batch))
+        return loss, grads
+
+    def value(params, batch):
+        def body(loss, mbatch):
+            li, _ = model.loss_fn(params, mbatch)
+            return tree_acc(loss, li), None
+
+        loss, _ = jax.lax.scan(body, jnp.zeros(()), _mb(batch))
+        return loss
+
+    def hvp(params, vec, batch):
+        def body(carry, mbatch):
+            grad_fn = jax.grad(lambda p: model.loss_fn(p, mbatch)[0])
+            _, hv = jax.jvp(grad_fn, (params,), (vec,))
+            return tree_acc(carry, hv), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        out, _ = jax.lax.scan(body, zeros, _mb(batch))
+        return out
+
+    return value_and_grad, value, hvp
+
+
+class LBFGSState(NamedTuple):
+    """Checkpointable L-BFGS iteration state (a pytree of arrays, so
+    ``CheckpointManager``/``restore_train_state`` handle it like a
+    ``TrainState``). The curvature ring holds at most ``history`` (s, y, ρ)
+    pairs — O(history·|params|), independent of n."""
+
+    step: jax.Array       # int32 iteration counter (train-loop contract)
+    flat: jax.Array       # (P,) f32 current iterate (ravel_pytree order)
+    loss: jax.Array       # f32 objective at ``flat``
+    mem_s: jax.Array      # (history, P) iterate displacements s = x₊ − x
+    mem_y: jax.Array      # (history, P) curvature responses y = ∇²f(x₊)·s
+    mem_rho: jax.Array    # (history,) 1 / sᵀy
+    count: jax.Array      # int32 number of valid pairs (rows [0:count])
+    converged: jax.Array  # bool — further steps are no-ops (replay-stable)
+
+
+def _two_loop(g, S, Yv, rho, count: int):
+    """Standard two-loop recursion: approximate H⁻¹·g from the curvature
+    ring (rows [0:count], oldest → newest). All host-side f64 on O(m·P)
+    data — the history is tiny by construction."""
+    q = g.copy()
+    alpha = np.zeros(count)
+    for i in reversed(range(count)):
+        alpha[i] = rho[i] * (S[i] @ q)
+        q -= alpha[i] * Yv[i]
+    if count:
+        gamma = (S[count - 1] @ Yv[count - 1]) / max(
+            Yv[count - 1] @ Yv[count - 1], 1e-30
+        )
+    else:
+        gamma = 1.0
+    r = gamma * q
+    for i in range(count):
+        beta = rho[i] * (Yv[i] @ r)
+        r += S[i] * (alpha[i] - beta)
+    return r
+
+
+def _fit_lbfgs(
+    model,
+    params0,
+    batch: dict,
+    *,
+    steps: int,
+    mesh=None,
+    microbatches: int = 1,
+    history: int = 10,
+    gtol: float = 1e-6,
+    max_linesearch: int = 20,
+    checkpoint=None,
+    ckpt_every: int = 0,
+    resume: bool = False,
+    log_every: int = 0,
+    label: str = "lbfgs",
+):
+    """Streaming-HVP L-BFGS: quasi-Newton over the streamed oracles.
+
+    One iteration = one streamed value+grad sweep, ≤ ``max_linesearch``
+    streamed value sweeps (Armijo backtracking), and one streamed HVP sweep
+    forming the curvature pair y = ∇²f(x₊)·s (more robust than gradient
+    differences and exactly one extra pass). The two-loop direction and ring
+    update run host-side in f64 on O(history·P) data; state is stored f32,
+    and every iteration is a pure function of (state, batch), so checkpoint
+    resume replays the straight run bit-for-bit. Once ``gtol`` is reached
+    (or no Armijo point exists along a descent direction — the float-noise
+    plateau), ``converged`` latches and remaining steps are free no-ops.
+    """
+    from jax.flatten_util import ravel_pytree
+
+    microbatches = max(1, microbatches)
+    batch, _, _ = _pad_batch(batch, microbatches * _num_shards(mesh))
+    value_and_grad, value, hvp = make_streamed_oracles(model, microbatches)
+    if mesh is None:
+        vg_j = jax.jit(value_and_grad)
+        val_j = jax.jit(value)
+        hvp_j = jax.jit(hvp)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    else:
+        # batch row-sharded, params/tangents replicated — the same layout
+        # rule as shard_train_step, GSPMD inserting the grad/HVP reductions
+        param_sh = jax.tree.map(lambda _: replicated(mesh), params0)
+        batch_shapes = {
+            k: jax.ShapeDtypeStruct(np.shape(v), np.asarray(v).dtype)
+            for k, v in batch.items()
+        }
+        batch_sh = batch_specs(batch_shapes, mesh, default_rules(mesh))
+        vg_j = jax.jit(value_and_grad, in_shardings=(param_sh, batch_sh))
+        val_j = jax.jit(value, in_shardings=(param_sh, batch_sh))
+        hvp_j = jax.jit(hvp, in_shardings=(param_sh, param_sh, batch_sh))
+        batch = {
+            k: jax.device_put(jnp.asarray(v), batch_sh[k]) for k, v in batch.items()
+        }
+    flat0, unravel = ravel_pytree(params0)
+    P = int(flat0.shape[0])
+    m = max(1, int(history))
+    state = LBFGSState(
+        step=jnp.zeros((), jnp.int32),
+        flat=jnp.asarray(flat0, jnp.float32),
+        loss=jnp.asarray(np.inf, jnp.float32),
+        mem_s=jnp.zeros((m, P), jnp.float32),
+        mem_y=jnp.zeros((m, P), jnp.float32),
+        mem_rho=jnp.zeros((m,), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+        converged=jnp.zeros((), jnp.bool_),
+    )
+
+    def step_fn(state: LBFGSState, batch):
+        metrics = {"loss": state.loss, "grad_norm": np.float32(0.0),
+                   "step": state.step}
+        if bool(state.converged):
+            return state._replace(step=state.step + 1), metrics
+        x = np.asarray(state.flat, np.float64)
+        loss, grads = vg_j(unravel(jnp.asarray(x, jnp.float32)), batch)
+        g = np.asarray(ravel_pytree(jax.tree.map(host_gather, grads))[0], np.float64)
+        f0 = float(host_gather(loss))
+        gnorm = float(np.linalg.norm(g))
+        metrics = {"loss": np.float32(f0), "grad_norm": np.float32(gnorm),
+                   "step": state.step}
+        if not np.isfinite(f0) or gnorm <= gtol:
+            return state._replace(
+                step=state.step + 1, loss=jnp.asarray(f0, jnp.float32),
+                converged=jnp.asarray(True),
+            ), metrics
+        count = int(state.count)
+        S = np.asarray(state.mem_s, np.float64)
+        Yv = np.asarray(state.mem_y, np.float64)
+        rho = np.asarray(state.mem_rho, np.float64)
+        d = -_two_loop(g, S, Yv, rho, count)
+        gd = float(g @ d)
+        if not np.isfinite(gd) or gd >= 0.0:  # ring gone stale → steepest descent
+            d, gd = -g, -(gnorm * gnorm)
+        t = min(1.0, 1.0 / max(float(np.abs(g).sum()), 1e-12)) if count == 0 else 1.0
+        f_t, armijo = f0, False
+        for _ in range(max_linesearch):
+            cand = unravel(jnp.asarray(x + t * d, jnp.float32))
+            f_t = float(host_gather(val_j(cand, batch)))
+            if np.isfinite(f_t) and f_t <= f0 + 1e-4 * t * gd:
+                armijo = True
+                break
+            t *= 0.5
+        if not armijo:
+            return state._replace(
+                step=state.step + 1, loss=jnp.asarray(f0, jnp.float32),
+                converged=jnp.asarray(True),
+            ), metrics
+        s = t * d
+        x_new = x + s
+        hv = hvp_j(
+            unravel(jnp.asarray(x_new, jnp.float32)),
+            unravel(jnp.asarray(s, jnp.float32)),
+            batch,
+        )
+        y = np.asarray(ravel_pytree(jax.tree.map(host_gather, hv))[0], np.float64)
+        sy = float(s @ y)
+        # curvature-pair acceptance (skip, don't damp: the HVP y is exact
+        # curvature, so a tiny sᵀy means genuinely indefinite local curvature)
+        if np.isfinite(sy) and sy > 1e-10 * np.linalg.norm(s) * np.linalg.norm(y):
+            if count < m:
+                S[count], Yv[count], rho[count] = s, y, 1.0 / sy
+                count += 1
+            else:
+                S, Yv, rho = np.roll(S, -1, 0), np.roll(Yv, -1, 0), np.roll(rho, -1, 0)
+                S[-1], Yv[-1], rho[-1] = s, y, 1.0 / sy
+        metrics["loss"] = np.float32(f_t)
+        return state._replace(
+            step=state.step + 1,
+            flat=jnp.asarray(x_new, jnp.float32),
+            loss=jnp.asarray(f_t, jnp.float32),
+            mem_s=jnp.asarray(S, jnp.float32),
+            mem_y=jnp.asarray(Yv, jnp.float32),
+            mem_rho=jnp.asarray(rho, jnp.float32),
+            count=jnp.asarray(count, jnp.int32),
+        ), metrics
+
+    start = 0
+    if resume:
+        state, start = restore_train_state(checkpoint, state)
+    state, losses = train_loop(
+        step_fn, state, lambda i: batch, steps, start=start, mgr=checkpoint,
+        ckpt_every=ckpt_every, log_every=log_every, label=label,
+    )
+    params = unravel(jnp.asarray(state.flat))
+    return params, np.asarray([float(x) for x in losses], np.float64), state
+
+
+# ---------------------------------------------------------------------------
+# sampled-minibatch fitting
+# ---------------------------------------------------------------------------
+
+
+def _fit_minibatch(
+    model,
+    params0,
+    batch: dict,
+    *,
+    optimizer: Optimizer,
+    steps: int,
+    mesh=None,
+    microbatches: int = 1,
+    batch_size: int,
+    sample_seed: int = 0,
+    checkpoint=None,
+    ckpt_every: int = 0,
+    resume: bool = False,
+    log_every: int = 0,
+    label: str = "minibatch",
+):
+    """Sampled-minibatch driver: each step draws ``batch_size`` weighted rows
+    through ``data.pipeline.subset_loader`` over the full index set (uniform
+    with replacement — the caller's normalizer makes the weighted-NLL
+    estimate unbiased, see ``method_batch_plan``) and takes one
+    ``make_train_step`` step, sharded exactly like the full-batch path.
+    Batches are a pure function of (sample_seed, step), so checkpoint resume
+    replays the straight run's sample sequence.
+    """
+    from repro.data.pipeline import full_data_loader
+
+    microbatches = max(1, microbatches)
+    w = np.asarray(batch["weights"], np.float32)
+    b = resolve_batch_size(batch_size, microbatches, mesh)
+    data = {k: np.asarray(v) for k, v in batch.items() if k != "weights"}
+    sample_fn = full_data_loader(data, w, b, seed=sample_seed)
+    return _train_state_loop(
+        model, params0, sample_fn(0),
+        lambda put: (lambda i: put(sample_fn(i))),
+        optimizer=optimizer, steps=steps, mesh=mesh, microbatches=microbatches,
+        checkpoint=checkpoint, ckpt_every=ckpt_every, resume=resume,
+        log_every=log_every, label=label,
+    )
 
 
 def fit_mctm_streaming(
@@ -271,9 +733,14 @@ def fit_mctm_streaming(
     steps: int = 1500,
     lr: float = 5e-2,
     optimizer: Optimizer | None = None,
+    method: str = "adam",
     mesh=None,
     chunk_size: int | None = DEFAULT_CHUNK,
     microbatches: int | None = None,
+    batch_size: int | None = None,
+    sample_seed: int = 0,
+    history: int = 10,
+    gtol: float = 1e-6,
     featurize: Callable | None = None,
     checkpoint=None,
     ckpt_every: int = 0,
@@ -281,10 +748,14 @@ def fit_mctm_streaming(
     log_every: int = 0,
 ) -> M.FitResult:
     """Weighted maximum-likelihood MCTM fit — the engine behind
-    ``mctm.fit_mctm`` (see the module doc for the streaming/sharding
-    contract). ``weights`` are the coreset weights (None → unweighted
-    full-data fit); inputs beyond ``chunk_size`` rows are featurized
-    microbatch-by-microbatch inside the step, never as one (n, J, d) tensor.
+    ``mctm.fit_mctm`` (see the module doc for the method table and the
+    streaming/sharding contract). ``weights`` are the coreset weights (None →
+    unweighted full-data fit); inputs beyond ``chunk_size`` rows are
+    featurized microbatch-by-microbatch inside the step, never as one
+    (n, J, d) tensor. ``method`` selects the fit mode: ``"adam"`` (any
+    first-order ``optimizer``), ``"lbfgs"`` (streaming-HVP quasi-Newton;
+    ``steps`` are iterations, early-stopping at ``gtol``), or
+    ``"minibatch"`` (``batch_size`` sampled weighted rows per step).
     """
     Y = np.asarray(Y, np.float32)
     n = int(Y.shape[0])
@@ -294,14 +765,17 @@ def fit_mctm_streaming(
         if key is None:
             key = jax.random.PRNGKey(0)
         init = M.init_params(key, cfg)
-    w, total_w, chunk, microbatches = batch_plan(n, weights, chunk_size, microbatches)
-    model = MCTMDensityModel(
-        cfg, scaler, norm=total_w / microbatches, featurize=featurize
+    w, total_w, chunk, microbatches, batch_size, norm = method_batch_plan(
+        method, n, weights, chunk_size, microbatches, batch_size, mesh
     )
+    model = MCTMDensityModel(cfg, scaler, norm=norm, featurize=featurize)
     batch = {"Y": Y, "weights": w}
-    if microbatches == 1 and featurize is None:
+    if method == "adam" and microbatches == 1 and featurize is None:
         # dense fast path (the scoring engine's single-chunk rule): featurize
-        # exactly once outside the step instead of once per optimizer step
+        # exactly once outside the step instead of once per optimizer step.
+        # adam only — lbfgs holds its batch across many oracle sweeps, where
+        # a cached (n, J, d) basis is exactly the liveness bug this layer
+        # exists to avoid, and minibatch rows change every step.
         A, Ap = fit_featurize(cfg, scaler)(jnp.asarray(Y))
         batch = {"A": np.asarray(A), "Ap": np.asarray(Ap), "weights": w}
     params, losses, _ = fit_density_model(
@@ -310,13 +784,18 @@ def fit_mctm_streaming(
         batch,
         optimizer=optimizer or default_fit_optimizer(lr, steps),
         steps=steps,
+        method=method,
         mesh=mesh,
         microbatches=microbatches,
+        batch_size=batch_size,
+        sample_seed=sample_seed,
+        history=history,
+        gtol=gtol,
         checkpoint=checkpoint,
         ckpt_every=ckpt_every,
         resume=resume,
         log_every=log_every,
-        label="mctm-fit",
+        label=f"mctm-{method}",
     )
     params = M.MCTMParams(*params)
     final = streamed_nll(

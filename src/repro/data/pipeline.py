@@ -9,7 +9,10 @@ Components:
     ℓ2 leverage + uniform sensitivity scores, augment with directional hull
     extremes, and emit (indices, weights). The trainer consumes the weights
     in its per-example weighted loss.
-  * ``WeightedSubset`` / ``subset_loader`` — iterate coreset-selected data.
+  * ``WeightedSubset`` / ``subset_loader`` — iterate coreset-selected data;
+    ``full_data_loader`` is the same sampler over ALL rows (the fit layer's
+    minibatch mode — unbiased weighted draws when even the coreset exceeds
+    device memory).
 """
 from __future__ import annotations
 
@@ -24,7 +27,13 @@ import numpy as np
 
 from repro.core.scoring import DEFAULT_CHUNK, ScoringEngine
 
-__all__ = ["ShardedLoader", "CoresetSelector", "WeightedSubset"]
+__all__ = [
+    "ShardedLoader",
+    "CoresetSelector",
+    "WeightedSubset",
+    "subset_loader",
+    "full_data_loader",
+]
 
 
 @dataclasses.dataclass
@@ -224,3 +233,20 @@ def subset_loader(
         return out
 
     return sample_fn
+
+
+def full_data_loader(
+    data: dict[str, np.ndarray],
+    weights: np.ndarray,
+    batch: int,
+    seed: int = 0,
+) -> Callable[[int], dict[str, np.ndarray]]:
+    """``subset_loader`` over the all-rows subset: uniform-with-replacement
+    weighted draws from the full dataset. Each batch is a pure function of
+    (seed, step) — the minibatch fit mode's resumable sampler, whose
+    Σ w·nll·(n/batch) is an unbiased estimate of the full weighted NLL."""
+    n = int(next(iter(data.values())).shape[0])
+    subset = WeightedSubset(
+        np.arange(n, dtype=np.int64), np.asarray(weights, np.float32)
+    )
+    return subset_loader(data, subset, batch, seed)

@@ -4,7 +4,12 @@ Both launch drivers (``launch.train`` for the LM configs, ``launch.train_mctm``
 for the paper's density experiment) build their runs from the same pieces so
 they cannot drift: the corpus→coreset data-reduction stage lives here, the
 step loop + checkpoint resume live in ``repro.train.loop``, and the fit-layer
-mechanics in ``repro.core.mctm_fit``.
+mechanics in ``repro.core.mctm_fit`` — whose ``method=`` table (full-batch
+``adam``, streaming-HVP ``lbfgs``, sampled ``minibatch`` on
+``data.pipeline``'s loaders) is what ``train_mctm --fit-method/--ref-method``
+selects after the data-reduction stage. Every mode checkpoints/resumes
+through the one ``train.loop`` driver, so a launcher restart replays
+identically regardless of method.
 """
 from __future__ import annotations
 

@@ -32,7 +32,7 @@ Specs = dict
 def dense_init(key, in_dim: int, out_shape, dtype=jnp.float32) -> jax.Array:
     """Truncated-normal fan-in init."""
     shape = (in_dim,) + tuple(np.atleast_1d(out_shape))
-    scale = 1.0 / np.sqrt(in_dim)
+    scale = float(1.0 / np.sqrt(in_dim))
     return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
 
 
@@ -123,7 +123,7 @@ def _sdpa(q, k, v, mask, logits_softcap: float = 0.0):
     groups = H // KV
     qg = q.reshape(B, S, KV, groups, hd)
     scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
-    scores = scores / np.sqrt(hd)
+    scores = scores / float(np.sqrt(hd))
     if logits_softcap > 0:
         scores = logits_softcap * jnp.tanh(scores / logits_softcap)
     if mask.ndim == 2:
@@ -166,7 +166,7 @@ def blocked_causal_attention(q, k, v, block: int = 1024, logits_softcap: float =
         v = jnp.concatenate([v, zkv], 1)
     Sp = S + pad
     nb = Sp // block
-    scale = 1.0 / np.sqrt(hd)
+    scale = float(1.0 / np.sqrt(hd))
     qb = q.reshape(B, nb, block, KV, groups, hd).swapaxes(0, 1)  # (nb,B,bq,KV,G,hd)
     kb = k.reshape(B, nb, block, KV, hd)
     vb = v.reshape(B, nb, block, KV, hd)
@@ -362,11 +362,13 @@ def attention_apply(
             out = _sdpa(q, K.astype(x.dtype), V.astype(x.dtype), mask, cfg.logits_softcap)
             new_cache = {"k": K, "v": V, "pos": total}
         else:
+            zero = jnp.zeros((), pos.dtype)  # match pos: x64 would
+            # otherwise promote the literal starts to int64 against int32 pos
             K = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)
+                cache["k"], k.astype(cache["k"].dtype), (zero, pos, zero, zero)
             )
             V = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)
+                cache["v"], v.astype(cache["v"].dtype), (zero, pos, zero, zero)
             )
             if cfg.decode_seq_shard:
                 # §Perf flash-decode: keep the KV cache sharded over the model
@@ -484,8 +486,9 @@ def mla_apply(
             T = ckv_all.shape[1]
             mask = (jnp.arange(T)[None, :] <= pos[:, None])[:, None, :]  # (B,1,T)
         else:
-            CKV = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
-            KR = jax.lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype), (0, pos, 0, 0))
+            zero = jnp.zeros((), pos.dtype)
+            CKV = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (zero, pos, zero))
+            KR = jax.lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype), (zero, pos, zero, zero))
             if cfg.decode_seq_shard:
                 from repro.distributed.sharding import constrain
 
@@ -508,7 +511,7 @@ def mla_apply(
     scores = (
         jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
         + jnp.einsum("bshk,btok->bhst", q_rope, jnp.broadcast_to(krope_all, (B, T, 1, rdim)))
-    ).astype(jnp.float32) / np.sqrt(nope + rdim)
+    ).astype(jnp.float32) / float(np.sqrt(nope + rdim))
     scores = jnp.where(mask[None, None] if mask.ndim == 2 else mask[:, None], scores, -1e30)
     w = jax.nn.softmax(scores, -1).astype(x.dtype)
     out = jnp.einsum("bhst,bthk->bshk", w, vmat)
@@ -662,7 +665,7 @@ def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig, dtype) -> 
     else:
         x = table[tokens]
     if cfg.scale_embeddings:
-        x = x * np.sqrt(cfg.d_model)
+        x = x * float(np.sqrt(cfg.d_model))
     return x
 
 

@@ -1,10 +1,14 @@
 """Shared step-loop and checkpoint-resume mechanics.
 
-The launch drivers (``launch.train``, ``launch.train_mctm``) and the MCTM fit
-layer (``core.mctm_fit``) all drive the same loop: step → collect loss →
-periodic log → periodic checkpoint → final checkpoint, with restart-after-
-failure resuming from the latest restorable step. Written once here so the
-launchers cannot drift.
+The launch drivers (``launch.train``, ``launch.train_mctm``) and every mode
+of the MCTM fit layer (``core.mctm_fit`` — the adam/minibatch ``TrainState``
+steps AND the L-BFGS driver with its ``LBFGSState``) drive the same loop:
+step → collect loss → periodic log → periodic checkpoint → final checkpoint,
+with restart-after-failure resuming from the latest restorable step. The
+state is any pytree of arrays carrying a ``step`` field; ``batch_fn(i)`` may
+return a fixed batch (full-batch modes) or a per-step sample (minibatch —
+pure in ``i``, so resume replays the draw sequence). Written once here so
+the launchers cannot drift.
 """
 from __future__ import annotations
 

@@ -34,6 +34,25 @@ from repro.train.state import TrainState, init_train_state
 PyTree = Any
 
 
+def microbatch_split(batch: dict, microbatches: int) -> dict:
+    """Reshape every batch leaf (b, ...) → (microbatches, b/microbatches, ...)
+    for a sequential accumulation scan — the one chunk-geometry rule shared
+    by the train step and the fit layer's L-BFGS oracles."""
+
+    def reshape(x):
+        b = x.shape[0]
+        return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+    return jax.tree.map(reshape, batch)
+
+
+def tree_acc(acc: PyTree, new: PyTree) -> PyTree:
+    """Accumulate ``new`` into ``acc`` in ``acc``'s dtype. Under
+    JAX_ENABLE_X64 a term that promotes to f64 would otherwise change the
+    scan carry type mid-body (carry input/output dtype mismatch)."""
+    return jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, new)
+
+
 def loss_and_grads(model, params, batch):
     (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
         params, batch
@@ -57,18 +76,12 @@ def make_train_step(
 
     def accum_grads(params, batch):
         """Split the global batch into microbatches and accumulate grads."""
-
-        def reshape(x):
-            b = x.shape[0]
-            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
-
-        mb = jax.tree.map(reshape, batch)
+        mb = microbatch_split(batch, microbatches)
 
         def body(carry, mbatch):
             loss_acc, grads_acc = carry
             loss, _, grads = single_grads(params, mbatch)
-            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
-            return (loss_acc + loss, grads_acc), None
+            return (tree_acc(loss_acc, loss), tree_acc(grads_acc, grads)), None
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mb)

@@ -12,7 +12,13 @@ import inspect
 
 import jax
 
-__all__ = ["shard_map", "make_mesh"]
+__all__ = ["shard_map", "make_mesh", "MIN_JAX_VERSION"]
+
+# The oldest jax this repo supports — the version every shim below exists
+# for. CI's version matrix pins its minimum leg to exactly this (the
+# workflow asserts the installed jax matches, so the pin cannot silently
+# drift from the shims).
+MIN_JAX_VERSION = "0.4.37"
 
 try:  # jax >= 0.5
     from jax import shard_map as _shard_map

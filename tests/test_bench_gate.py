@@ -1,0 +1,109 @@
+"""Unit tests for the CI bench-regression gate (scripts/bench_gate.py):
+rule semantics on synthetic records (no timing dependence) and the gate's
+behavior against the committed baselines' file layout."""
+import json
+import os
+import sys
+
+import pytest
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "..", "scripts")
+sys.path.insert(0, os.path.abspath(SCRIPTS))
+
+import bench_gate  # noqa: E402
+from bench_gate import Rule, check_rule, gate_pair, rules_for  # noqa: E402
+
+
+def test_time_ratio_rule_gates_only_large_regressions():
+    rule = Rule("speedup", "time_ratio")
+    base = {"speedup": 3.0}
+    # within 1.5x — runner noise, passes
+    assert check_rule(rule, {"speedup": 2.1}, base, 1.5) == []
+    # faster than baseline obviously passes
+    assert check_rule(rule, {"speedup": 4.0}, base, 1.5) == []
+    # > 1.5x regression fails
+    fails = check_rule(rule, {"speedup": 1.9}, base, 1.5)
+    assert len(fails) == 1 and "regressed" in fails[0]
+
+
+def test_exact_rule_envelope():
+    rule = Rule("eps", "exact", rel=1.5, abs=0.01)
+    base = {"eps": 0.02}
+    assert check_rule(rule, {"eps": 0.03}, base, 1.5) == []   # ≤ 0.02·1.5+0.01
+    assert check_rule(rule, {"eps": 0.041}, base, 1.5)        # above ceiling
+
+
+def test_invariant_rule_and_list_fanout():
+    rule = Rule("per_k.[].within_band", "invariant")
+    base = {"per_k": [{"within_band": True}, {"within_band": True}]}
+    good = {"per_k": [{"within_band": True}, {"within_band": True}]}
+    bad = {"per_k": [{"within_band": True}, {"within_band": False}]}
+    assert check_rule(rule, good, base, 1.5) == []
+    fails = check_rule(rule, bad, base, 1.5)
+    assert len(fails) == 1 and "per_k[1]" in fails[0]
+    # length mismatch = not comparable = failure, not a silent pass
+    short = {"per_k": [{"within_band": True}]}
+    assert check_rule(rule, short, base, 1.5)
+
+
+def test_missing_keys_fail_not_crash():
+    rule = Rule("one_pass_vs_two_pass.speedup", "time_ratio")
+    fails = check_rule(rule, {}, {"one_pass_vs_two_pass": {"speedup": 1.0}}, 1.5)
+    assert len(fails) == 1 and "generated" in fails[0]
+
+
+def test_rules_cover_every_default_pair():
+    for gen, _ in bench_gate.DEFAULT_PAIRS:
+        assert rules_for(gen) is not None, gen
+    # the method-suffixed mctm records pick up the mctm_fit rule set
+    assert rules_for("BENCH_mctm_fit_smoke_lbfgs.json") is bench_gate.RULES["BENCH_mctm_fit"]
+
+
+def test_gate_pair_end_to_end(tmp_path):
+    base = {
+        "n": 100, "degree": 6, "chunk_size": 8, "smoke": True,
+        "speedup": 2.0, "max_abs_score_diff": 1e-7,
+        "one_pass_vs_two_pass": {
+            "speedup": 1.0, "one_pass_rows_streamed": 100,
+            "one_pass_featurize_calls": 2,
+            "median_rel_score_err": 0.04, "max_rel_score_err": 0.1,
+        },
+    }
+    bp = tmp_path / "BENCH_scoring_smoke.json"
+    bp.write_text(json.dumps(base))
+    gp = tmp_path / "gen" / "BENCH_scoring_smoke.json"
+    gp.parent.mkdir()
+
+    gen = dict(base, speedup=1.9)  # mild wall-clock noise
+    gp.write_text(json.dumps(gen))
+    assert gate_pair(str(gp), str(bp), time_ratio=1.5) == []
+
+    gen = dict(base, max_abs_score_diff=1e-3)  # quality regression
+    gp.write_text(json.dumps(gen))
+    fails = gate_pair(str(gp), str(bp), time_ratio=1.5)
+    assert fails and "max_abs_score_diff" in fails[0]
+
+    # missing baseline fails unless explicitly allowed
+    missing = str(tmp_path / "nope.json")
+    assert gate_pair(str(gp), missing, time_ratio=1.5)
+    assert gate_pair(str(gp), missing, time_ratio=1.5,
+                     allow_missing_baseline=True) == []
+
+
+def test_committed_baselines_parse_and_match_rules():
+    """Every committed baseline is valid JSON and its rule set resolves all
+    non-list paths — so the CI gate can't fail on a malformed baseline."""
+    bdir = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "baselines")
+    if not os.path.isdir(bdir):
+        pytest.skip("no committed baselines")
+    names = [n for n in os.listdir(bdir) if n.endswith(".json")]
+    assert names, "baseline dir exists but is empty"
+    for name in names:
+        with open(os.path.join(bdir, name)) as f:
+            rec = json.load(f)
+        rules = rules_for(name)
+        assert rules is not None, name
+        for rule in rules:
+            vals = bench_gate._lookup(rec, rule.path)
+            assert not any(isinstance(v, KeyError) for _, v in vals), (
+                name, rule.path, vals)
