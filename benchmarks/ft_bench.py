@@ -1,0 +1,179 @@
+"""Fault-tolerance overhead + recovery bench → BENCH_ft.json.
+
+Measures what the ft layer (PR: fault-tolerant coreset pipeline) costs when
+nothing fails and what it recovers when something does:
+
+* ``ckpt_overhead_ratio`` — chunked scoring sweep with segment checkpoints
+  enabled vs plain (same engine, same chunks). Gated with an exact ceiling:
+  sweep checkpointing must stay a small multiple of the plain sweep.
+* ``resume_bit_identical`` — a sweep killed mid-scan (injected failure) and
+  resumed from its segment checkpoint must reproduce the uninterrupted
+  scores bit-for-bit (the core resumable-sweep guarantee).
+* ``recovery_overhead_ratio`` — a fit killed mid-run and supervised back to
+  completion (rollback to the latest atomic checkpoint + replay) vs the
+  clean fit; ``recovered`` asserts the final loss matches the clean run
+  exactly (full-batch adam replay is deterministic).
+
+Run: ``PYTHONPATH=src:. python benchmarks/ft_bench.py --smoke``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def ft_bench(smoke: bool = False, out_path: str | None = None) -> dict:
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core import mctm as M
+    from repro.core.bernstein import DataScaler
+    from repro.core.mctm_fit import MCTMDensityModel, fit_density_model
+    from repro.core.scoring import ScoringEngine
+    from repro.ft.config import ft_overrides, get_ft_config
+    from repro.ft.failure import FailureSimulator, InjectedFailure
+    from repro.optim import adamw
+
+    n = 12_288 if smoke else 120_000
+    chunk = 2048
+    n_fit = 4096 if smoke else 16_384
+    steps = 60 if smoke else 200
+    ckpt_every = 15 if smoke else 50
+
+    rng = np.random.default_rng(0)
+    Y = rng.random((n, 2)).astype(np.float32)
+    cfg = M.MCTMConfig(J=2, degree=5)
+    scaler = DataScaler.fit(Y)
+    hull_key = jax.random.PRNGKey(7)
+    engine = ScoringEngine(cfg, scaler, chunk_size=chunk)
+
+    def sweep(sweep_ckpt=None, resume=False):
+        return engine.score(
+            jnp.asarray(Y), method="l2-hull", hull_k=16, hull_key=hull_key,
+            sweep_ckpt=sweep_ckpt, resume=resume,
+        )
+
+    # ---- checkpointed vs plain sweep (warm both paths first: jit is shared,
+    # but the ckpt path adds host save I/O — that's the cost under test)
+    r_plain = sweep()
+    t0 = time.perf_counter()
+    r_plain = sweep()
+    t_plain = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory() as d:
+        with ft_overrides(sweep_ckpt_every_chunks=2):
+            t0 = time.perf_counter()
+            r_ckpt = sweep(sweep_ckpt=d)
+            t_ckpt = time.perf_counter() - t0
+    ckpt_overhead = t_ckpt / max(t_plain, 1e-9)
+    assert np.array_equal(np.asarray(r_plain.scores), np.asarray(r_ckpt.scores))
+
+    # ---- kill mid-sweep, resume, compare bit-for-bit
+    ft = get_ft_config()
+    with tempfile.TemporaryDirectory() as d:
+        with ft_overrides(sweep_ckpt_every_chunks=2):
+            ft.simulator = FailureSimulator().inject("scoring", 4)
+            try:
+                interrupts = 0
+                while True:
+                    try:
+                        r_res = sweep(sweep_ckpt=d, resume=True)
+                        break
+                    except InjectedFailure:
+                        interrupts += 1
+            finally:
+                ft.simulator = None
+    resume_bit_identical = bool(
+        interrupts >= 1
+        and np.array_equal(np.asarray(r_ckpt.scores), np.asarray(r_res.scores))
+        and np.array_equal(np.asarray(r_ckpt.leverage), np.asarray(r_res.leverage))
+        and np.array_equal(r_ckpt.hull_rows, r_res.hull_rows)
+    )
+
+    # ---- supervised fit recovery: injected crash + rollback/replay vs clean
+    Yf = rng.normal(size=(n_fit, 2)).astype(np.float32)
+    model = MCTMDensityModel(cfg, DataScaler.fit(Yf))
+    p0 = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"Y": Yf, "weights": np.ones(n_fit, np.float32)}
+
+    def fit(inject: bool):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2)
+            if inject:
+                ft.simulator = FailureSimulator().inject("fit", steps // 2)
+            try:
+                t0 = time.perf_counter()
+                _, losses, _ = fit_density_model(
+                    model, p0, batch, optimizer=adamw(5e-2), steps=steps,
+                    checkpoint=mgr, ckpt_every=ckpt_every,
+                )
+                return time.perf_counter() - t0, losses
+            finally:
+                ft.simulator = None
+
+    fit(False)  # warm the jit cache out of both timed paths
+    t_clean, l_clean = fit(False)
+    t_rec, l_rec = fit(True)
+    recovery_overhead = t_rec / max(t_clean, 1e-9)
+    recovered = bool(
+        len(l_rec) and len(l_clean) and l_rec[-1] == l_clean[-1]
+    )
+
+    rec = {
+        "smoke": bool(smoke),
+        "n_score": n,
+        "chunk": chunk,
+        "score_chunks": int(r_plain.n_chunks),
+        "n_fit": n_fit,
+        "fit_steps": steps,
+        "ckpt_every": ckpt_every,
+        "sweep_ckpt_every_chunks": 2,
+        "t_sweep_plain_s": t_plain,
+        "t_sweep_ckpt_s": t_ckpt,
+        "ckpt_overhead_ratio": ckpt_overhead,
+        "scoring_interrupts": interrupts,
+        "resume_bit_identical": resume_bit_identical,
+        "t_fit_clean_s": t_clean,
+        "t_fit_recovered_s": t_rec,
+        "recovery_overhead_ratio": recovery_overhead,
+        "recovered": recovered,
+        "final_loss": float(l_clean[-1]),
+    }
+    if out_path is None:
+        if smoke:
+            from benchmarks.common import bench_dir
+
+            out_path = os.path.join(bench_dir("bench"), "BENCH_ft_smoke.json")
+        else:
+            out_path = os.path.join(REPO_ROOT, "BENCH_ft.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[ft_bench] ckpt_overhead {ckpt_overhead:.2f}x  "
+          f"resume_bit_identical {resume_bit_identical}  "
+          f"recovery_overhead {recovery_overhead:.2f}x  "
+          f"recovered {recovered}", flush=True)
+    print(f"[ft_bench] wrote {out_path}", flush=True)
+    if not (resume_bit_identical and recovered):
+        raise SystemExit("[ft_bench] recovery contract violated")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes — seconds, for CI")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    ft_bench(smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

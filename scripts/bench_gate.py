@@ -95,6 +95,21 @@ RULES: dict[str, list[Rule]] = {
         # regressions
         Rule("per_k.[].speedup_vs_full_fit", "time_ratio", ratio=3.0),
     ],
+    "BENCH_ft": [
+        Rule("n_score", "invariant"),
+        Rule("score_chunks", "invariant"),
+        Rule("n_fit", "invariant"),
+        Rule("fit_steps", "invariant"),
+        Rule("resume_bit_identical", "invariant"),
+        Rule("recovered", "invariant"),
+        # overhead ratios are smaller-better (1.0 = free), so they gate as
+        # "exact" ceilings, never "time_ratio" floors; both compare two
+        # timings from the same run, but the ckpt sweep adds host I/O and
+        # the recovery fit replays from the last checkpoint, so give them
+        # generous multiplicative + absolute slack for runner noise
+        Rule("ckpt_overhead_ratio", "exact", rel=1.5, abs=0.5),
+        Rule("recovery_overhead_ratio", "exact", rel=1.5, abs=0.5),
+    ],
 }
 
 # Default gate targets: (generated relpath, baseline relpath).
@@ -104,6 +119,7 @@ DEFAULT_PAIRS = [
     ("BENCH_mctm_fit_smoke.json", "BENCH_mctm_fit_smoke.json"),
     ("BENCH_mctm_fit_smoke_lbfgs.json", "BENCH_mctm_fit_smoke_lbfgs.json"),
     ("BENCH_mctm_fit_smoke_minibatch.json", "BENCH_mctm_fit_smoke_minibatch.json"),
+    ("BENCH_ft_smoke.json", "BENCH_ft_smoke.json"),
 ]
 
 

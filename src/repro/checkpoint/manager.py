@@ -2,8 +2,11 @@
 
 Layout:  <dir>/step_<N>/  — one .npy per leaf (keypath-encoded filename) +
 ``manifest.json`` (treedef, shapes, dtypes). Writes go to ``step_<N>.tmp``
-and are atomically renamed, so a crash mid-save never corrupts the latest
-restorable step — the core requirement for restart-after-node-failure.
+(leaves and manifest fsynced, then the directory entries) and are atomically
+renamed, so a crash — or power loss — mid-save never corrupts the latest
+restorable step: a torn ``step_N.tmp`` is invisible to ``latest_step()`` /
+``restore()`` and is reclaimed by the next save's GC. This is the core
+requirement for restart-after-node-failure.
 
 On a multi-host cluster each host writes only its addressable shards under
 ``host_<i>/`` (shard layout recorded in the manifest); in this container
@@ -22,9 +25,37 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.ft.config import maybe_inject
+
 PyTree = Any
 
 _SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory entry so renames/creates inside it are durable.
+
+    Best-effort: some filesystems refuse O_RDONLY fsync on directories."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _to_host(x) -> np.ndarray:
+    """Device→host transfer that also handles non-fully-addressable arrays
+    (multi-process meshes), where ``np.asarray`` would raise."""
+    if getattr(x, "is_fully_addressable", True):
+        return np.asarray(x)
+    from repro.core.distributed_coreset import host_gather
+
+    return host_gather(x)
 
 
 def _leaf_name(path) -> str:
@@ -54,10 +85,14 @@ class CheckpointManager:
     def save(self, step: int, state: PyTree, *, block: bool = True) -> str:
         """Save a pytree; atomic rename at the end. Returns the final path."""
         self.wait()  # one in-flight async save at a time
-        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        host_state = jax.tree.map(_to_host, state)
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        if jax.process_count() > 1 and jax.process_index() != 0:
+            # host_gather above is collective; only process 0 touches disk
+            # (shared checkpoint dir — concurrent renames would race)
+            return final
 
         def _write():
-            final = os.path.join(self.directory, f"step_{step:08d}")
             tmp = final + ".tmp"
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
@@ -72,15 +107,23 @@ class CheckpointManager:
                 while name in existing:
                     i += 1
                     name = f"{base}__{i}"
-                np.save(os.path.join(tmp, name + ".npy"), leaf)
+                with open(os.path.join(tmp, name + ".npy"), "wb") as f:
+                    np.save(f, leaf)
+                    f.flush()
+                    os.fsync(f.fileno())
                 manifest["leaves"].append(
                     {"name": name, "shape": list(np.shape(leaf)), "dtype": str(np.asarray(leaf).dtype)}
                 )
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            maybe_inject("checkpoint", step)  # torn write: fully built tmp, no rename
+            _fsync_dir(tmp)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)  # atomic commit
+            _fsync_dir(self.directory)
             self._gc()
             return final
 
@@ -99,6 +142,12 @@ class CheckpointManager:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+        # leftover .tmp dirs from a crash mid-save: never restorable (restore
+        # only reads committed step_N dirs), only reclaimable — our own tmp
+        # has already been renamed by the time _gc runs
+        for d in os.listdir(self.directory):
+            if re.fullmatch(r"step_\d+\.tmp", d):
+                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
 
     # --------------------------------------------------------------- restore
 

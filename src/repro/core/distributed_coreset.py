@@ -56,6 +56,7 @@ The same Gram-psum pattern powers the LM-pipeline coreset stage
 from __future__ import annotations
 
 import itertools
+import os
 import time
 from typing import Callable
 
@@ -98,7 +99,10 @@ __all__ = [
     "distributed_build_coreset",
     "make_sharded_pass_fns",
     "make_sharded_onepass_fn",
+    "make_segmented_pass_fns",
+    "make_segmented_onepass_fn",
     "host_gather",
+    "kv_allreduce",
     "shard_layout",
 ]
 
@@ -137,7 +141,21 @@ def _spec_el(axes: tuple[str, ...]):
 # it in the same order), so the counter names a unique KV namespace + barrier
 # per gather that all processes agree on
 _KV_GATHER_SEQ = itertools.count()
+_KV_ALLREDUCE_SEQ = itertools.count()
 _KV_TIMEOUT_MS = 120_000
+
+
+def _kv_timeout_ms() -> int:
+    """KV-store barrier/get deadline — the ft config's ``kv_timeout_ms``.
+
+    This doubles as the peer-death detector for host-level data parallelism:
+    when a peer dies mid-step, the survivor's next barrier times out with a
+    RuntimeError that ``ft.supervisor.RunSupervisor`` treats as retryable,
+    triggering re-planning onto the surviving devices.
+    """
+    from repro.ft.config import get_ft_config
+
+    return int(get_ft_config().kv_timeout_ms)
 
 
 def _kv_store_gather(x) -> np.ndarray:
@@ -170,16 +188,17 @@ def _kv_store_gather(x) -> np.ndarray:
     ]
     key = f"repro/host_gather/{seq}/{pid}"
     client.key_value_set_bytes(key, pickle.dumps(shards))
-    client.wait_at_barrier(f"repro_host_gather_{seq}", _KV_TIMEOUT_MS)
+    timeout = _kv_timeout_ms()
+    client.wait_at_barrier(f"repro_host_gather_{seq}", timeout)
     out = np.zeros(x.shape, x.dtype)
     for p in range(jax.process_count()):
         blob = client.blocking_key_value_get_bytes(
-            f"repro/host_gather/{seq}/{p}", _KV_TIMEOUT_MS
+            f"repro/host_gather/{seq}/{p}", timeout
         )
         for bounds, data in pickle.loads(blob):
             out[tuple(slice(a, b) for a, b in bounds)] = data
     # second barrier before deleting our key: every process has read it
-    client.wait_at_barrier(f"repro_host_gather_done_{seq}", _KV_TIMEOUT_MS)
+    client.wait_at_barrier(f"repro_host_gather_done_{seq}", timeout)
     client.key_value_delete(key)
     return out
 
@@ -212,6 +231,45 @@ def host_gather(x) -> np.ndarray:
         ):
             raise
         return _kv_store_gather(x)
+
+
+def kv_allreduce(tree, timeout_ms: int | None = None):
+    """Sum-allreduce a pytree of host arrays across jax processes via the
+    coordinator's KV store.
+
+    The backbone of CPU-backend-safe host-level data parallelism: each
+    process computes local gradients with a plain local jit and exchanges
+    them here (the CPU backend cannot run cross-process jit collectives).
+    Collective — every process must call in the same order. Single-process:
+    identity. A dead peer surfaces as a barrier timeout (RuntimeError after
+    ``timeout_ms``, default the ft config's ``kv_timeout_ms``) — the
+    supervisor's retryable signal for re-planning onto the survivors.
+    """
+    import pickle
+
+    from jax._src import distributed
+
+    if jax.process_count() == 1:
+        return tree
+    client = distributed.global_state.client
+    if client is None:
+        raise RuntimeError("kv_allreduce: jax.distributed was never initialized")
+    timeout = int(timeout_ms) if timeout_ms is not None else _kv_timeout_ms()
+    seq = next(_KV_ALLREDUCE_SEQ)
+    pid = jax.process_index()
+    leaves, treedef = jax.tree.flatten(tree)
+    host = [np.asarray(leaf) for leaf in leaves]
+    key = f"repro/allreduce/{seq}/{pid}"
+    client.key_value_set_bytes(key, pickle.dumps(host))
+    client.wait_at_barrier(f"repro_allreduce_{seq}", timeout)
+    out = [np.zeros_like(h) for h in host]
+    for p in range(jax.process_count()):
+        blob = client.blocking_key_value_get_bytes(f"repro/allreduce/{seq}/{p}", timeout)
+        for acc, arr in zip(out, pickle.loads(blob)):
+            acc += arr
+    client.wait_at_barrier(f"repro_allreduce_done_{seq}", timeout)
+    client.key_value_delete(key)
+    return jax.tree.unflatten(treedef, out)
 
 
 def distributed_gram(X: jax.Array, mesh: Mesh, axis: str = "data") -> jax.Array:
@@ -614,6 +672,242 @@ def make_sharded_onepass_fn(
     )
 
 
+def make_segmented_pass_fns(
+    featurize: Callable,
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    *,
+    chunk: int,
+    seg_chunks: int,
+    total_chunks: int,
+    rows_per_point: int,
+    hull: bool,
+    D: int,
+    p: int,
+    gram_dtype: str = "float32",
+):
+    """Segmented (resumable) variants of ``make_sharded_pass_fns``.
+
+    Each call scans only ``seg_chunks`` of the ``total_chunks`` per-shard
+    chunks and carries the PER-SHARD partial statistics in and out (leading
+    shards axis, row-sharded) instead of psumming them — the cross-shard
+    reduction happens exactly once, host-side, after the last segment. That
+    preserves the per-shard accumulation order bit-for-bit across any
+    interrupt/resume boundary, which is what makes the segmented sweeps
+    (``DistributedScoringEngine.score(sweep_ckpt=...)``) resume
+    bit-identically to their uninterrupted runs.
+
+    pass1_seg(Y_seg, swm_seg, mask_seg, G, s1, s2) -> updated per-shard
+    (shards, D, D)/(shards, p)/(shards, p, p) carries.
+    pass2_seg: hull variant (…, V, inv, dirs, bmax, imax, bmin, imin, c0) ->
+    (u_seg row-sharded, updated per-shard extremes); plain variant
+    (…, V, inv) -> u_seg. ``c0`` is the replicated starting chunk index of
+    the segment, so global hull row offsets stay exact mid-sweep.
+    """
+    r = rows_per_point
+    per_full = total_chunks * chunk
+    sizes = [mesh.shape[a] for a in axes]
+    row_spec = _spec_el(axes)
+
+    def _chunked(a):
+        return a.reshape((seg_chunks, chunk) + a.shape[1:])
+
+    def pass1_body(ys, swm, mask, G, s1, s2):
+        def step(carry, xs):
+            yc, swc, mc = xs
+            X, Pr = featurize(yc)
+            if hull:
+                Pr = Pr * jnp.repeat(mc, r)[:, None]
+            else:
+                Pr = None
+            return (
+                pass1_update(
+                    carry[0], carry[1], carry[2], X, Pr, swc, gram_dtype=gram_dtype
+                ),
+                None,
+            )
+
+        carry, _ = jax.lax.scan(
+            step, (G[0], s1[0], s2[0]), (_chunked(ys), _chunked(swm), _chunked(mask))
+        )
+        # NO psum — the per-shard partials go back to the host checkpoint
+        return carry[0][None], carry[1][None], carry[2][None]
+
+    row = P(row_spec)
+    pass1 = shard_map(
+        pass1_body,
+        mesh=mesh,
+        in_specs=(
+            P(row_spec, None),
+            row,
+            row,
+            P(row_spec, None, None),
+            P(row_spec, None),
+            P(row_spec, None, None),
+        ),
+        out_specs=(
+            P(row_spec, None, None),
+            P(row_spec, None),
+            P(row_spec, None, None),
+        ),
+        check_vma=False,
+    )
+
+    def pass2_hull_body(ys, swm, mask, V, inv, dirs, bmax, imax, bmin, imin, c0):
+        base = _shard_index_fn(axes, sizes) * per_full
+
+        def step(carry, xs):
+            ci, yc, swc, mc = xs
+            X, Pr = featurize(yc)
+            u = leverage_chunk(X, swc, V, inv)
+            pm = jnp.repeat(mc, r) > 0
+            carry = _extremes_step(carry, Pr, dirs, pm, (base + (c0 + ci) * chunk) * r)
+            return carry, u
+
+        ext, u = jax.lax.scan(
+            step,
+            (bmax[0], imax[0], bmin[0], imin[0]),
+            (jnp.arange(seg_chunks), _chunked(ys), _chunked(swm), _chunked(mask)),
+        )
+        return (u.reshape(seg_chunks * chunk),) + tuple(e[None] for e in ext)
+
+    def pass2_body(ys, swm, V, inv):
+        def step(_, xs):
+            yc, swc = xs
+            X, _ = featurize(yc)
+            return None, leverage_chunk(X, swc, V, inv)
+
+        _, u = jax.lax.scan(step, None, (_chunked(ys), _chunked(swm)))
+        return u.reshape(seg_chunks * chunk)
+
+    if hull:
+        pass2 = shard_map(
+            pass2_hull_body,
+            mesh=mesh,
+            in_specs=(
+                P(row_spec, None),
+                row,
+                row,
+                P(None, None),
+                P(None),
+                P(None, None),
+                P(row_spec, None),
+                P(row_spec, None),
+                P(row_spec, None),
+                P(row_spec, None),
+                P(),
+            ),
+            out_specs=(
+                row,
+                P(row_spec, None),
+                P(row_spec, None),
+                P(row_spec, None),
+                P(row_spec, None),
+            ),
+            check_vma=False,
+        )
+    else:
+        pass2 = shard_map(
+            pass2_body,
+            mesh=mesh,
+            in_specs=(P(row_spec, None), row, P(None, None), P(None)),
+            out_specs=row,
+            check_vma=False,
+        )
+    return pass1, pass2
+
+
+def make_segmented_onepass_fn(
+    featurize: Callable,
+    mesh: Mesh,
+    axes: tuple[str, ...],
+    *,
+    chunk: int,
+    seg_chunks: int,
+    total_chunks: int,
+    rows_per_point: int,
+    hull: bool,
+    D: int,
+    q: int | None,
+    sketch_size: int,
+):
+    """Segmented (resumable) ``make_sharded_onepass_fn`` — see
+    ``make_segmented_pass_fns`` for the per-shard carry contract. One call
+    scans ``seg_chunks`` chunks, carrying the PER-SHARD CountSketch (and
+    hull extremes) in and out with no psum, and emits that segment's
+    sketch-projected z rows.
+
+    fn(Y_seg, swm_seg, mask_seg, rows_seg, signs_seg, SX, c0, *extra) with
+    extra = (Ω,) when ``q`` plus (bmax, imax, bmin, imin, dirs) when
+    ``hull``; returns (z_seg row-sharded, SX' per-shard[, extremes']).
+    """
+    r = rows_per_point
+    per_full = total_chunks * chunk
+    sizes = [mesh.shape[a] for a in axes]
+    row_spec = _spec_el(axes)
+    width = q if q else D
+
+    def _chunked(a):
+        return a.reshape((seg_chunks, chunk) + a.shape[1:])
+
+    def body(ys, swm, mask, rows, signs, SX, c0, *extra):
+        i = 0
+        omega = None
+        if q:
+            omega = extra[0]
+            i = 1
+        if hull:
+            bmax, imax, bmin, imin, dirs = extra[i : i + 5]
+        base = _shard_index_fn(axes, sizes) * per_full
+
+        def step(carry, xs):
+            SXc, ext = carry
+            ci, yc, swc, mc, rc, sc = xs
+            X, Pr = featurize(yc)
+            Xw = X * swc[:, None]
+            SXc = SXc.at[rc].add(sc[:, None] * Xw)
+            if hull:
+                pm = jnp.repeat(mc, r) > 0
+                ext = _extremes_step(ext, Pr, dirs, pm, (base + (c0 + ci) * chunk) * r)
+            z = Xw if omega is None else Xw @ omega
+            return (SXc, ext), z
+
+        ext0 = (bmax[0], imax[0], bmin[0], imin[0]) if hull else ()
+        (SXc, ext), z = jax.lax.scan(
+            step,
+            (SX[0], ext0),
+            (
+                jnp.arange(seg_chunks),
+                _chunked(ys),
+                _chunked(swm),
+                _chunked(mask),
+                _chunked(rows),
+                _chunked(signs),
+            ),
+        )
+        outs = (z.reshape(seg_chunks * chunk, width), SXc[None])
+        if hull:
+            outs = outs + tuple(e[None] for e in ext)
+        return outs
+
+    row = P(row_spec)
+    in_specs = (P(row_spec, None), row, row, row, row, P(row_spec, None, None), P())
+    if q:
+        in_specs = in_specs + (P(None, None),)
+    if hull:
+        in_specs = in_specs + (P(row_spec, None),) * 4 + (P(None, None),)
+    out_specs = (P(row_spec, None), P(row_spec, None, None))
+    if hull:
+        out_specs = out_specs + (P(row_spec, None),) * 4
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+    )
+
+
 class DistributedScoringEngine:
     """Sharded + chunked pre-sampling phase of Algorithm 1 (see module doc).
 
@@ -718,6 +1012,354 @@ class DistributedScoringEngine:
             self._fns[key] = (jax.jit(fn), D)
         return self._fns[key]
 
+    def _segment_fns(self, chunk, seg, cps, hull, width, dtype, gram_dtype):
+        D, p = self._feature_shapes(chunk, hull, width, dtype)
+        key = ("seg-two-pass", chunk, seg, cps, hull, D, p, gram_dtype)
+        if key not in self._fns:
+            p1, p2 = make_segmented_pass_fns(
+                self.featurize,
+                self.mesh,
+                self.axes,
+                chunk=chunk,
+                seg_chunks=seg,
+                total_chunks=cps,
+                rows_per_point=self.rows_per_point,
+                hull=hull,
+                D=D,
+                p=p,
+                gram_dtype=gram_dtype,
+            )
+            self._fns[key] = (jax.jit(p1), jax.jit(p2), D, p)
+        return self._fns[key]
+
+    def _segment_onepass_fn(
+        self, chunk, seg, cps, hull, width, dtype, proj_size, sketch_size
+    ):
+        D, _ = self._feature_shapes(chunk, hull, width, dtype)
+        q = proj_size if (proj_size is not None and proj_size < D) else None
+        key = ("seg-one-pass", chunk, seg, cps, hull, D, q, sketch_size)
+        if key not in self._fns:
+            fn = make_segmented_onepass_fn(
+                self.featurize,
+                self.mesh,
+                self.axes,
+                chunk=chunk,
+                seg_chunks=seg,
+                total_chunks=cps,
+                rows_per_point=self.rows_per_point,
+                hull=hull,
+                D=D,
+                q=q,
+                sketch_size=sketch_size,
+            )
+            self._fns[key] = (jax.jit(fn), D, q)
+        return self._fns[key]
+
+    def _score_segmented(
+        self, strat, key, Y, weights, method, ridge_reg, hull_k, hull_key,
+        sweep_ckpt, resume,
+    ):
+        """The resumable sweep driver: host-held per-shard partials, atomic
+        segment checkpoints, ONE host-side cross-shard reduction at the end.
+
+        The host keeps the full padded data (this path targets robustness,
+        not peak scale) and stages one segment's rows at a time; the device
+        never holds more than a segment. Checkpoint payloads have fixed
+        shapes for a given (n, mesh, chunk) layout — resume requires the
+        same layout that wrote the sweep checkpoints.
+        """
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.ft.config import get_ft_config, maybe_inject
+
+        r = self.rows_per_point
+        hull = hull_k > 0
+        Y = np.asarray(Y)
+        n = int(Y.shape[0])
+        if n == 0:
+            raise ValueError("cannot score an empty dataset")
+        chunk, cps, n_pad = self._shard_layout(n)
+        shards = _num_shards(self.mesh, self.axes)
+        per = cps * chunk
+        pad = n_pad - n
+        dtype = jax.dtypes.canonicalize_dtype(Y.dtype)
+        if pad:
+            Y_pad = np.concatenate(
+                [Y, np.broadcast_to(Y[:1], (pad,) + Y.shape[1:])], axis=0
+            )
+        else:
+            Y_pad = Y
+        Y_pad = np.ascontiguousarray(Y_pad, dtype)
+        mask = (np.arange(n_pad) < n).astype(np.float32)
+        sw = (
+            np.sqrt(np.asarray(weights, np.float32))
+            if weights is not None
+            else np.ones((n,), np.float32)
+        )
+        swm = np.concatenate([sw, np.zeros((pad,), np.float32)]) if pad else sw
+
+        root = getattr(sweep_ckpt, "directory", sweep_ckpt)
+        every = max(int(get_ft_config().sweep_ckpt_every_chunks), 1)
+        mgr1 = CheckpointManager(os.path.join(root, "sweep1"), keep=2)
+        mgr2 = CheckpointManager(os.path.join(root, "sweep2"), keep=2)
+
+        def seg_rows(arr, c0, c1):
+            # global layout is row-sharded: shard s owns rows [s·per, (s+1)·per);
+            # a segment takes each shard's chunks [c0, c1)
+            tail = arr.shape[1:]
+            a = arr.reshape((shards, per) + tail)[:, c0 * chunk : c1 * chunk]
+            return np.ascontiguousarray(
+                a.reshape((shards * (c1 - c0) * chunk,) + tail)
+            )
+
+        def segments(done):
+            c0 = done
+            while c0 < cps:
+                yield c0, min(c0 + every, cps)
+                c0 += every
+
+        if isinstance(strat, OnePassSketched):
+            return self._segmented_one_pass(
+                strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps, shards,
+                method, ridge_reg, hull_k, hull_key, dtype,
+                mgr1, seg_rows, segments, maybe_inject, resume,
+            )
+
+        # ------------------------------------------------ two-pass, sweep 1
+        f64 = strat.gram_dtype == "float64"
+        _, _, D, p = self._segment_fns(
+            chunk, min(every, cps), cps, hull, Y_pad.shape[1:], dtype,
+            strat.gram_dtype,
+        )
+        G_h = np.zeros((shards, D, D), np.float64 if f64 else np.float32)
+        s1_h = np.zeros((shards, p), np.float32)
+        s2_h = np.zeros((shards, p, p), np.float32)
+        done1 = 0
+
+        def payload1():
+            return {
+                "chunks": np.asarray(done1, np.int64),
+                "G": G_h,
+                "s1": s1_h,
+                "s2": s2_h,
+            }
+
+        if resume and mgr1.latest_step() is not None:
+            got = mgr1.restore(payload1())
+            done1 = int(got["chunks"])
+            G_h, s1_h, s2_h = (
+                np.asarray(got["G"]),
+                np.asarray(got["s1"]),
+                np.asarray(got["s2"]),
+            )
+        for c0, c1 in segments(done1):
+            p1, _, _, _ = self._segment_fns(
+                chunk, c1 - c0, cps, hull, Y_pad.shape[1:], dtype,
+                strat.gram_dtype,
+            )
+            G_d, s1_d, s2_d = p1(
+                self._shard_put(seg_rows(Y_pad, c0, c1)),
+                self._shard_put(seg_rows(swm, c0, c1)),
+                self._shard_put(seg_rows(mask, c0, c1)),
+                self._shard_put(G_h),
+                self._shard_put(s1_h),
+                self._shard_put(s2_h),
+            )
+            G_h, s1_h, s2_h = (
+                host_gather(G_d),
+                host_gather(s1_d),
+                host_gather(s2_d),
+            )
+            done1 = c1
+            mgr1.save(done1, payload1())
+            maybe_inject("scoring", done1)
+
+        # one host-side cross-shard reduction (deterministic order — the
+        # resumed and uninterrupted runs sum identical per-shard partials)
+        G_tot = G_h.sum(axis=0)
+        V, inv = projection_from_gram(G_tot, method, ridge_reg)
+        dirs = None
+        if hull:
+            dirs = np.asarray(
+                directions_from_moments(
+                    hull_key, s1_h.sum(axis=0), s2_h.sum(axis=0), n * r,
+                    hull_k, self.hull_oversample,
+                )
+            )
+
+        # ------------------------------------------------ two-pass, sweep 2
+        m = int(dirs.shape[0]) if hull else 0
+        u_h = np.zeros((shards, per), np.float32)
+        bmax_h = np.full((shards, m), -np.inf, np.float32)
+        imax_h = np.zeros((shards, m), np.int32)
+        bmin_h = np.full((shards, m), np.inf, np.float32)
+        imin_h = np.zeros((shards, m), np.int32)
+        done2 = 0
+
+        def payload2():
+            d = {"chunks": np.asarray(done2, np.int64), "u": u_h}
+            if hull:
+                d.update(bmax=bmax_h, imax=imax_h, bmin=bmin_h, imin=imin_h)
+            return d
+
+        if resume and mgr2.latest_step() is not None:
+            got = mgr2.restore(payload2())
+            done2 = int(got["chunks"])
+            u_h = np.asarray(got["u"])
+            if hull:
+                bmax_h, imax_h = np.asarray(got["bmax"]), np.asarray(got["imax"])
+                bmin_h, imin_h = np.asarray(got["bmin"]), np.asarray(got["imin"])
+        for c0, c1 in segments(done2):
+            _, p2, _, _ = self._segment_fns(
+                chunk, c1 - c0, cps, hull, Y_pad.shape[1:], dtype,
+                strat.gram_dtype,
+            )
+            ys = self._shard_put(seg_rows(Y_pad, c0, c1))
+            sws = self._shard_put(seg_rows(swm, c0, c1))
+            if hull:
+                u_seg, bmax_d, imax_d, bmin_d, imin_d = p2(
+                    ys, sws, self._shard_put(seg_rows(mask, c0, c1)),
+                    jnp.asarray(V), jnp.asarray(inv), jnp.asarray(dirs),
+                    self._shard_put(bmax_h), self._shard_put(imax_h),
+                    self._shard_put(bmin_h), self._shard_put(imin_h),
+                    jnp.asarray(c0, jnp.int32),
+                )
+                bmax_h, imax_h = host_gather(bmax_d), host_gather(imax_d)
+                bmin_h, imin_h = host_gather(bmin_d), host_gather(imin_d)
+            else:
+                u_seg = p2(ys, sws, jnp.asarray(V), jnp.asarray(inv))
+            u_h[:, c0 * chunk : c1 * chunk] = host_gather(u_seg).reshape(
+                shards, (c1 - c0) * chunk
+            )
+            done2 = c1
+            mgr2.save(done2, payload2())
+            maybe_inject("scoring", cps + done2)
+
+        hull_rows = None
+        if hull:
+            hull_rows = self._reduce_extremes_host(
+                bmax_h, imax_h, bmin_h, imin_h
+            )
+        u = u_h.reshape(n_pad)[:n]
+        return finalize_scoring(n, cps * shards, method, G_tot, u, hull_rows, r)
+
+    def _segmented_one_pass(
+        self, strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps, shards,
+        method, ridge_reg, hull_k, hull_key, dtype,
+        mgr1, seg_rows, segments, maybe_inject, resume,
+    ):
+        """Segmented one-pass sketched sweep (single data sweep, resumable)."""
+        r = self.rows_per_point
+        hull = hull_k > 0
+        per = cps * chunk
+        pad = n_pad - n
+        D, _ = self._feature_shapes(chunk, hull, Y_pad.shape[1:], dtype)
+        q = (
+            strat.proj_size
+            if (strat.proj_size is not None and strat.proj_size < D)
+            else None
+        )
+        width = q if q else D
+        rows, signs, omega = strat.begin(n, D, key)
+        rows = np.asarray(rows)
+        signs = np.asarray(signs)
+        if pad:
+            rows = np.concatenate([rows, np.zeros((pad,), rows.dtype)])
+            signs = np.concatenate([signs, np.zeros((pad,), signs.dtype)])
+        dirs1 = None
+        m = 0
+        if hull:
+            dirs1 = np.asarray(
+                upfront_directions(
+                    hull_key, self._p_rows_width(chunk, Y_pad), hull_k,
+                    self.hull_oversample,
+                )
+            )
+            m = int(dirs1.shape[0])
+
+        SX_h = np.zeros((shards, strat.sketch_size, D), np.float32)
+        z_h = np.zeros((shards, per, width), np.float32)
+        bmax_h = np.full((shards, m), -np.inf, np.float32)
+        imax_h = np.zeros((shards, m), np.int32)
+        bmin_h = np.full((shards, m), np.inf, np.float32)
+        imin_h = np.zeros((shards, m), np.int32)
+        done = 0
+
+        def payload():
+            d = {"chunks": np.asarray(done, np.int64), "SX": SX_h, "z": z_h}
+            if hull:
+                d.update(bmax=bmax_h, imax=imax_h, bmin=bmin_h, imin=imin_h)
+            return d
+
+        if resume and mgr1.latest_step() is not None:
+            got = mgr1.restore(payload())
+            done = int(got["chunks"])
+            SX_h, z_h = np.asarray(got["SX"]), np.asarray(got["z"])
+            if hull:
+                bmax_h, imax_h = np.asarray(got["bmax"]), np.asarray(got["imax"])
+                bmin_h, imin_h = np.asarray(got["bmin"]), np.asarray(got["imin"])
+        for c0, c1 in segments(done):
+            fn, _, _ = self._segment_onepass_fn(
+                chunk, c1 - c0, cps, hull, Y_pad.shape[1:], dtype,
+                strat.proj_size, strat.sketch_size,
+            )
+            extras = ()
+            if omega is not None:
+                extras = extras + (jnp.asarray(omega),)
+            if hull:
+                extras = extras + (
+                    self._shard_put(bmax_h), self._shard_put(imax_h),
+                    self._shard_put(bmin_h), self._shard_put(imin_h),
+                    jnp.asarray(dirs1),
+                )
+            outs = fn(
+                self._shard_put(seg_rows(Y_pad, c0, c1)),
+                self._shard_put(seg_rows(swm, c0, c1)),
+                self._shard_put(seg_rows(mask, c0, c1)),
+                self._shard_put(seg_rows(rows, c0, c1)),
+                self._shard_put(seg_rows(signs, c0, c1)),
+                self._shard_put(SX_h),
+                jnp.asarray(c0, jnp.int32),
+                *extras,
+            )
+            z_h[:, c0 * chunk : c1 * chunk] = host_gather(outs[0]).reshape(
+                shards, (c1 - c0) * chunk, width
+            )
+            SX_h = host_gather(outs[1])
+            if hull:
+                bmax_h, imax_h = host_gather(outs[2]), host_gather(outs[3])
+                bmin_h, imin_h = host_gather(outs[4]), host_gather(outs[5])
+            done = c1
+            mgr1.save(done, payload())
+            maybe_inject("scoring", done)
+
+        SX_tot = SX_h.sum(axis=0)
+        SXp = SX_tot if omega is None else SX_tot @ np.asarray(omega)
+        V, inv = projection_from_gram(SXp.T @ SXp, method, ridge_reg)
+        z_flat = z_h.reshape(n_pad, width)
+        u = np.concatenate(
+            [
+                np.asarray(_z_leverage_jit(jnp.asarray(z_flat[lo : lo + per]), V, inv))
+                for lo in range(0, n_pad, per)
+            ]
+        )[:n]
+        hull_rows = None
+        if hull:
+            hull_rows = self._reduce_extremes_host(bmax_h, imax_h, bmin_h, imin_h)
+        G_host = SX_tot.T @ SX_tot
+        return finalize_scoring(n, cps * shards, method, G_host, u, hull_rows, r)
+
+    @staticmethod
+    def _reduce_extremes_host(bmax_h, imax_h, bmin_h, imin_h):
+        """Host analogue of ``_extremes_cross_shard``: lowest shard wins ties,
+        then first-occurrence dedup — matching the in-mesh reduction."""
+        m = bmax_h.shape[1]
+        cols = np.arange(m)
+        gimax = imax_h[np.argmax(bmax_h, axis=0), cols]
+        gimin = imin_h[np.argmax(-bmin_h, axis=0), cols]
+        return stable_first_unique(
+            np.concatenate([gimax, gimin]).astype(np.int64)
+        )
+
     def _shard_put(self, x, row_sharded: bool = True):
         spec = (
             P(_spec_el(self.axes), *([None] * (x.ndim - 1)))
@@ -802,6 +1444,8 @@ class DistributedScoringEngine:
         strategy=None,
         gram_dtype: str | None = None,
         n_valid: int | None = None,
+        sweep_ckpt=None,
+        resume: bool = False,
     ) -> ScoringResult:
         """Score all n points on the mesh; same semantics (and the same pass
         strategies) as the single-host ``ScoringEngine.score``.
@@ -809,6 +1453,16 @@ class DistributedScoringEngine:
         ``n_valid``: pass when ``Y`` was pre-staged with ``stage_rows`` —
         ``Y`` is then the already padded+sharded (n_pad, …) array and
         ``n_valid`` the true row count.
+
+        ``sweep_ckpt``: directory (or ``CheckpointManager``-like object with
+        ``.directory``) for resumable sweeps — the scan is split into
+        segments of ``ft_config.sweep_ckpt_every_chunks`` chunks whose
+        PER-SHARD partial state (Gram/moments or CountSketch, running hull
+        extremes, scored rows, chunk cursor) checkpoints atomically between
+        segments. ``resume=True`` picks up from the latest segment; because
+        per-shard accumulation order is preserved and the cross-shard
+        reduction runs once at the end, the resumed result is bit-identical
+        to the uninterrupted segmented run (same mesh/chunk layout required).
         """
         if method not in SCORE_METHODS:
             raise ValueError(f"unknown scoring method: {method}")
@@ -845,6 +1499,16 @@ class DistributedScoringEngine:
                 "hull selection over more than 2^31-1 derivative rows would "
                 "overflow the int32 hull-index carries; shard the input or "
                 "reduce rows_per_point"
+            )
+        if sweep_ckpt is not None:
+            if n_valid is not None:
+                raise ValueError(
+                    "sweep_ckpt is incompatible with pre-staged inputs "
+                    "(n_valid): the segmented driver stages rows per segment"
+                )
+            return self._score_segmented(
+                strat, key, Y, weights, method, ridge_reg, hull_k, hull_key,
+                sweep_ckpt, resume,
             )
         if n_valid is not None:
             n = int(n_valid)
@@ -999,6 +1663,8 @@ def distributed_build_coreset(
     alpha: float = 0.8,
     sketch_size: int = 0,
     chunk_size: int | None = DEFAULT_CHUNK,
+    sweep_ckpt=None,
+    resume: bool = False,
 ):
     """Paper Algorithm 1 with the pre-sampling phase fully distributed.
 
@@ -1006,6 +1672,9 @@ def distributed_build_coreset(
     — returns a ``CoresetResult`` — but scoring runs on ``mesh`` through the
     ``DistributedScoringEngine``. ``sketch_size > 0`` routes through the
     fused one-pass sketched sweep (each row featurized exactly once).
+    ``sweep_ckpt``/``resume``: resumable segmented scoring sweeps — see
+    ``DistributedScoringEngine.score``. The sampling step after scoring is a
+    pure function of ``key``, so a resumed build draws the same coreset.
     """
     from repro.core.coreset import CoresetResult, coreset_from_scoring
 
@@ -1027,11 +1696,13 @@ def distributed_build_coreset(
         cfg, scaler, mesh=mesh, axis=axis, chunk_size=chunk_size
     )
     res = engine.score(
-        jnp.asarray(Y),
+        Y if sweep_ckpt is not None else jnp.asarray(Y),
         method=method,
         hull_k=k_hull,
         hull_key=k_hull_key,
         sketch_size=sketch_size,
         key=k_score if sketch_size > 0 else None,
+        sweep_ckpt=sweep_ckpt,
+        resume=resume,
     )
     return coreset_from_scoring(res, n, k, method, alpha, k_draw, t0)

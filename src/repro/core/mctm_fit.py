@@ -97,7 +97,10 @@ from repro.core import mctm as M
 from repro.core.distributed_coreset import _axis_tuple, host_gather, shard_layout
 from repro.core.scoring import DEFAULT_CHUNK, _mctm_featurize
 from repro.distributed.sharding import batch_specs, default_rules, replicated
-from repro.optim import Optimizer, adamw
+from repro.ft import RunSupervisor
+from repro.ft.config import get_ft_config
+from repro.ft.failure import NonFiniteError
+from repro.optim import Optimizer, adamw, scale_updates
 from repro.train import (
     init_train_state,
     make_train_step,
@@ -389,49 +392,70 @@ def _train_state_loop(
     the two first-order modes cannot drift. ``batch_template`` fixes the
     per-step batch shapes/dtypes; ``make_batch_fn(put)`` receives the
     device-placement function for those shapes and returns ``batch_fn(i)``.
+
+    Supervised (``ft.RunSupervisor``): retryable failures — injected faults,
+    non-finite losses/grads (``NonFiniteError`` → LR backoff via
+    ``scale_updates``, which keeps the optimizer-state structure so earlier
+    checkpoints still restore), runtime errors — roll back to the latest
+    atomic checkpoint and re-run; the retry budget and backoffs come from
+    ``ft_config``. Returned losses cover the final (successful) attempt only.
     """
-    step_pure = make_train_step(model, optimizer, microbatches=microbatches)
-    state = init_train_state(params0, optimizer)
-    state_sh = None
-    if mesh is not None:
-        batch_shapes = {
-            k: jax.ShapeDtypeStruct(np.shape(v), np.asarray(v).dtype)
-            for k, v in batch_template.items()
-        }
-        step_fn, state_sh, batch_sh = shard_train_step(
-            step_pure,
-            model,
-            optimizer,
-            mesh,
-            params_shapes=params0,
-            specs=_replicated_specs(params0),
-            batch_shapes=batch_shapes,
+
+    def attempt(ctx):
+        opt = scale_updates(optimizer, ctx.lr_scale)
+        step_pure = make_train_step(model, opt, microbatches=microbatches)
+        # fresh param buffers per attempt: the jitted step donates the state,
+        # so attempt 0's first step would otherwise delete params0's buffers
+        # out from under any retry (and from under the caller)
+        state = init_train_state(
+            jax.tree.map(lambda x: jnp.array(x, copy=True), params0), opt
+        )
+        state_sh = None
+        if mesh is not None:
+            batch_shapes = {
+                k: jax.ShapeDtypeStruct(np.shape(v), np.asarray(v).dtype)
+                for k, v in batch_template.items()
+            }
+            step_fn, state_sh, batch_sh = shard_train_step(
+                step_pure,
+                model,
+                opt,
+                mesh,
+                params_shapes=params0,
+                specs=_replicated_specs(params0),
+                batch_shapes=batch_shapes,
+            )
+
+            def put(b):
+                return {
+                    k: jax.device_put(jnp.asarray(v), batch_sh[k])
+                    for k, v in b.items()
+                }
+
+            state = jax.device_put(state, state_sh)
+        else:
+            step_fn = jax.jit(step_pure, donate_argnums=(0,))
+
+            def put(b):
+                return {k: jnp.asarray(v) for k, v in b.items()}
+
+        start = 0
+        if resume or ctx.resume:
+            state, start = restore_train_state(checkpoint, state, shardings=state_sh)
+        return train_loop(
+            step_fn,
+            state,
+            make_batch_fn(put),
+            steps,
+            start=start,
+            mgr=checkpoint,
+            ckpt_every=ckpt_every,
+            log_every=log_every,
+            label=label,
         )
 
-        def put(b):
-            return {k: jax.device_put(jnp.asarray(v), batch_sh[k]) for k, v in b.items()}
-
-        state = jax.device_put(state, state_sh)
-    else:
-        step_fn = jax.jit(step_pure, donate_argnums=(0,))
-
-        def put(b):
-            return {k: jnp.asarray(v) for k, v in b.items()}
-
-    start = 0
-    if resume:
-        state, start = restore_train_state(checkpoint, state, shardings=state_sh)
-    state, losses = train_loop(
-        step_fn,
-        state,
-        make_batch_fn(put),
-        steps,
-        start=start,
-        mgr=checkpoint,
-        ckpt_every=ckpt_every,
-        log_every=log_every,
-        label=label,
-    )
+    sup = RunSupervisor(label=label, mesh=mesh)
+    state, losses = sup.run(attempt)
     params = jax.tree.map(lambda x: jnp.asarray(host_gather(x)), state.params)
     return params, np.asarray([float(x) for x in losses], np.float64), state
 
@@ -586,16 +610,6 @@ def _fit_lbfgs(
     flat0, unravel = ravel_pytree(params0)
     P = int(flat0.shape[0])
     m = max(1, int(history))
-    state = LBFGSState(
-        step=jnp.zeros((), jnp.int32),
-        flat=jnp.asarray(flat0, jnp.float32),
-        loss=jnp.asarray(np.inf, jnp.float32),
-        mem_s=jnp.zeros((m, P), jnp.float32),
-        mem_y=jnp.zeros((m, P), jnp.float32),
-        mem_rho=jnp.zeros((m,), jnp.float32),
-        count=jnp.zeros((), jnp.int32),
-        converged=jnp.zeros((), jnp.bool_),
-    )
 
     def step_fn(state: LBFGSState, batch):
         metrics = {"loss": state.loss, "grad_norm": np.float32(0.0),
@@ -609,7 +623,18 @@ def _fit_lbfgs(
         gnorm = float(np.linalg.norm(g))
         metrics = {"loss": np.float32(f0), "grad_norm": np.float32(gnorm),
                    "step": state.step}
-        if not np.isfinite(f0) or gnorm <= gtol:
+        if not np.isfinite(f0):
+            if get_ft_config().nonfinite_rollback:
+                # deterministic objective — a non-finite loss here would
+                # repeat every retry, exhaust the budget, and abort cleanly
+                # with the supervisor's diagnostic (the intended crash-loop
+                # semantics); disable nonfinite_rollback to latch instead
+                raise NonFiniteError(int(state.step), loss=f0, grad_norm=gnorm)
+            return state._replace(
+                step=state.step + 1, loss=jnp.asarray(f0, jnp.float32),
+                converged=jnp.asarray(True),
+            ), metrics
+        if gnorm <= gtol:
             return state._replace(
                 step=state.step + 1, loss=jnp.asarray(f0, jnp.float32),
                 converged=jnp.asarray(True),
@@ -665,13 +690,28 @@ def _fit_lbfgs(
             count=jnp.asarray(count, jnp.int32),
         ), metrics
 
-    start = 0
-    if resume:
-        state, start = restore_train_state(checkpoint, state)
-    state, losses = train_loop(
-        step_fn, state, lambda i: batch, steps, start=start, mgr=checkpoint,
-        ckpt_every=ckpt_every, log_every=log_every, label=label,
-    )
+    def attempt(ctx):
+        # fresh iterate per attempt; resume pulls the latest good checkpoint
+        state = LBFGSState(
+            step=jnp.zeros((), jnp.int32),
+            flat=jnp.asarray(flat0, jnp.float32),
+            loss=jnp.asarray(np.inf, jnp.float32),
+            mem_s=jnp.zeros((m, P), jnp.float32),
+            mem_y=jnp.zeros((m, P), jnp.float32),
+            mem_rho=jnp.zeros((m,), jnp.float32),
+            count=jnp.zeros((), jnp.int32),
+            converged=jnp.zeros((), jnp.bool_),
+        )
+        start = 0
+        if resume or ctx.resume:
+            state, start = restore_train_state(checkpoint, state)
+        return train_loop(
+            step_fn, state, lambda i: batch, steps, start=start, mgr=checkpoint,
+            ckpt_every=ckpt_every, log_every=log_every, label=label,
+        )
+
+    sup = RunSupervisor(label=label, mesh=mesh)
+    state, losses = sup.run(attempt)
     params = unravel(jnp.asarray(state.flat))
     return params, np.asarray([float(x) for x in losses], np.float64), state
 
@@ -705,14 +745,37 @@ def _fit_minibatch(
     ``make_train_step`` step, sharded exactly like the full-batch path.
     Batches are a pure function of (sample_seed, step), so checkpoint resume
     replays the straight run's sample sequence.
+
+    With ``ft_config.straggler_deadline_ms > 0`` each primary draw is
+    deadlined (``data.pipeline.with_backup_draws``): a draw slower than the
+    deadline is replaced by the deterministic backup draw of the same step —
+    also pure in ``step``, so resume stays replayable.
     """
-    from repro.data.pipeline import full_data_loader
+    from repro.data.pipeline import (
+        BACKUP_SEED_OFFSET,
+        full_data_loader,
+        with_backup_draws,
+    )
+    from repro.ft.failure import StragglerPolicy
 
     microbatches = max(1, microbatches)
     w = np.asarray(batch["weights"], np.float32)
     b = resolve_batch_size(batch_size, microbatches, mesh)
     data = {k: np.asarray(v) for k, v in batch.items() if k != "weights"}
     sample_fn = full_data_loader(data, w, b, seed=sample_seed)
+    ft = get_ft_config()
+    if ft.straggler_deadline_ms > 0:
+        backup_fn = full_data_loader(
+            data, w, b, seed=sample_seed + BACKUP_SEED_OFFSET
+        )
+        sample_fn = with_backup_draws(
+            sample_fn,
+            backup_fn,
+            StragglerPolicy(
+                deadline_ms=ft.straggler_deadline_ms,
+                backup_factor=ft.straggler_backup_factor,
+            ),
+        )
     return _train_state_loop(
         model, params0, sample_fn(0),
         lambda put: (lambda i: put(sample_fn(i))),

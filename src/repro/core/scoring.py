@@ -75,6 +75,7 @@ hull operates on the raw derivative rows, matching the batch construction.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable
 
 import jax
@@ -82,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hull import hull_directions, stable_first_unique
+from repro.ft.config import get_ft_config, maybe_inject
 from repro.kernels.extremes.ops import directional_extremes
 from repro.kernels.gram.ops import gram_matrix
 
@@ -368,6 +370,21 @@ class RunningExtremes:
         cand = np.concatenate([self.best_imax, self.best_imin])
         return stable_first_unique(cand)
 
+    def state(self) -> dict[str, np.ndarray]:
+        """Checkpointable snapshot (f32/int64 arrays — exact roundtrip)."""
+        return {
+            "max": self.best_max.copy(),
+            "imax": self.best_imax.copy(),
+            "min": self.best_min.copy(),
+            "imin": self.best_imin.copy(),
+        }
+
+    def load(self, s) -> None:
+        self.best_max = np.asarray(s["max"], np.float32).copy()
+        self.best_imax = np.asarray(s["imax"], np.int64).copy()
+        self.best_min = np.asarray(s["min"], np.float32).copy()
+        self.best_imin = np.asarray(s["imin"], np.int64).copy()
+
 
 def finalize_scoring(
     n: int, n_chunks: int, method: str, G, u, hull_rows, rows_per_point: int
@@ -598,6 +615,34 @@ def resolve_strategy(
 # --------------------------------------------------------------------------
 
 
+class _SweepCheckpoints:
+    """Per-sweep ``CheckpointManager`` pair for resumable chunk scans.
+
+    ``root`` is a directory (or anything with a ``directory`` attribute);
+    sweep 1 and sweep 2 get separate subdirectories so their cursors cannot
+    shadow each other. Cadence comes from the ``ft`` config.
+    """
+
+    def __init__(self, root):
+        from repro.checkpoint import CheckpointManager
+
+        if not isinstance(root, (str, os.PathLike)):
+            root = getattr(root, "directory")
+        self.every = max(int(get_ft_config().sweep_ckpt_every_chunks), 1)
+        self.mgr1 = CheckpointManager(os.path.join(str(root), "sweep1"), keep=2)
+        self.mgr2 = CheckpointManager(os.path.join(str(root), "sweep2"), keep=2)
+
+
+def _restore_like(template, restored):
+    """Rehydrate a restored host pytree to its template's array flavors
+    (np leaves stay np — the f64 host Gram — jax leaves go back on device)."""
+    return jax.tree.map(
+        lambda t, v: np.asarray(v) if isinstance(t, np.ndarray) else jnp.asarray(v),
+        template,
+        restored,
+    )
+
+
 class ScoringEngine:
     """Drives the pre-sampling phase of Algorithm 1 with O(chunk) memory
     (two-pass strategies; the one-pass strategy additionally retains the
@@ -661,6 +706,8 @@ class ScoringEngine:
         hull_key: jax.Array | None = None,
         strategy=None,
         gram_dtype: str | None = None,
+        sweep_ckpt=None,
+        resume: bool = False,
     ) -> ScoringResult:
         """Score all n points (and optionally select hull candidates).
 
@@ -672,6 +719,15 @@ class ScoringEngine:
         points happens at coreset assembly (``coreset.exact_hull_points``).
         ``strategy`` selects the pass strategy (name or instance — see
         ``resolve_strategy``); the default is decided by ``sketch_size``.
+
+        ``sweep_ckpt`` (a directory path) makes the chunk-scan state a
+        checkpointable pytree saved every ``ft`` config
+        ``sweep_ckpt_every_chunks`` chunks: strategy carry, running extremes,
+        retained z rows / emitted leverage, and the chunk cursor. With
+        ``resume=True`` a crashed sweep restarts from its cursor instead of
+        row 0, and the result is bit-identical to the uninterrupted sweep
+        (the carry is f32/f64/int64 arrays — exact save/restore roundtrip —
+        and chunk accumulation order is preserved).
         """
         if method not in SCORE_METHODS:
             raise ValueError(f"unknown scoring method: {method}")
@@ -693,7 +749,8 @@ class ScoringEngine:
         )
         chunk = self.chunk_size if self.chunk_size > 0 else n
         return self._drive(
-            strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key
+            strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key,
+            sweep_ckpt=sweep_ckpt, resume=resume,
         )
 
     # --------------------------------------------------------------- helpers
@@ -711,7 +768,8 @@ class ScoringEngine:
     # ---------------------------------------------------------------- driver
 
     def _drive(
-        self, strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key
+        self, strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key,
+        sweep_ckpt=None, resume=False,
     ) -> ScoringResult:
         """The shared chunk loop — ONE implementation for every strategy.
 
@@ -722,11 +780,22 @@ class ScoringEngine:
         derived net; one-pass strategies read leverage off the retained z
         blocks instead. Dense inputs (one chunk) featurize exactly once and
         share the block between sweeps.
+
+        ``sweep_ckpt`` turns each sweep's carry into a checkpointable pytree
+        (fixed-shape — restore validates shapes) saved every N chunks with a
+        chunk cursor; ``resume`` skips the chunks the cursor covers. The
+        between-sweep algebra (V, inv, direction net) is recomputed
+        deterministically from the restored carry, so a resumed run is
+        bit-identical to an uninterrupted one. Only this checkpointed path
+        pays an extra shape-discovery featurize of chunk 0; the plain path
+        is byte-for-byte the pre-existing loop (featurize call counts
+        unchanged).
         """
         featurize = self.featurize
         r = self.rows_per_point
         want_hull = hull_k > 0
         n_chunks = -(-n // chunk)
+        ranges = [(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)]
 
         def _prep(lo, hi):
             Xc, Pc = featurize(Y[lo:hi])
@@ -743,19 +812,64 @@ class ScoringEngine:
 
         if n_chunks == 1:
             # dense fast path: featurize once, share the block between sweeps
-            cached = [_prep(0, n)]
-            chunks = lambda: iter(cached)  # noqa: E731
+            cached: list = []
+
+            def get_chunk(lo, hi):
+                if not cached:
+                    cached.append(_prep(lo, hi))
+                return cached[0]
+
         else:
-            chunks = lambda: (  # noqa: E731
-                _prep(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)
-            )
+            get_chunk = _prep
 
         # ---- sweep 1: strategy accumulation (the only data sweep for
         # one-pass strategies), O((Jd)²)-ish carried state
         state = plan = None
         z_blocks: list = []
+        z_buf = None
         ext = dirs1 = None
-        for lo, hi, Xc, Pc, swc in chunks():
+        ck = _SweepCheckpoints(sweep_ckpt) if sweep_ckpt is not None else None
+        done1 = 0
+        if ck is not None:
+            # fixed-shape checkpoint payloads need (D, p) before the loop:
+            # probe-featurize chunk 0 for shapes (cached on the dense path)
+            _, _, Xc0, Pc0, _ = get_chunk(*ranges[0])
+            D = int(Xc0.shape[1])
+            p = int(Pc0.shape[1]) if Pc0 is not None else None
+            plan = strat.begin(n, D, key)
+            state = strat.init_state(D, p)
+            if strat.one_pass:
+                width = D
+                if plan is not None and plan[2] is not None:
+                    width = int(plan[2].shape[1])
+                z_buf = np.zeros((n, width), np.float32)
+                if want_hull:
+                    dirs1 = jnp.asarray(
+                        upfront_directions(hull_key, p, hull_k, self.hull_oversample)
+                    )
+                    ext = RunningExtremes(int(dirs1.shape[0]))
+
+            def payload1():
+                out = {"chunks": np.asarray(done1, np.int64), "state": state}
+                if z_buf is not None:
+                    out["z"] = z_buf
+                if ext is not None:
+                    out["ext"] = ext.state()
+                return out
+
+            if resume and ck.mgr1.latest_step() is not None:
+                got = ck.mgr1.restore(jax.tree.map(np.asarray, payload1()))
+                done1 = int(got["chunks"])
+                state = _restore_like(state, got["state"])
+                if z_buf is not None:
+                    z_buf = np.asarray(got["z"], np.float32)
+                if ext is not None:
+                    ext.load(got["ext"])
+
+        for ci, (lo, hi) in enumerate(ranges):
+            if ci < done1:
+                continue
+            lo, hi, Xc, Pc, swc = get_chunk(lo, hi)
             if state is None:
                 D = int(Xc.shape[1])
                 p = int(Pc.shape[1]) if Pc is not None else None
@@ -768,18 +882,32 @@ class ScoringEngine:
                     ext = RunningExtremes(int(dirs1.shape[0]))
             state, z = strat.update(state, Xc, Pc, swc, strat.slice_plan(plan, lo, hi))
             if z is not None:
-                z_blocks.append(z)
+                if z_buf is not None:
+                    z_buf[lo:hi] = np.asarray(z)
+                else:
+                    z_blocks.append(z)
             if ext is not None:
                 ext.update(*_hull_chunk(Pc, dirs1), offset=lo * r)
+            if ck is not None and ((ci + 1) % ck.every == 0 or ci + 1 == n_chunks):
+                done1 = ci + 1
+                ck.mgr1.save(ci + 1, payload1())
+            maybe_inject("scoring", ci + 1)
 
         # ---- between sweeps: (Jd)²-scale host algebra only
         V, inv = self._projection(strat.gram(state, plan), method, ridge_reg)
 
         hull_rows = None
         if strat.one_pass:
-            u = np.concatenate(
-                [np.asarray(_z_leverage_jit(z, V, inv)) for z in z_blocks]
-            )
+            if z_buf is not None:
+                u = np.empty(n, np.float32)
+                for lo, hi in ranges:  # chunk-sized device transfers
+                    u[lo:hi] = np.asarray(
+                        _z_leverage_jit(jnp.asarray(z_buf[lo:hi]), V, inv)
+                    )
+            else:
+                u = np.concatenate(
+                    [np.asarray(_z_leverage_jit(z, V, inv)) for z in z_blocks]
+                )
             if ext is not None:
                 hull_rows = ext.candidates()
         else:
@@ -790,11 +918,33 @@ class ScoringEngine:
                     self._directions(hull_key, s1, s2, n * r, hull_k)
                 )
                 ext = RunningExtremes(int(dirs.shape[0]))
-            u = np.empty(n, np.float32)
-            for lo, hi, Xc, Pc, swc in chunks():
+            u = np.zeros(n, np.float32)
+            done2 = 0
+            if ck is not None:
+
+                def payload2():
+                    out = {"chunks": np.asarray(done2, np.int64), "u": u}
+                    if ext is not None:
+                        out["ext"] = ext.state()
+                    return out
+
+                if resume and ck.mgr2.latest_step() is not None:
+                    got = ck.mgr2.restore(jax.tree.map(np.asarray, payload2()))
+                    done2 = int(got["chunks"])
+                    u = np.asarray(got["u"], np.float32)
+                    if ext is not None:
+                        ext.load(got["ext"])
+            for ci, (lo, hi) in enumerate(ranges):
+                if ci < done2:
+                    continue
+                lo, hi, Xc, Pc, swc = get_chunk(lo, hi)
                 u[lo:hi] = np.asarray(_leverage_chunk(Xc, swc, V, inv))
                 if ext is not None:
                     ext.update(*_hull_chunk(Pc, dirs), offset=lo * r)
+                if ck is not None and ((ci + 1) % ck.every == 0 or ci + 1 == n_chunks):
+                    done2 = ci + 1
+                    ck.mgr2.save(ci + 1, payload2())
+                maybe_inject("scoring", n_chunks + ci + 1)
             if ext is not None:
                 hull_rows = ext.candidates()
 

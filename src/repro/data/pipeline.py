@@ -33,7 +33,13 @@ __all__ = [
     "WeightedSubset",
     "subset_loader",
     "full_data_loader",
+    "with_backup_draws",
+    "BACKUP_SEED_OFFSET",
 ]
+
+# seed offset for the deterministic backup draw of the same step (straggler
+# mitigation): far from any user seed, stable across sessions
+BACKUP_SEED_OFFSET = 0x5EED
 
 
 @dataclasses.dataclass
@@ -250,3 +256,28 @@ def full_data_loader(
         np.arange(n, dtype=np.int64), np.asarray(weights, np.float32)
     )
     return subset_loader(data, subset, batch, seed)
+
+
+def with_backup_draws(
+    primary_fn: Callable[[int], dict],
+    backup_fn: Callable[[int], dict],
+    policy,
+    clock: Callable[[], float] | None = None,
+) -> Callable[[int], dict]:
+    """Deadline the primary draw per ``StragglerPolicy``; on a miss, take the
+    deterministic backup draw of the SAME step (pure in ``step``, so a
+    resumed run replays the identical primary/backup decision inputs).
+    ``clock`` is injectable for tests (defaults to ``time.monotonic``)."""
+    import time as _time
+
+    tick = clock if clock is not None else _time.monotonic
+
+    def sample_fn(step: int) -> dict:
+        t0 = tick()
+        batch = primary_fn(step)
+        elapsed_ms = (tick() - t0) * 1e3
+        if bool(np.any(policy.decide(np.asarray([elapsed_ms], np.float64)))):
+            return backup_fn(step)
+        return batch
+
+    return sample_fn

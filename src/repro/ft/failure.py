@@ -11,7 +11,18 @@ tests:
     degree is dictated by memory), (b) shrinking data/pod axes first, and
     (c) rescaling batch/LR consistently.
   * ``FailureSimulator`` — drives a train loop, injecting failures at chosen
-    steps and verifying checkpoint-restore equivalence.
+    (phase, step) points. Every firing is appended to a persistent ``log``
+    so a post-mortem (or the retry-budget-exhausted diagnostic) can show the
+    full injection history; ``mode="every"`` rules re-fire on each retry,
+    which is how crash-loop → clean-abort scenarios are tested.
+  * ``StragglerPolicy`` — deadline-based backup-draw decision for the
+    minibatch loading path.
+
+The errors raised by the pipeline's failure paths also live here (so that
+``train/loop.py`` and ``core/*`` can import them without cycles):
+``InjectedFailure`` for simulated faults and ``NonFiniteError`` for a
+detected non-finite loss/gradient. Both subclass ``RuntimeError``, the
+retryable family that ``ft.supervisor.RunSupervisor`` catches.
 """
 from __future__ import annotations
 
@@ -19,7 +30,36 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["MeshPlan", "ElasticPlanner", "FailureSimulator", "StragglerPolicy"]
+__all__ = [
+    "MeshPlan",
+    "ElasticPlanner",
+    "FailureSimulator",
+    "StragglerPolicy",
+    "InjectedFailure",
+    "NonFiniteError",
+]
+
+
+class InjectedFailure(RuntimeError):
+    """A simulated node/step failure raised by ``FailureSimulator``."""
+
+
+class NonFiniteError(RuntimeError):
+    """Non-finite loss or gradient detected during a fit step.
+
+    Carries enough context (``step``, ``loss``, ``grad_norm``) for the
+    supervisor to log a useful diagnostic and apply LR backoff before
+    resuming from the last checkpoint.
+    """
+
+    def __init__(self, step: int, loss=None, grad_norm=None):
+        super().__init__(
+            f"non-finite training signal at step {step}: "
+            f"loss={loss} grad_norm={grad_norm}"
+        )
+        self.step = int(step)
+        self.loss = loss
+        self.grad_norm = grad_norm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,14 +136,58 @@ class StragglerPolicy:
 
 
 class FailureSimulator:
-    """Drives step functions with injected failures; used by integration tests."""
+    """Drives step functions with injected failures; used by integration tests.
 
-    def __init__(self, fail_at_steps: set[int]):
-        self.fail_at = set(fail_at_steps)
+    Two entry styles:
+
+      * legacy: ``FailureSimulator({5})`` — fail once at step 5, any phase.
+      * rules:  ``FailureSimulator().inject("scoring", 2).inject("fit", 40,
+        mode="every")`` — phase-scoped rules; ``mode="once"`` fires a single
+        time across retries, ``mode="every"`` fires on every pass over the
+        step (a crash loop that must exhaust the retry budget).
+
+    ``failures`` keeps the legacy list of fired steps; ``log`` is the
+    persistent injection log (one dict per firing, never cleared) that the
+    supervisor embeds in its abort diagnostic.
+    """
+
+    def __init__(self, fail_at_steps=(), *, phase: str | None = None, mode: str = "once"):
+        self.fail_at = set(int(s) for s in fail_at_steps)
         self.failures: list[int] = []
+        self.log: list[dict] = []
+        self._rules: list[dict] = [
+            {"phase": phase, "step": s, "mode": mode, "fired": 0}
+            for s in sorted(self.fail_at)
+        ]
 
-    def maybe_fail(self, step: int):
-        if step in self.fail_at:
+    def inject(self, phase: str | None, step: int, mode: str = "once") -> "FailureSimulator":
+        """Add a rule: fail at ``step`` of ``phase`` (None = any phase)."""
+        if mode not in ("once", "every"):
+            raise ValueError(f"mode must be 'once' or 'every', got {mode!r}")
+        self._rules.append({"phase": phase, "step": int(step), "mode": mode, "fired": 0})
+        if phase is None:
+            self.fail_at.add(int(step))
+        return self
+
+    def maybe_fail(self, step: int, phase: str | None = None):
+        step = int(step)
+        for rule in self._rules:
+            if rule["step"] != step:
+                continue
+            if rule["phase"] is not None and rule["phase"] != phase:
+                continue
+            if rule["mode"] == "once" and rule["fired"]:
+                continue
+            rule["fired"] += 1
             self.failures.append(step)
-            self.fail_at.discard(step)
-            raise RuntimeError(f"injected node failure at step {step}")
+            if rule["mode"] == "once":
+                self.fail_at.discard(step)
+            entry = {
+                "phase": phase if phase is not None else rule["phase"],
+                "step": step,
+                "mode": rule["mode"],
+                "count": rule["fired"],
+            }
+            self.log.append(entry)
+            where = f" ({entry['phase']})" if entry["phase"] else ""
+            raise InjectedFailure(f"injected node failure at step {step}{where}")

@@ -82,6 +82,12 @@ def parse_args(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--inject-failures", nargs="?", const="scoring,fit,checkpoint",
+                    default=None, metavar="PHASES",
+                    help="failure-injected recovery drill: crash mid-scoring / "
+                    "mid-fit / mid-checkpoint (comma list of phases; bare flag "
+                    "= all three) and recover through the ft supervisor + "
+                    "resumable sweeps; results tagged _ft, never gated")
     args = ap.parse_args(argv)
     if args.reduced:
         args.steps = min(args.steps, 250)
@@ -115,10 +121,47 @@ def run(args) -> dict:
         streamed_nll,
     )
     from repro.data.dgp import generate
+    from repro.ft import ElasticPlanner, FailureSimulator, RunSupervisor
+    from repro.ft.config import get_ft_config
     from repro.launch.stages import data_mesh
 
     mesh = data_mesh()
     devices = int(np.prod(list(mesh.shape.values())))
+
+    ft_cfg = get_ft_config()
+    sim = None
+    sup = None
+    if args.inject_failures:
+        import tempfile
+
+        phases = [p.strip() for p in args.inject_failures.split(",") if p.strip()]
+        if not args.ckpt_dir:
+            args.ckpt_dir = tempfile.mkdtemp(prefix="ft_ckpt_")
+        if not args.ckpt_every:
+            args.ckpt_every = 20
+        # several chunks per shard so mid-scoring checkpoints exist to resume
+        args.chunk = min(args.chunk, 1024)
+        sim = FailureSimulator()
+        if "scoring" in phases:
+            sim.inject("scoring", 2)
+        if "fit" in phases:
+            sim.inject("fit", max(args.steps // 3, 1))
+        if "checkpoint" in phases:
+            sim.inject("checkpoint", 2 * args.ckpt_every)
+        ft_cfg.simulator = sim
+        ft_cfg.sweep_ckpt_every_chunks = 2
+        # the build has no internal supervisor — this outer one re-plans the
+        # mesh (identity here: all devices stay alive) and replays the sweep
+        # from its latest segment checkpoint via resume=ctx.resume
+        sup = RunSupervisor(
+            label="train_mctm",
+            planner=ElasticPlanner(
+                model_parallel=1,
+                base_data_parallel=devices,
+                base_global_batch=args.batch_size,
+            ),
+            remesh=lambda plan: mesh,
+        )
     ks = [int(k) for k in args.ks.split(",")]
     cfg = M.MCTMConfig(J=2, degree=args.degree)
     D = cfg.J * cfg.d
@@ -162,10 +205,19 @@ def run(args) -> dict:
     for k in ks:
         kb = jax.random.fold_in(k_build, k)
         t0 = time.perf_counter()
-        cs = distributed_build_coreset(
-            cfg, scaler, Y, k, "l2-hull", mesh=mesh, key=kb,
-            alpha=args.alpha, sketch_size=sketch, chunk_size=args.chunk,
-        )
+
+        def build(ctx=None):
+            return distributed_build_coreset(
+                cfg, scaler, Y, k, "l2-hull", mesh=mesh, key=kb,
+                alpha=args.alpha, sketch_size=sketch, chunk_size=args.chunk,
+                sweep_ckpt=(os.path.join(args.ckpt_dir, f"build_k{k}")
+                            if args.inject_failures else None),
+                resume=bool(ctx is not None and ctx.resume),
+            )
+
+        # under --inject-failures the sweep crash is retried here, resuming
+        # from the latest scoring-segment checkpoint on the re-planned mesh
+        cs = sup.run(build) if sup is not None else build()
         build_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         fit = fit_mctm_streaming(
@@ -236,19 +288,30 @@ def run(args) -> dict:
             r["total_s"] < full_fit_s for r in per_k
         ),
     }
+    if sim is not None:
+        rec["ft"] = {
+            "injected": list(sim.log),
+            "supervisor_events": list(sup.events),
+        }
+        print(f"[train_mctm] injected {len(sim.log)} failures "
+              f"({args.inject_failures}); all recovered", flush=True)
     out = args.out
     if out is None:
         if args.smoke:
             # smoke runs land in results/ so they don't churn the committed
             # full-scale artifact at the repo root (kernel_bench convention);
             # non-default fit methods get their own file so the CI matrix's
-            # per-method runs don't clobber the gated adam record
+            # per-method runs don't clobber the gated adam record, and
+            # failure-injected drills (timings include crash+replay) get _ft
             tag = "" if args.fit_method == "adam" else f"_{args.fit_method}"
+            if args.inject_failures:
+                tag += "_ft"
             out = os.path.join(
                 REPO_ROOT, "results", "bench", f"BENCH_mctm_fit_smoke{tag}.json"
             )
         else:
-            out = os.path.join(REPO_ROOT, "BENCH_mctm_fit.json")
+            tag = "_ft" if args.inject_failures else ""
+            out = os.path.join(REPO_ROOT, f"BENCH_mctm_fit{tag}.json")
     os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
     with open(out, "w") as f:
         json.dump(rec, f, indent=1)
@@ -275,8 +338,20 @@ def main(argv=None):
             os.execve(sys.executable,
                       [sys.executable, "-m", "repro.launch.train_mctm"]
                       + (argv if argv is not None else sys.argv[1:]), env)
-    rec = run(args)
+    try:
+        rec = run(args)
+    finally:
+        if args.inject_failures:
+            from repro.ft.config import FTConfig, get_ft_config
+
+            cfg = get_ft_config()
+            cfg.simulator = None
+            cfg.sweep_ckpt_every_chunks = FTConfig.sweep_ckpt_every_chunks
     if not rec["all_within_band"]:
+        sys.exit(1)
+    if args.inject_failures and not rec.get("ft", {}).get("injected"):
+        print("[train_mctm] --inject-failures requested but nothing fired",
+              flush=True)
         sys.exit(1)
 
 

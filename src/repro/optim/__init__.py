@@ -7,6 +7,7 @@ from repro.optim.optimizers import (
     chain,
     clip_by_global_norm,
     apply_updates,
+    scale_updates,
 )
 from repro.optim.schedules import constant, cosine_warmup, linear_warmup
 
@@ -19,6 +20,7 @@ __all__ = [
     "chain",
     "clip_by_global_norm",
     "apply_updates",
+    "scale_updates",
     "constant",
     "cosine_warmup",
     "linear_warmup",

@@ -219,6 +219,22 @@ def clip_by_global_norm(max_norm: float) -> Optimizer:
     return Optimizer(init, update)
 
 
+def scale_updates(optimizer: Optimizer, scale: float) -> Optimizer:
+    """Multiply emitted updates by ``scale`` — LR backoff that leaves the
+    optimizer state *structure* untouched, so checkpoints written before the
+    backoff still restore into the wrapped optimizer (the supervisor's
+    non-finite-rollback path depends on this)."""
+    if scale == 1.0:
+        return optimizer
+    s = float(scale)
+
+    def update(grads, state, params, step):
+        updates, new_state = optimizer.update(grads, state, params, step)
+        return jax.tree.map(lambda u: u * s, updates), new_state
+
+    return Optimizer(optimizer.init, update, optimizer.state_specs)
+
+
 def chain(*transforms: Optimizer) -> Optimizer:
     """Compose transformations; each consumes the previous one's updates as
     'gradients'. The last element should be the actual optimizer."""

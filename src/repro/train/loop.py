@@ -19,6 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.config import get_ft_config, maybe_inject
+from repro.ft.failure import NonFiniteError
+
 __all__ = ["restore_train_state", "train_loop"]
 
 
@@ -62,13 +65,27 @@ def train_loop(
     ``keep_losses=False`` retains only the latest loss (long production runs:
     one live device buffer instead of one per step). Checkpoints every
     ``ckpt_every`` steps plus a final save when ``mgr`` is given and any
-    step ran.
+    step ran (skipped when the last periodic save already covered ``steps``).
+
+    Graceful degradation: when ``ft`` config enables ``nonfinite_rollback``
+    (default), a non-finite loss or grad norm raises ``NonFiniteError``
+    *before* the poisoned state can be checkpointed — the supervisor catches
+    it, backs off the LR, and resumes from the last good checkpoint.
     """
+    ft = get_ft_config()
     losses = []
     t0 = time.time()
     metrics = None
+    last_saved = None
     for i in range(start, steps):
+        maybe_inject("fit", i)
         state, metrics = step_fn(state, batch_fn(i))
+        if ft.nonfinite_rollback and (i + 1) % max(ft.nonfinite_check_every, 1) == 0:
+            loss_v = float(metrics["loss"])
+            gn = metrics.get("grad_norm")
+            gn_v = float(gn) if gn is not None else 0.0
+            if not (np.isfinite(loss_v) and np.isfinite(gn_v)):
+                raise NonFiniteError(i, loss=loss_v, grad_norm=gn_v)
         if keep_losses:
             losses.append(metrics["loss"])
         else:
@@ -82,6 +99,7 @@ def train_loop(
             )
         if mgr is not None and ckpt_every and (i + 1) % ckpt_every == 0:
             mgr.save(i + 1, state)
-    if mgr is not None and steps > start:
+            last_saved = i + 1
+    if mgr is not None and steps > start and last_saved != steps:
         mgr.save(steps, state)
     return state, losses

@@ -1,0 +1,176 @@
+"""Resumable scoring sweeps: a sweep interrupted mid-scan and resumed from
+its chunk-cursor checkpoint must be **bit-identical** to the uninterrupted
+sweep — single-host for every pass strategy, and the segmented distributed
+engine (which additionally must agree with its classic psum'd path)."""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.scoring import ScoringEngine
+from repro.ft.config import ft_overrides, get_ft_config
+from repro.ft.failure import FailureSimulator, InjectedFailure
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_in_subprocess(code: str):
+    """Fresh interpreter with 8 fake CPU devices (see test_distributed.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _setup(n=503, seed=0):
+    rng = np.random.default_rng(seed)
+    Y = rng.random((n, 2)).astype(np.float32)
+    cfg = M.MCTMConfig(J=2, degree=5)
+    return cfg, DataScaler.fit(Y), Y
+
+
+# per-method score kwargs covering all four pass strategies (l2-hull adds the
+# fused extremes scan; the sketched pair runs the one-pass CountSketch path)
+METHOD_KWARGS = {
+    "l2-only": {},
+    "l2-hull": dict(hull_k=8, hull_key=jax.random.PRNGKey(7)),
+    "ridge-lss": dict(sketch_size=128, key=jax.random.PRNGKey(3), ridge_reg=0.5),
+    "root-l2": dict(sketch_size=128, key=jax.random.PRNGKey(3)),
+}
+
+
+def _interrupt_until_done(engine, Y, d, kwargs):
+    """Drive the sweep to completion across injected mid-scan crashes."""
+    ft = get_ft_config()
+    ft.simulator = FailureSimulator().inject("scoring", 2).inject("scoring", 5)
+    try:
+        interrupts = 0
+        while True:
+            try:
+                return engine.score(Y, sweep_ckpt=d, resume=True, **kwargs), interrupts
+            except InjectedFailure:
+                interrupts += 1
+    finally:
+        ft.simulator = None
+
+
+@pytest.mark.parametrize("method", sorted(METHOD_KWARGS))
+def test_single_host_resume_bit_identical(method):
+    cfg, scaler, Y = _setup()
+    engine = ScoringEngine(cfg, scaler, chunk_size=64)
+    kwargs = dict(METHOD_KWARGS[method], method=method,
+                  weights=jnp.asarray(np.linspace(0.5, 1.5, len(Y)), jnp.float32))
+    ref = engine.score(jnp.asarray(Y), **kwargs)
+    with tempfile.TemporaryDirectory() as d:
+        with ft_overrides(sweep_ckpt_every_chunks=2):
+            got, interrupts = _interrupt_until_done(engine, jnp.asarray(Y), d, kwargs)
+    assert interrupts >= 1  # the injections actually cut the sweep
+    np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(got.scores))
+    np.testing.assert_array_equal(np.asarray(ref.leverage), np.asarray(got.leverage))
+    np.testing.assert_array_equal(np.asarray(ref.gram), np.asarray(got.gram))
+    if ref.hull_rows is not None:
+        np.testing.assert_array_equal(ref.hull_rows, got.hull_rows)
+
+
+def test_sweep_checkpoint_unreadable_without_resume_flag():
+    """A populated sweep_ckpt dir is only consulted when resume=True —
+    otherwise the sweep restarts from chunk 0 (and still matches)."""
+    cfg, scaler, Y = _setup(n=257)
+    engine = ScoringEngine(cfg, scaler, chunk_size=64)
+    ref = engine.score(jnp.asarray(Y), method="l2-only")
+    with tempfile.TemporaryDirectory() as d:
+        with ft_overrides(sweep_ckpt_every_chunks=1):
+            ft = get_ft_config()
+            ft.simulator = FailureSimulator().inject("scoring", 2)
+            try:
+                with pytest.raises(InjectedFailure):
+                    engine.score(jnp.asarray(Y), method="l2-only", sweep_ckpt=d)
+            finally:
+                ft.simulator = None
+            # fresh pass over the same dir, no resume: full re-scan
+            got = engine.score(jnp.asarray(Y), method="l2-only", sweep_ckpt=d)
+    np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(got.scores))
+
+
+def test_distributed_segmented_resume_bit_identical():
+    """Segmented sharded sweeps on a (4, 2) fake-device mesh: classic ≈
+    segmented (host-side cross-shard reduction) and interrupted + resumed ==
+    uninterrupted segmented, bit for bit — two-pass, hull, and one-pass."""
+    run_in_subprocess(
+        """
+        import tempfile
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+
+        from repro.core import mctm as M
+        from repro.core.bernstein import DataScaler
+        from repro.core.distributed_coreset import DistributedScoringEngine
+        from repro.ft.config import get_ft_config, ft_overrides
+        from repro.ft.failure import FailureSimulator, InjectedFailure
+
+        rng = np.random.default_rng(0)
+        n = 3001
+        Y = rng.random((n, 2)).astype(np.float32)
+        cfg = M.MCTMConfig(J=2, degree=5)
+        scaler = DataScaler.fit(Y)
+        hk, sk = jax.random.PRNGKey(7), jax.random.PRNGKey(3)
+        w = (rng.random(n) + 0.5).astype(np.float32)
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+        dist = DistributedScoringEngine(cfg, scaler, mesh=mesh, axis="data",
+                                        chunk_size=128)
+
+        for name, kwargs in [
+            ("two-pass-hull", dict(method="l2-hull", hull_k=6, hull_key=hk, weights=w)),
+            ("two-pass-plain", dict(method="l2-only", weights=w)),
+            ("one-pass", dict(method="l2-hull", hull_k=6, hull_key=hk,
+                              sketch_size=256, key=sk, weights=w)),
+        ]:
+            r_classic = dist.score(jnp.asarray(Y), **kwargs)
+            with tempfile.TemporaryDirectory() as d:
+                with ft_overrides(sweep_ckpt_every_chunks=2):
+                    r_seg = dist.score(Y, sweep_ckpt=d, **kwargs)
+            assert np.allclose(r_classic.scores, r_seg.scores, rtol=2e-4, atol=2e-6), name
+            if r_classic.hull_rows is not None:
+                assert np.array_equal(np.sort(r_classic.hull_rows),
+                                      np.sort(r_seg.hull_rows)), name
+
+            with tempfile.TemporaryDirectory() as d:
+                with ft_overrides(sweep_ckpt_every_chunks=2):
+                    ft = get_ft_config()
+                    ft.simulator = (FailureSimulator()
+                                    .inject("scoring", 2).inject("scoring", 8))
+                    try:
+                        interrupted = 0
+                        while True:
+                            try:
+                                r_res = dist.score(Y, sweep_ckpt=d, resume=True, **kwargs)
+                                break
+                            except InjectedFailure:
+                                interrupted += 1
+                    finally:
+                        ft.simulator = None
+            assert interrupted >= 1, (name, interrupted)
+            assert np.array_equal(np.asarray(r_seg.scores), np.asarray(r_res.scores)), name
+            assert np.array_equal(np.asarray(r_seg.leverage), np.asarray(r_res.leverage)), name
+            assert np.array_equal(np.asarray(r_seg.gram), np.asarray(r_res.gram)), name
+            if r_seg.hull_rows is not None:
+                assert np.array_equal(r_seg.hull_rows, r_res.hull_rows), name
+            print(name, "OK", flush=True)
+        print("SEGMENTED OK")
+        """
+    )
