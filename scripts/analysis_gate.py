@@ -1,0 +1,191 @@
+"""Compile-time invariant gate: audit every registered jitted hot path and
+FAIL (exit 1) on invariant violations, AST-lint findings, or metric drift
+against the committed baseline.
+
+What runs (all static — lower/compile on CPU, never execute):
+
+* ``repro.analysis`` audits every registered program (collective census,
+  materialization bound, dtype promotion, buffer donation, host callbacks)
+  — see ``docs/INVARIANTS.md`` for the invariant catalogue.
+* ``repro.analysis.ast_lints`` lints ``src/repro`` for PRNG key reuse,
+  ``np.`` math on traced values, and mutable default arguments.
+* The measured per-program metrics are written to
+  ``results/analysis/ANALYSIS_report.json`` and diffed EXACTLY against the
+  committed baseline ``benchmarks/baselines/ANALYSIS_budgets.json``
+  (bench_gate-style). Any drift — even a "harmless" new collective or a new
+  weak-type constant — fails until the baseline is regenerated.
+
+Convention (recorded in ROADMAP.md and benchmarks/baselines/README.md): a PR
+that intentionally changes a lowering regenerates the baseline IN THE SAME
+PR with ``--write-baseline`` and the diff gets reviewed like any other code.
+
+Usage::
+
+    python scripts/analysis_gate.py                      # full gate
+    python scripts/analysis_gate.py --programs streamed_nll_sharded
+    python scripts/analysis_gate.py --write-baseline     # refresh baseline
+    python scripts/analysis_gate.py --seed-violation extra_psum  # must exit 1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# The sharded programs need 8 fake devices; must be set before jax imports.
+_DEVICES = 8
+flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={_DEVICES}".strip()
+    )
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+BASELINE = os.path.join("benchmarks", "baselines", "ANALYSIS_budgets.json")
+REPORT_DIR = os.path.join("results", "analysis")
+LINT_ROOT = os.path.join("src", "repro")
+
+
+def run_audits(names: list[str] | None) -> list[dict]:
+    from repro.analysis import all_programs, audit_program, get_program
+
+    specs = [get_program(n) for n in names] if names else all_programs()
+    reports = []
+    for spec in specs:
+        print(f"auditing {spec.name} ...", flush=True)
+        reports.append(audit_program(spec))
+    return reports
+
+
+def diff_baseline(reports: list[dict], baseline_path: str) -> list[str]:
+    """Exact metric diff, bench_gate-style: any drift is a failure."""
+    if not os.path.exists(baseline_path):
+        return [
+            f"missing baseline {baseline_path} — run "
+            f"`python scripts/analysis_gate.py --write-baseline` and commit it"
+        ]
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    base_programs: dict = baseline.get("programs", {})
+    problems = []
+    seen = set()
+    for rep in reports:
+        name = rep["name"]
+        seen.add(name)
+        if name not in base_programs:
+            problems.append(
+                f"{name}: not in baseline — regenerate with --write-baseline"
+            )
+            continue
+        want = base_programs[name]
+        got = rep["metrics"]
+        keys = sorted(set(want) | set(got))
+        for k in keys:
+            if want.get(k) != got.get(k):
+                problems.append(
+                    f"{name}: metric {k} drifted: baseline {want.get(k)!r} "
+                    f"→ measured {got.get(k)!r}"
+                )
+    for name in sorted(set(base_programs) - seen):
+        problems.append(
+            f"{name}: in baseline but not audited — deleted program? "
+            f"regenerate with --write-baseline"
+        )
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--programs", default=None,
+                    help="comma-separated subset of program names "
+                         "(subset runs skip the baseline diff)")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--report-dir", default=REPORT_DIR)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the measured metrics as the new baseline")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint sweep")
+    ap.add_argument("--seed-violation", default=None,
+                    help="audit a deliberately broken program from "
+                         "repro.analysis.violations; the gate MUST exit 1")
+    args = ap.parse_args(argv)
+    os.chdir(REPO_ROOT)
+
+    if args.seed_violation is not None:
+        from repro.analysis import audit_program
+        from repro.analysis.violations import VIOLATIONS
+
+        if args.seed_violation not in VIOLATIONS:
+            print(f"unknown violation {args.seed_violation!r} "
+                  f"(known: {', '.join(sorted(VIOLATIONS))})")
+            return 2
+        rep = audit_program(VIOLATIONS[args.seed_violation])
+        for f in rep["failures"]:
+            print(f"  ! {rep['name']}: {f}")
+        if rep["ok"]:
+            print(f"VIOLATION MISSED: {args.seed_violation} audited clean — "
+                  f"the gate has lost its teeth")
+            return 0  # distinguishable from detection in tests: 0 == missed
+        print(f"violation {args.seed_violation!r} detected; failing as it should")
+        return 1
+
+    names = args.programs.split(",") if args.programs else None
+    reports = run_audits(names)
+
+    failures: list[str] = []
+    for rep in reports:
+        for f in rep["failures"]:
+            failures.append(f"{rep['name']}: {f}")
+
+    lint_findings = []
+    if not args.no_lint:
+        from repro.analysis.ast_lints import lint_paths
+
+        lint_findings = lint_paths(LINT_ROOT)
+        for f in lint_findings:
+            failures.append(f"lint: {f}")
+
+    import jax
+
+    report = {
+        "jax": jax.__version__,
+        "device_count": jax.device_count(),
+        "programs": {r["name"]: r["metrics"] for r in reports},
+        "failures": failures,
+        "lint_findings": [str(f) for f in lint_findings],
+    }
+    os.makedirs(args.report_dir, exist_ok=True)
+    report_path = os.path.join(args.report_dir, "ANALYSIS_report.json")
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {report_path} ({len(reports)} programs audited)")
+
+    if args.write_baseline:
+        if names is not None:
+            print("refusing to --write-baseline from a --programs subset")
+            return 2
+        with open(args.baseline, "w") as f:
+            json.dump({"programs": report["programs"]}, f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"wrote baseline {args.baseline}")
+
+    if names is None:
+        failures.extend(diff_baseline(reports, args.baseline))
+
+    if failures:
+        print(f"\nANALYSIS GATE: FAIL ({len(failures)} problem(s))")
+        for f in failures:
+            print(f"  ! {f}")
+        return 1
+    print(f"\nANALYSIS GATE: OK — {len(reports)} programs within budget, "
+          f"{0 if args.no_lint else len(lint_findings)} lint findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Compile-time invariant auditor: static analysis of every jitted hot path.
+
+The repo's performance claims rest on contracts the tests can only
+spot-check at runtime: exactly ONE fused psum in the sharded engines, ZERO
+collectives in the segmented resume sweeps, never materializing an
+(n, J, d) basis block, no silent f32→f64 promotion, donated train state
+actually aliased by the compiled executable, no host callbacks inside scan
+bodies. This package proves them *statically*, against the lowered
+programs themselves:
+
+* :mod:`repro.analysis.registry` — ``ProgramSpec``: one jitted hot path +
+  its declared budgets (collective census, materialization bound, donation,
+  dtype, callbacks).
+* :mod:`repro.analysis.programs` — the registered hot paths (fit steps,
+  streamed-NLL evaluators, sharded two-/one-pass scoring, segmented resume
+  sweeps, Pallas kernel wrappers) rebuilt on small symbolic shapes exactly
+  as their production call sites build them.
+* :mod:`repro.analysis.checks` — the checks over jaxpr / StableHLO /
+  compiled HLO. ``audit_program(spec)`` lowers on CPU (no TPU, no
+  execution) and returns ``{failures, metrics}``.
+* :mod:`repro.analysis.ast_lints` — Python-level hazards the jaxpr can't
+  see: PRNG key reuse after split/fold_in, ``np.`` math inside traced
+  functions, mutable default arguments.
+* :mod:`repro.analysis.violations` — deliberately broken programs that the
+  gate must fail on (used by ``--seed-violation`` and the tests).
+
+The CI entry point is ``scripts/analysis_gate.py``, which diffs the
+measured per-program metrics against the committed baseline in
+``benchmarks/baselines/ANALYSIS_budgets.json`` (bench_gate-style) and fails
+on drift. The invariant catalogue — which invariant binds which program,
+and which check enforces it — is ``docs/INVARIANTS.md``.
+"""
+from repro.analysis.checks import audit_program
+from repro.analysis.registry import (
+    CollectiveBudget,
+    MaterializationBudget,
+    ProgramSpec,
+    all_programs,
+    get_program,
+    register,
+)
+
+__all__ = [
+    "CollectiveBudget",
+    "MaterializationBudget",
+    "ProgramSpec",
+    "all_programs",
+    "audit_program",
+    "get_program",
+    "register",
+]

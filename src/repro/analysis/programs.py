@@ -1,0 +1,619 @@
+"""The registered jitted hot paths, on small symbolic audit shapes.
+
+Importing this module populates the registry (see
+:mod:`repro.analysis.registry`). Builders reconstruct each program exactly
+the way its production call site does — same maker functions, same
+jit/in_shardings wrapping — but on shapes small enough that tracing,
+lowering and compiling all run in seconds on CPU. The auditor never
+executes anything.
+
+Shape choices (why these numbers):
+
+* ``N=3072`` rows over ``SHARDS=8`` fake devices, ``CHUNK=32`` with
+  ``CPS=12`` chunks per shard — a per-shard stacked basis
+  (CPS·CHUNK·J·d = 3072 elems) overflows the 2048-elem chunk budget, so
+  stacking is *detectable* by the materialization bound, while the largest
+  legitimate fixed block (the hull score tile, m_dirs × chunk·J = 1536)
+  stays inside it.
+* ``J=2, DEGREE=3`` → d=4, basis width D=J·d=8: every basis block has
+  8 elements per row, strictly wider than every legitimate row-scaled array
+  (Y has J=2, the one-pass z keeps q=2 < D), which is what lets
+  ``row_elems=2`` separate "streams with n" from "materializes the basis".
+* Collective budgets are **exact** for shard_map programs (the collectives
+  are written by hand). Note XLA lowers ONE fused tuple psum call as one
+  all-reduce *per tuple element*, so the census pins the element count:
+  a new psum call site OR a new element in the fused carry both show up as
+  drift. GSPMD-partitioned jits use **ceilings** instead, since the
+  partitioner chooses reduction placement.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.registry import (
+    CollectiveBudget,
+    MaterializationBudget,
+    ProgramSpec,
+    register,
+)
+
+# ---------------------------------------------------------------------------
+# symbolic audit shapes
+# ---------------------------------------------------------------------------
+
+SHARDS = 8
+CHUNK = 32
+CPS = 12                     # chunks per shard
+N = SHARDS * CPS * CHUNK     # 3072 padded rows
+J = 2
+DEGREE = 3                   # d = DEGREE + 1 = 4, D = J*d = 8
+D_BASIS = J * (DEGREE + 1)
+HULL_K = 4                   # dirs: max(4*HULL_K, 8) + 2*d = 24
+SKETCH = 16
+PROJ_Q = 2                   # one-pass projection width; MUST stay < J*d
+MB = 4                       # train-step microbatches
+SEG_CHUNKS = 10              # per-segment chunks; 10·(chunk·J·d) > FIXED_SEGMENTED
+TOTAL_CHUNKS = 2 * SEG_CHUNKS
+
+# Chunk-bounded budget for the sharded scoring sweeps: must admit the hull
+# score tile (m_dirs · chunk·J = 24·64 = 1536 elems, the largest legitimate
+# fixed intermediate) while staying below a per-shard stacked basis
+# (CPS·chunk·J·d = 3072 elems) so stacking is detectable.
+FIXED_SHARDED = 2048
+# The train paths legitimately featurize one (N/MB, J·d) microbatch basis at
+# a time; a full-batch basis (N·J·d elems) must overflow.
+FIXED_TRAIN = 2 * (N // MB) * D_BASIS
+# Segmented sweeps carry per-shard-stacked state (shards, sketch, D) at the
+# top level and emit the same 1536-elem hull score tile; a segment-stacked
+# basis (SEG_CHUNKS·chunk·J·d = 2560 elems) must overflow.
+FIXED_SEGMENTED = 2 * SHARDS * SKETCH * D_BASIS
+
+
+def _data():
+    rng = np.random.default_rng(0)
+    Y = rng.normal(size=(N, J)).astype(np.float32)
+    w = np.ones(N, np.float32)
+    return Y, w
+
+
+def _cfg_scaler():
+    from repro.core.bernstein import DataScaler
+    from repro.core.mctm import MCTMConfig
+
+    Y, _ = _data()
+    cfg = MCTMConfig(J=J, degree=DEGREE)
+    return cfg, DataScaler.fit(Y)
+
+
+def _params(cfg):
+    import jax
+
+    from repro.core.mctm import init_params
+
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _mesh():
+    import jax
+
+    from repro.utils.compat import make_mesh
+
+    return make_mesh((jax.device_count(),), ("data",))
+
+
+def _dirs():
+    import jax
+
+    from repro.core.scoring import upfront_directions
+
+    return upfront_directions(jax.random.PRNGKey(1), DEGREE + 1, HULL_K)
+
+
+def _row_shardings(mesh):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return (
+        NamedSharding(mesh, P("data", None)),  # (n, J) rows
+        NamedSharding(mesh, P("data")),        # (n,) rows
+        NamedSharding(mesh, P()),              # replicated
+    )
+
+
+# ---------------------------------------------------------------------------
+# fit-layer programs
+# ---------------------------------------------------------------------------
+
+
+def _build_streamed_nll_chunk():
+    from repro.core.mctm_fit import _chunk_nll_fn, fit_featurize
+
+    cfg, scaler = _cfg_scaler()
+    feat = fit_featurize(cfg, scaler)
+    Y, w = _data()
+    return _chunk_nll_fn(feat, cfg), (_params(cfg), Y[:CHUNK], w[:CHUNK])
+
+
+register(ProgramSpec(
+    name="streamed_nll_chunk",
+    description="single-host streamed_nll body: featurize → nll_terms on one "
+                "(chunk, J) block (mctm_fit._chunk_nll_fn)",
+    build=_build_streamed_nll_chunk,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_streamed_nll_sharded():
+    from repro.core.mctm_fit import _make_sharded_nll_fn, fit_featurize
+
+    cfg, scaler = _cfg_scaler()
+    feat = fit_featurize(cfg, scaler)
+    mesh = _mesh()
+    fn = _make_sharded_nll_fn(feat, cfg, mesh, ("data",), CHUNK, CPS)
+    Y, w = _data()
+    return fn, (_params(cfg), Y, w)
+
+
+register(ProgramSpec(
+    name="streamed_nll_sharded",
+    description="ONE-psum sharded NLL sweep (mctm_fit._make_sharded_nll_fn): "
+                "the (1±ε) validation evaluator",
+    build=_build_streamed_nll_sharded,
+    collectives=CollectiveBudget(all_reduce=1),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-ONE-PSUM", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _model_opt():
+    from repro.core.mctm_fit import MCTMDensityModel, default_fit_optimizer
+
+    cfg, scaler = _cfg_scaler()
+    model = MCTMDensityModel(cfg, scaler, norm=float(N) / MB)
+    opt = default_fit_optimizer(1e-2, 10)
+    return cfg, model, opt
+
+
+def _build_adam_train_step():
+    import jax
+
+    from repro.train import init_train_state, make_train_step
+
+    cfg, model, opt = _model_opt()
+    step = jax.jit(make_train_step(model, opt, microbatches=MB),
+                   donate_argnums=(0,))
+    state = init_train_state(_params(cfg), opt)
+    Y, w = _data()
+    return step, (state, {"Y": Y, "weights": w})
+
+
+register(ProgramSpec(
+    name="adam_train_step",
+    description="single-host microbatched adam train step "
+                "(train.make_train_step, donate_argnums=(0,))",
+    build=_build_adam_train_step,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_TRAIN),
+    # TrainState has 8 leaves (step + (θ_raw, λ) + (count, μ×2, ν×2)), but the
+    # int32 step feeds BOTH the new state and the metrics output, so XLA can
+    # alias only 7 of them — one copy is structurally unavoidable
+    donated_outputs=7,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "DONATE-STATE", "HOST-FREE"),
+))
+
+
+def _build_adam_train_step_sharded():
+    import jax
+    import numpy as np
+
+    from repro.core.mctm_fit import _replicated_specs
+    from repro.train import init_train_state, make_train_step, shard_train_step
+
+    cfg, model, opt = _model_opt()
+    params0 = _params(cfg)
+    Y, w = _data()
+    batch = {"Y": Y, "weights": w}
+    step_fn, _, _ = shard_train_step(
+        make_train_step(model, opt, microbatches=MB),
+        model,
+        opt,
+        _mesh(),
+        params_shapes=params0,
+        specs=_replicated_specs(params0),
+        batch_shapes={
+            k: jax.ShapeDtypeStruct(np.shape(v), v.dtype) for k, v in batch.items()
+        },
+    )
+    return step_fn, (init_train_state(params0, opt), batch)
+
+
+register(ProgramSpec(
+    name="adam_train_step_sharded",
+    description="SPMD adam train step (train.shard_train_step: row-sharded "
+                "batch, replicated params, donated state); GSPMD places the "
+                "grad reduction, so the census is a ceiling",
+    build=_build_adam_train_step_sharded,
+    collectives=CollectiveBudget(all_reduce=4, all_gather=2, exact=False),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_TRAIN),
+    donated_outputs=7,  # step leaf feeds metrics too — see adam_train_step
+    needs_devices=SHARDS,
+    invariants=("COLL-CEILING", "MAT-CHUNK", "DTYPE-F32", "DONATE-STATE",
+                "HOST-FREE"),
+))
+
+
+def _lbfgs_jits():
+    import jax
+    import numpy as np
+
+    from repro.core.mctm_fit import make_streamed_oracles
+    from repro.distributed.sharding import batch_specs, default_rules, replicated
+
+    cfg, model, _ = _model_opt()
+    params0 = _params(cfg)
+    mesh = _mesh()
+    value_and_grad, value, hvp = make_streamed_oracles(model, MB)
+    Y, w = _data()
+    batch = {"Y": Y, "weights": w}
+    param_sh = jax.tree.map(lambda _: replicated(mesh), params0)
+    batch_shapes = {
+        k: jax.ShapeDtypeStruct(np.shape(v), v.dtype) for k, v in batch.items()
+    }
+    batch_sh = batch_specs(batch_shapes, mesh, default_rules(mesh))
+    vg_j = jax.jit(value_and_grad, in_shardings=(param_sh, batch_sh))
+    hvp_j = jax.jit(hvp, in_shardings=(param_sh, param_sh, batch_sh))
+    return params0, batch, vg_j, hvp_j
+
+
+def _build_lbfgs_value_and_grad_sharded():
+    params0, batch, vg_j, _ = _lbfgs_jits()
+    return vg_j, (params0, batch)
+
+
+register(ProgramSpec(
+    name="lbfgs_value_and_grad_sharded",
+    description="streaming L-BFGS value+grad oracle, GSPMD-sharded batch "
+                "(mctm_fit.make_streamed_oracles / _fit_lbfgs layout)",
+    build=_build_lbfgs_value_and_grad_sharded,
+    collectives=CollectiveBudget(all_reduce=4, all_gather=2, exact=False),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_TRAIN),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-CEILING", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_lbfgs_hvp_sharded():
+    import jax
+    import jax.numpy as jnp
+
+    params0, batch, _, hvp_j = _lbfgs_jits()
+    vec = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params0)
+    return hvp_j, (params0, vec, batch)
+
+
+register(ProgramSpec(
+    name="lbfgs_hvp_sharded",
+    description="streaming L-BFGS HVP oracle (jvp-of-grad inside the scan "
+                "body — the curvature pass stays chunk-streamed)",
+    build=_build_lbfgs_hvp_sharded,
+    collectives=CollectiveBudget(all_reduce=6, all_gather=2, exact=False),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_TRAIN),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-CEILING", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+# ---------------------------------------------------------------------------
+# scoring-engine programs (Algorithm 1, sharded)
+# ---------------------------------------------------------------------------
+
+
+def _scoring_featurize():
+    from repro.core.scoring import _mctm_featurize
+
+    cfg, scaler = _cfg_scaler()
+    return _mctm_featurize(cfg, scaler)
+
+
+def _two_pass_fns():
+    from repro.core.distributed_coreset import make_sharded_pass_fns
+
+    mesh = _mesh()
+    pass1, pass2 = make_sharded_pass_fns(
+        _scoring_featurize(),
+        mesh,
+        ("data",),
+        chunk=CHUNK,
+        chunks_per_shard=CPS,
+        rows_per_point=J,
+        hull=True,
+        D=D_BASIS,
+        p=DEGREE + 1,
+    )
+    return mesh, pass1, pass2
+
+
+def _build_two_pass_pass1_sharded():
+    import jax
+
+    mesh, pass1, _ = _two_pass_fns()
+    x_sh, r_sh, _ = _row_shardings(mesh)
+    Y, w = _data()
+    fn = jax.jit(pass1, in_shardings=(x_sh, r_sh, r_sh))
+    return fn, (Y, w, w)
+
+
+register(ProgramSpec(
+    name="two_pass_pass1_sharded",
+    description="sharded two-pass pass 1: per-shard chunk scan accumulating "
+                "(G, Σp, Σppᵀ), ONE fused tuple psum call site "
+                "(distributed_coreset.make_sharded_pass_fns)",
+    build=_build_two_pass_pass1_sharded,
+    # the single fused psum of the 3-element tuple (G, Σp, Σppᵀ) lowers as
+    # one all-reduce per element; pinning 3 catches both a new psum call
+    # site and a new element sneaking into the fused carry
+    collectives=CollectiveBudget(all_reduce=3),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-ONE-PSUM", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_two_pass_pass2_hull_sharded():
+    import jax
+    import numpy as np
+
+    mesh, _, pass2 = _two_pass_fns()
+    x_sh, r_sh, rep = _row_shardings(mesh)
+    Y, w = _data()
+    V = np.eye(D_BASIS, dtype=np.float32)
+    inv = np.ones(D_BASIS, np.float32)
+    fn = jax.jit(pass2, in_shardings=(x_sh, r_sh, r_sh, rep, rep, rep))
+    return fn, (Y, w, w, V, inv, _dirs())
+
+
+register(ProgramSpec(
+    name="two_pass_pass2_hull_sharded",
+    description="sharded two-pass pass 2 + hull: chunked leverage emission, "
+                "cross-shard extreme reduction = exactly one all_gather pair "
+                "(values + indices)",
+    build=_build_two_pass_pass2_hull_sharded,
+    collectives=CollectiveBudget(all_gather=2),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-HULL-GATHER", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_one_pass_sharded():
+    import jax
+    import numpy as np
+
+    from repro.core.distributed_coreset import make_sharded_onepass_fn
+
+    mesh = _mesh()
+    onepass = make_sharded_onepass_fn(
+        _scoring_featurize(),
+        mesh,
+        ("data",),
+        chunk=CHUNK,
+        chunks_per_shard=CPS,
+        rows_per_point=J,
+        hull=True,
+        D=D_BASIS,
+        q=PROJ_Q,
+        sketch_size=SKETCH,
+    )
+    x_sh, r_sh, rep = _row_shardings(mesh)
+    Y, w = _data()
+    rng = np.random.default_rng(2)
+    rows = rng.integers(0, SKETCH, size=N).astype(np.int32)
+    signs = np.where(rng.random(N) < 0.5, -1.0, 1.0).astype(np.float32)
+    omega = rng.normal(size=(D_BASIS, PROJ_Q)).astype(np.float32)
+    fn = jax.jit(
+        onepass, in_shardings=(x_sh, r_sh, r_sh, r_sh, r_sh, rep, rep)
+    )
+    return fn, (Y, w, w, rows, signs, omega, _dirs())
+
+
+register(ProgramSpec(
+    name="one_pass_sharded",
+    description="sharded ONE-pass sketched sweep: CountSketch + projected z "
+                "+ running hull extremes in a single scan; one psum + one "
+                "all_gather pair (distributed_coreset.make_sharded_onepass_fn)",
+    build=_build_one_pass_sharded,
+    collectives=CollectiveBudget(all_reduce=1, all_gather=2),
+    materialization=MaterializationBudget(row_elems=max(J, PROJ_Q),
+                                          fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-ONE-PSUM", "COLL-HULL-GATHER", "MAT-CHUNK", "DTYPE-F32",
+                "HOST-FREE"),
+))
+
+
+def _seg_rows():
+    return SHARDS * SEG_CHUNKS * CHUNK
+
+
+def _build_segmented_pass1_sharded():
+    import jax
+    import numpy as np
+
+    from repro.core.distributed_coreset import make_segmented_pass_fns
+
+    mesh = _mesh()
+    pass1, _ = make_segmented_pass_fns(
+        _scoring_featurize(),
+        mesh,
+        ("data",),
+        chunk=CHUNK,
+        seg_chunks=SEG_CHUNKS,
+        total_chunks=TOTAL_CHUNKS,
+        rows_per_point=J,
+        hull=True,
+        D=D_BASIS,
+        p=DEGREE + 1,
+    )
+    Y, w = _data()
+    rows = _seg_rows()
+    G = np.zeros((SHARDS, D_BASIS, D_BASIS), np.float32)
+    s1 = np.zeros((SHARDS, DEGREE + 1), np.float32)
+    s2 = np.zeros((SHARDS, DEGREE + 1, DEGREE + 1), np.float32)
+    return jax.jit(pass1), (Y[:rows], w[:rows], w[:rows], G, s1, s2)
+
+
+register(ProgramSpec(
+    name="segmented_pass1_sharded",
+    description="segmented (resumable) pass-1 sweep: per-shard partials carry "
+                "to the host checkpoint — ZERO collectives by contract, which "
+                "is what makes resume bit-identical "
+                "(distributed_coreset.make_segmented_pass_fns)",
+    build=_build_segmented_pass1_sharded,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SEGMENTED),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-SEG-NONE", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_segmented_onepass_sharded():
+    import jax
+    import numpy as np
+
+    from repro.core.distributed_coreset import make_segmented_onepass_fn
+
+    mesh = _mesh()
+    onepass = make_segmented_onepass_fn(
+        _scoring_featurize(),
+        mesh,
+        ("data",),
+        chunk=CHUNK,
+        seg_chunks=SEG_CHUNKS,
+        total_chunks=TOTAL_CHUNKS,
+        rows_per_point=J,
+        hull=True,
+        D=D_BASIS,
+        q=PROJ_Q,
+        sketch_size=SKETCH,
+    )
+    Y, w = _data()
+    rows_n = _seg_rows()
+    rng = np.random.default_rng(3)
+    rows = rng.integers(0, SKETCH, size=rows_n).astype(np.int32)
+    signs = np.where(rng.random(rows_n) < 0.5, -1.0, 1.0).astype(np.float32)
+    SX = np.zeros((SHARDS, SKETCH, D_BASIS), np.float32)
+    c0 = np.int32(0)
+    omega = rng.normal(size=(D_BASIS, PROJ_Q)).astype(np.float32)
+    m = _dirs().shape[0]
+    bmax = np.full((SHARDS, m), -np.inf, np.float32)
+    imax = np.zeros((SHARDS, m), np.int32)
+    bmin = np.full((SHARDS, m), np.inf, np.float32)
+    imin = np.zeros((SHARDS, m), np.int32)
+    return jax.jit(onepass), (
+        Y[:rows_n], w[:rows_n], w[:rows_n], rows, signs, SX, c0,
+        omega, bmax, imax, bmin, imin, _dirs(),
+    )
+
+
+register(ProgramSpec(
+    name="segmented_onepass_sharded",
+    description="segmented (resumable) one-pass sweep: per-shard CountSketch "
+                "+ extremes carried host-side, ZERO collectives "
+                "(distributed_coreset.make_segmented_onepass_fn)",
+    build=_build_segmented_onepass_sharded,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=max(J, PROJ_Q),
+                                          fixed_elems=FIXED_SEGMENTED),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-SEG-NONE", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+# ---------------------------------------------------------------------------
+# featurize + Pallas kernel wrappers (interpret mode: CPU-traceable)
+# ---------------------------------------------------------------------------
+
+
+def _build_bernstein_featurize():
+    Y, _ = _data()
+    return _scoring_featurize(), (Y[:CHUNK],)
+
+
+register(ProgramSpec(
+    name="bernstein_featurize",
+    description="fused Bernstein basis+derivative featurize for one chunk "
+                "(scoring._mctm_featurize — shared by scoring AND fit paths)",
+    build=_build_bernstein_featurize,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_gram_kernel_interpret():
+    import jax
+
+    from repro.kernels.gram.ops import gram_matrix
+
+    Y, _ = _data()
+    X = np.tile(Y[:CHUNK], (1, (DEGREE + 1))).astype(np.float32)  # (CHUNK, D)
+    fn = jax.jit(lambda x: gram_matrix(x, backend="pallas", interpret=True))
+    return fn, (X,)
+
+
+register(ProgramSpec(
+    name="gram_kernel_interpret",
+    description="Pallas gram kernel wrapper (interpret mode — the CPU-"
+                "traceable realization of the TPU kernel dispatch)",
+    build=_build_gram_kernel_interpret,
+    collectives=CollectiveBudget(),
+    # lane padding widens rows to 128 inside the kernel; budget is the
+    # padded block, not n-scaled
+    materialization=MaterializationBudget(row_elems=128,
+                                          fixed_elems=4 * CHUNK * 128),
+    donated_outputs=0,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_extremes_kernel_interpret():
+    import jax
+
+    from repro.kernels.extremes.ops import directional_extremes
+
+    rng = np.random.default_rng(4)
+    Pr = rng.normal(size=(CHUNK * J, DEGREE + 1)).astype(np.float32)
+    mask = np.ones(CHUNK * J, np.float32)
+    dirs = np.asarray(_dirs())  # host-side: direction sampling is not traceable
+    fn = jax.jit(
+        lambda P, m: directional_extremes(
+            P, dirs, m, backend="pallas", interpret=True
+        )
+    )
+    return fn, (Pr, mask)
+
+
+register(ProgramSpec(
+    name="extremes_kernel_interpret",
+    description="Pallas directional-extremes kernel wrapper (interpret mode)",
+    build=_build_extremes_kernel_interpret,
+    collectives=CollectiveBudget(),
+    # rows, dirs AND the (block, m_pad) score tile are all lane-padded to 128
+    materialization=MaterializationBudget(row_elems=2 * 128,
+                                          fixed_elems=4 * CHUNK * J * 128),
+    donated_outputs=0,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))

@@ -1,0 +1,121 @@
+"""Program registry for the compile-time invariant auditor.
+
+A :class:`ProgramSpec` names one jitted hot path, a zero-argument ``build``
+that reconstructs it on small symbolic shapes, and the declarative budgets
+the checks in :mod:`repro.analysis.checks` enforce over its lowered
+jaxpr/StableHLO/compiled-HLO. Registration is data, not behavior: the specs
+for the real repo programs live in :mod:`repro.analysis.programs`; the
+deliberately-broken ones used to prove the gate *can* fail live in
+:mod:`repro.analysis.violations`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """Expected collective-op census of the compiled per-device program.
+
+    ``exact=True`` programs (shard_map bodies, where every collective is
+    written by hand) must match the count per op exactly. ``exact=False``
+    programs (GSPMD-partitioned jits, where the compiler chooses the
+    reduction placement) gate on a ceiling instead: count per op must stay
+    ≤ the budget, so a refactor can only *remove* collectives silently,
+    never add them.
+    """
+
+    all_reduce: int = 0
+    all_gather: int = 0
+    reduce_scatter: int = 0
+    all_to_all: int = 0
+    collective_permute: int = 0
+    exact: bool = True
+
+    def as_dict(self) -> dict[str, int]:
+        return {
+            "all-reduce": self.all_reduce,
+            "all-gather": self.all_gather,
+            "reduce-scatter": self.reduce_scatter,
+            "all-to-all": self.all_to_all,
+            "collective-permute": self.collective_permute,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class MaterializationBudget:
+    """Static bound proving "never materialize an (n, J, d) basis".
+
+    Every eqn output aval in the jaxpr (recursively, through scan / pjit /
+    shard_map / while / cond sub-jaxprs) must be either
+
+    * **row-like** — ``size / max(shape) ≤ row_elems`` — at most
+      ``row_elems`` elements per leading entry, which admits the (n, J)
+      inputs, (n,) weights/scores and (n, q) projected-sketch outputs that
+      legitimately scale with n, but NOT a basis block, whose per-row width
+      is J·d (keep ``row_elems < J·d``); or
+    * **chunk-bounded** — total ``size ≤ fixed_elems``, sized to admit one
+      (chunk, J, d) block (and the fixed Gram/sketch/direction state) with
+      slack, but not a per-shard or global stacked basis.
+
+    The ratio form makes the check independent of shard count: inside a
+    shard_map body the avals are per-shard, and a per-shard materialized
+    basis has ratio J·d > row_elems and size cps·chunk·J·d > fixed_elems.
+    """
+
+    row_elems: int
+    fixed_elems: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """One registered jitted hot path + its declared invariants.
+
+    ``build()`` → ``(fn, args)`` where ``fn`` is jit-wrapped (or already a
+    jitted callable) and ``args`` are concrete arrays / ShapeDtypeStructs on
+    the small symbolic shapes. The auditor only traces/lowers/compiles —
+    it never executes, so builders are cheap and TPU-free.
+    """
+
+    name: str
+    description: str
+    build: Callable[[], tuple[Any, tuple]]
+    collectives: CollectiveBudget = CollectiveBudget()
+    materialization: MaterializationBudget | None = None
+    # expected number of aliased (donated) output buffers in the compiled
+    # executable; None skips the donation audit
+    donated_outputs: int | None = None
+    allow_f64: bool = False
+    allow_callbacks: bool = False
+    needs_devices: int = 1
+    # invariant ids from docs/INVARIANTS.md this program is bound by
+    invariants: tuple[str, ...] = ()
+
+
+_REGISTRY: dict[str, ProgramSpec] = {}
+
+
+def register(spec: ProgramSpec) -> ProgramSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"duplicate program spec {spec.name!r}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_loaded() -> None:
+    # registration-by-import; deferred so `import repro.analysis` stays light
+    from repro.analysis import programs  # noqa: F401
+
+
+def get_program(name: str) -> ProgramSpec:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"no program spec {name!r} (known: {known})")
+    return _REGISTRY[name]
+
+
+def all_programs() -> list[ProgramSpec]:
+    _ensure_loaded()
+    return list(_REGISTRY.values())

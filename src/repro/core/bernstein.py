@@ -51,11 +51,14 @@ def bernstein_design(t: jax.Array, degree: int) -> jax.Array:
     Returns:
       shape ``t.shape + (M+1,)``; rows sum to 1 (partition of unity).
     """
-    t = jnp.clip(t, 0.0, 1.0)[..., None]
+    # dtype-typed endpoint constants: python floats would lower as weak
+    # tensor<f64> scalars under JAX_ENABLE_X64 (flagged by the analysis gate)
+    zero, one = t.dtype.type(0), t.dtype.type(1)
+    t = jnp.clip(t, zero, one)[..., None]
     k = jnp.arange(degree + 1, dtype=t.dtype)
     coeff = jnp.asarray(binomial_coefficients(degree), dtype=t.dtype)
     # Direct powers are fine and exact-ish for the small degrees used by MCTMs.
-    return coeff * jnp.power(t, k) * jnp.power(1.0 - t, degree - k)
+    return coeff * jnp.power(t, k) * jnp.power(one - t, degree - k)
 
 
 @partial(jax.jit, static_argnames=("degree",))
@@ -110,14 +113,14 @@ def monotone_theta(theta_raw: jax.Array, min_slope: float = 1e-4) -> jax.Array:
     ⟨ϑ, a'(y)⟩ > 0 everywhere, i.e. a valid monotone transformation.
     """
     first = theta_raw[..., :1]
-    steps = jax.nn.softplus(theta_raw[..., 1:]) + min_slope
+    steps = jax.nn.softplus(theta_raw[..., 1:]) + theta_raw.dtype.type(min_slope)
     return jnp.concatenate([first, first + jnp.cumsum(steps, axis=-1)], axis=-1)
 
 
 def monotone_theta_inverse(theta: jax.Array, min_slope: float = 1e-4) -> jax.Array:
     """Inverse of ``monotone_theta`` (for warm-starting from valid ϑ)."""
-    diffs = jnp.diff(theta, axis=-1) - min_slope
-    diffs = jnp.clip(diffs, 1e-6, None)
+    diffs = jnp.diff(theta, axis=-1) - theta.dtype.type(min_slope)
+    diffs = jnp.clip(diffs, theta.dtype.type(1e-6), None)
     # softplus^{-1}(x) = log(expm1(x))
     raw_rest = jnp.log(jnp.expm1(diffs))
     return jnp.concatenate([theta[..., :1], raw_rest], axis=-1)

@@ -74,7 +74,9 @@ def lambda_matrix(cfg: MCTMConfig, lam_flat: jax.Array) -> jax.Array:
     eye = jnp.eye(J, dtype=lam_flat.dtype)
     if J == 1:
         return eye
-    rows, cols = jnp.tril_indices(J, k=-1)
+    # static indices: np, not jnp — jnp.tril_indices traces a tril(ones(J,J))
+    # mask at the default float dtype (f64 under JAX_ENABLE_X64)
+    rows, cols = np.tril_indices(J, k=-1)
     return eye.at[rows, cols].set(lam_flat)
 
 

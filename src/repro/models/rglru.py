@@ -41,7 +41,9 @@ def init_rglru_block(key, cfg: ModelConfig) -> tuple[Params, dict]:
         "wx": dense_init(ks[5], W, (W,)),
         "bx": jnp.zeros((W,)),
         "lam": lam,
-        "out_proj": dense_init(jax.random.fold_in(key, 7), W, (cfg.d_model,)),
+        # fold_in(key, 7) is a derivation disjoint from split(key, 6) above;
+        # switching to split(key, 7) would reseed every weight in the block
+        "out_proj": dense_init(jax.random.fold_in(key, 7), W, (cfg.d_model,)),  # noqa: AL001
     }
     s = {
         "gate_proj": ("embed", "lru"),

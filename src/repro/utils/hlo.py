@@ -7,6 +7,21 @@ collective-permute, including their async -start forms). Result-bytes is a
 consistent proxy for wire bytes per device (all-reduce rings move ~2× the
 buffer, all-gather exactly the result minus the local shard); we keep one
 convention across all measurements so §Perf deltas are meaningful.
+
+Conventions:
+
+* A collective is counted exactly once: at its plain form or its ``-start``
+  form. ``-done`` lines only close the async pair (tracked in
+  ``async_unmatched`` so a malformed module is visible, never double
+  counted).
+* A *plain* op with a tuple result (variadic all-reduce, all-to-all) sums
+  the tuple elements — each element is a distinct payload on the wire.
+* A ``-start`` op's tuple result is ``(operand_alias, result, ...)``; the
+  payload is the *largest* element, so we take ``max`` instead of ``sum``
+  to avoid counting the aliased input buffer as wire traffic.
+* Bounded dynamic dims (``<=512``) count at their bound.
+* Layout/tiling annotations (``{1,0:T(8,128)}``, ``S(1)`` memory spaces)
+  are ignored wherever they appear inside a type.
 """
 from __future__ import annotations
 
@@ -21,7 +36,11 @@ _DTYPE_BYTES = {
     "c128": 16,
 }
 
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# One shape literal: dtype[dims] where each dim may be bounded-dynamic
+# (``<=512``). The dims group deliberately rejects layout braces — those are
+# matched (and discarded) by the callers that care.
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[((?:<=)?\d+(?:,(?:<=)?\d+)*|)\]")
+
 _COLLECTIVES = (
     "all-gather",
     "all-reduce",
@@ -30,46 +49,132 @@ _COLLECTIVES = (
     "collective-permute",
 )
 
-
-def shape_bytes(type_str: str) -> int:
-    """Sum bytes over every shape literal in an HLO type string."""
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-_COLLECTIVE_RE = re.compile(
-    r"=\s*(?P<type>\(?[^=]*?\)?)\s+"
+_OP_TOKEN_RE = re.compile(
     r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(?P<suffix>-start|-done)?\("
 )
 
 
+def _shape_literal_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            d = d.strip()
+            if d.startswith("<="):
+                d = d[2:]
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum bytes over every shape literal in an HLO type string.
+
+    Works on single shapes (``f32[4,4]{1,0:T(8,128)}``), tuples of shapes,
+    and bounded dynamic dims (``f32[<=512]`` counts at its bound).
+    """
+    return sum(_shape_literal_bytes(d, dims) for d, dims in _SHAPE_RE.findall(type_str))
+
+
+def _tuple_element_bytes(type_str: str) -> list[int]:
+    """Byte size of each top-level tuple element; [shape_bytes] if no tuple.
+
+    The splitter is balanced-delimiter aware so layout annotations with
+    internal commas/parens (``{1,0:T(2,128)}``) don't break elements apart.
+    """
+    t = type_str.strip()
+    if not (t.startswith("(") and t.endswith(")")):
+        return [shape_bytes(t)]
+    body = t[1:-1]
+    elems, depth, start = [], 0, 0
+    for i, c in enumerate(body):
+        if c in "({[":
+            depth += 1
+        elif c in ")}]":
+            depth -= 1
+        elif c == "," and depth == 0:
+            elems.append(body[start:i])
+            start = i + 1
+    elems.append(body[start:])
+    return [shape_bytes(e) for e in elems if e.strip()]
+
+
+# A well-formed result type contains only type syntax; operand references
+# (``%fusion.6``) and string attrs (``metadata={op_name="..."}``) never do,
+# which is what rejects false-positive matches of a collective name inside
+# fusion/custom-call/metadata text.
+_TYPE_CHARS_RE = re.compile(r'^[^%"]*$')
+_TYPE_START_RE = re.compile(r"^\s*(\(|[a-z][a-z0-9]*\[)")
+
+
 def collective_stats(hlo_text: str) -> dict:
-    """{'total_bytes', 'by_op': {op: {'count', 'bytes'}}} from HLO text.
+    """{'total_bytes', 'by_op': {op: {'count','bytes'}}, 'async_unmatched'}.
 
     Bytes are the *result* buffer size of each collective in the per-device
-    program (async ops counted once at their -start/plain form).
+    program; async ops are counted once at their -start form (largest tuple
+    element — the aliased operand buffer is not wire traffic), plain tuple
+    results (variadic all-reduce) sum their elements. ``async_unmatched``
+    maps op → (#starts − #dones) for any op whose async pair is unbalanced;
+    empty for a well-formed module.
     """
     by_op: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    starts: dict[str, int] = defaultdict(int)
+    dones: dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
-        m = _COLLECTIVE_RE.search(line)
-        if not m or m.group("suffix") == "-done":
+        eq = line.find("=")
+        if eq < 0:
             continue
-        op = m.group("op")
-        b = shape_bytes(m.group("type"))
+        m = _OP_TOKEN_RE.search(line, eq + 1)
+        if not m:
+            continue
+        type_str = line[eq + 1 : m.start()]
+        if not (_TYPE_CHARS_RE.match(type_str) and _TYPE_START_RE.match(type_str)):
+            continue
+        op, suffix = m.group("op"), m.group("suffix")
+        if suffix == "-done":
+            dones[op] += 1
+            continue
+        elems = _tuple_element_bytes(type_str)
+        if suffix == "-start":
+            starts[op] += 1
+            b = max(elems) if elems else 0
+        else:
+            b = sum(elems)
         by_op[op]["count"] += 1
         by_op[op]["bytes"] += b
+    unmatched = {
+        op: starts[op] - dones[op]
+        for op in set(starts) | set(dones)
+        if starts[op] != dones[op]
+    }
     total = sum(v["bytes"] for v in by_op.values())
-    return {"total_bytes": total, "by_op": dict(by_op)}
+    return {"total_bytes": total, "by_op": dict(by_op), "async_unmatched": unmatched}
+
+
+def input_output_aliases(hlo_text: str) -> list[tuple[str, int]]:
+    """Parse the module's ``input_output_alias`` header into
+    ``[(output_index, param_number), ...]`` — one entry per donated/aliased
+    output buffer. Empty list when the executable aliases nothing (i.e. a
+    declared donation was NOT honored)."""
+    key = "input_output_alias={"
+    i = hlo_text.find(key)
+    if i < 0:
+        return []
+    j = i + len(key) - 1
+    depth, k = 0, j
+    for k in range(j, len(hlo_text)):
+        c = hlo_text[k]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = hlo_text[j + 1 : k]
+    entries = re.findall(r"\{([\d,\s]*)\}\s*:\s*\(\s*(\d+)", body)
+    return [(out.strip(), int(param)) for out, param in entries]
 
 
 def while_trip_counts(hlo_text: str) -> list[int]:

@@ -1,0 +1,207 @@
+"""Tests for the compile-time invariant auditor (repro.analysis) and its CI
+entry point scripts/analysis_gate.py.
+
+The sharded programs need 8 fake CPU devices, so everything jax-touching
+runs in a subprocess with XLA_FLAGS set before import (same pattern as
+tests/test_mctm_fit.py).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+REPO_SRC = os.path.join(REPO_ROOT, "src")
+GATE = os.path.join(REPO_ROOT, "scripts", "analysis_gate.py")
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _run_gate(*args: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC
+    return subprocess.run(
+        [sys.executable, GATE, *args],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_registry_has_every_subsystem():
+    """The auditor must cover ≥ 8 programs spanning fit, scoring, segmented
+    resume and kernel layers — the acceptance floor of the analysis PR."""
+    out = _run(
+        """
+        from repro.analysis import all_programs
+
+        names = {s.name for s in all_programs()}
+        assert len(names) >= 8, names
+        for required in [
+            "streamed_nll_sharded", "adam_train_step",
+            "lbfgs_value_and_grad_sharded", "two_pass_pass1_sharded",
+            "two_pass_pass2_hull_sharded", "one_pass_sharded",
+            "segmented_pass1_sharded", "gram_kernel_interpret",
+        ]:
+            assert required in names, (required, names)
+        print("OK", len(names))
+        """
+    )
+    assert "OK" in out
+
+
+def test_all_registered_programs_audit_clean():
+    """Every registered hot path honors its declared budgets on main."""
+    out = _run(
+        """
+        from repro.analysis import all_programs, audit_program
+
+        bad = []
+        for spec in all_programs():
+            rep = audit_program(spec)
+            if not rep["ok"]:
+                bad.append((spec.name, rep["failures"]))
+        assert not bad, bad
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+# ------------------------------------------------------------ violations
+
+
+def test_every_seeded_violation_is_detected():
+    """The gate must FAIL on each deliberately broken program — an extra
+    collective, an (n, J, d) materialization, an f64 promotion, a silently
+    copied donation, and a host callback."""
+    out = _run(
+        """
+        from repro.analysis import audit_program
+        from repro.analysis.violations import VIOLATIONS
+
+        missed = [
+            name for name, spec in VIOLATIONS.items()
+            if audit_program(spec)["ok"]
+        ]
+        assert not missed, f"violations audited clean: {missed}"
+        assert len(VIOLATIONS) >= 5, list(VIOLATIONS)
+        print("OK", len(VIOLATIONS))
+        """
+    )
+    assert "OK" in out
+
+
+def test_gate_exits_nonzero_on_seeded_violation():
+    res = _run_gate("--seed-violation", "extra_psum")
+    assert res.returncode == 1, (res.returncode, res.stdout, res.stderr)
+    assert "detected" in res.stdout
+
+
+def test_gate_rejects_unknown_violation():
+    res = _run_gate("--seed-violation", "nonsense")
+    assert res.returncode == 2, (res.returncode, res.stdout)
+
+
+# ------------------------------------------------------------ gate drift
+
+
+def test_gate_detects_baseline_drift(tmp_path):
+    """Tamper with a committed collective count → the gate must fail with a
+    drift message (the bench_gate-style regenerate-in-same-PR contract)."""
+    with open(os.path.join(REPO_ROOT, "benchmarks", "baselines",
+                           "ANALYSIS_budgets.json")) as f:
+        baseline = json.load(f)
+    prog = baseline["programs"]["streamed_nll_sharded"]
+    prog["collectives"]["all-reduce"] = 5  # the tampered expectation
+    tampered = tmp_path / "tampered.json"
+    tampered.write_text(json.dumps(baseline))
+    res = _run_gate("--baseline", str(tampered), "--no-lint")
+    assert res.returncode == 1, (res.returncode, res.stdout[-2000:])
+    assert "drifted" in res.stdout
+
+
+def test_gate_passes_on_committed_baseline():
+    """The full gate (audits + lints + baseline diff) is green on main."""
+    res = _run_gate()
+    assert res.returncode == 0, (res.stdout[-3000:], res.stderr[-2000:])
+    assert "ANALYSIS GATE: OK" in res.stdout
+
+
+# ------------------------------------------------------------ check units
+
+
+def test_materialization_budget_separates_chunk_from_stack():
+    """Unit-level: the ratio rule admits row-scaled and chunk-bounded avals
+    and rejects an n-scaled basis, independent of shard count."""
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.analysis.registry import (
+            MaterializationBudget, ProgramSpec)
+        from repro.analysis.checks import ProgramArtifacts, check_materialization
+
+        def build_ok():
+            # (n, 2) rows in, row-scaled out — never wider than 2/row
+            fn = jax.jit(lambda y: jnp.sum(y * 2.0, axis=1))
+            return fn, (np.ones((4096, 2), np.float32),)
+
+        def build_bad():
+            # widens every row to 8 columns: a basis-block shape
+            fn = jax.jit(lambda y: jnp.tile(y, (1, 4)) * 3.0)
+            return fn, (np.ones((4096, 2), np.float32),)
+
+        budget = MaterializationBudget(row_elems=2, fixed_elems=2048)
+        ok_spec = ProgramSpec("ok", "", build_ok, materialization=budget)
+        bad_spec = ProgramSpec("bad", "", build_bad, materialization=budget)
+        _, fails = check_materialization(ok_spec, ProgramArtifacts(ok_spec).jaxpr)
+        assert fails == [], fails
+        _, fails = check_materialization(bad_spec, ProgramArtifacts(bad_spec).jaxpr)
+        assert fails, "stacked basis not caught"
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_dtype_check_ignores_weak_scalar_but_catches_promotion():
+    out = _run(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.analysis.registry import ProgramSpec
+        from repro.analysis.checks import ProgramArtifacts, check_dtypes
+
+        def build_weak():
+            # python-float scalar: weak tensor<f64> const under x64, but the
+            # array math stays f32 → metric only, no failure
+            fn = jax.jit(lambda x: jnp.minimum(x, 1.0))
+            return fn, (np.ones((16,), np.float32),)
+
+        def build_promoted():
+            scale = np.float64(2.0)   # promotes the whole array under x64
+            fn = jax.jit(lambda x: x * scale)
+            return fn, (np.ones((16,), np.float32),)
+
+        for build, should_fail in [(build_weak, False), (build_promoted, True)]:
+            spec = ProgramSpec("p", "", build)
+            art = ProgramArtifacts(spec)
+            metrics, fails = check_dtypes(
+                spec, art.stablehlo(False), art.stablehlo(True))
+            assert bool(fails) == should_fail, (build.__name__, metrics, fails)
+        print("OK")
+        """
+    )
+    assert "OK" in out

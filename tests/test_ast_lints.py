@@ -1,0 +1,259 @@
+"""Unit suite for repro.analysis.ast_lints — the Python-hazard layer of the
+analysis gate. Fixtures are small source snippets linted in-process (no jax
+import needed)."""
+import textwrap
+
+from repro.analysis.ast_lints import lint_paths, lint_source
+
+
+def _lint(src: str):
+    return lint_source(textwrap.dedent(src))
+
+
+def _codes(src: str):
+    return [f.code for f in _lint(src)]
+
+
+# ------------------------------------------------------------- AL001 PRNG
+
+
+def test_prng_reuse_after_split_flagged():
+    findings = _lint(
+        """
+        import jax
+
+        def f(key):
+            sub = jax.random.split(key, 2)
+            return jax.random.normal(key, (3,))
+        """
+    )
+    assert [f.code for f in findings] == ["AL001"]
+    assert "key" in findings[0].message
+
+
+def test_prng_rebind_idiom_clean():
+    # the canonical key, sub = split(key) rotation must NOT be flagged
+    assert _codes(
+        """
+        import jax
+
+        def f(key):
+            key, sub = jax.random.split(key)
+            a = jax.random.normal(sub, (3,))
+            key, sub = jax.random.split(key)
+            return a + jax.random.normal(sub, (3,))
+        """
+    ) == []
+
+
+def test_prng_fold_in_consumes_key():
+    assert _codes(
+        """
+        import jax
+
+        def f(key):
+            k1 = jax.random.fold_in(key, 1)
+            return jax.random.uniform(key, (2,))
+        """
+    ) == ["AL001"]
+
+
+def test_prng_exclusive_branches_not_flagged():
+    # consuming in one if-arm must not poison the other arm
+    assert _codes(
+        """
+        import jax
+
+        def f(key, flag):
+            if flag:
+                a, b, c = jax.random.split(key, 3)
+            else:
+                a, b = jax.random.split(key)
+                c = None
+            return a
+        """
+    ) == []
+
+
+def test_prng_use_after_both_branches_consume_flagged():
+    assert _codes(
+        """
+        import jax
+
+        def f(key, flag):
+            if flag:
+                ks = jax.random.split(key, 3)
+            else:
+                ks = jax.random.split(key, 2)
+            return jax.random.normal(key, (2,))
+        """
+    ) == ["AL001"]
+
+
+def test_split_count_argument_is_not_a_key():
+    # jax.random.split(ks[1], E): E is a count, not a key — regression test
+    # for the models/layers.py init_moe false positive
+    assert _codes(
+        """
+        import jax
+
+        def f(key, E):
+            ks = jax.random.split(key, 5)
+            a = jax.random.split(ks[1], E)
+            b = jax.random.split(ks[2], E)
+            return a, b
+        """
+    ) == []
+
+
+def test_prng_lint_respects_import_alias():
+    assert _codes(
+        """
+        from jax import random
+
+        def f(key):
+            sub = random.split(key)
+            return random.normal(key, (2,))
+        """
+    ) == ["AL001"]
+
+
+# ------------------------------------------------------------- AL002 np-in-jit
+
+
+def test_np_math_in_jitted_function_flagged():
+    assert _codes(
+        """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.sum(x)
+        """
+    ) == ["AL002"]
+
+
+def test_np_math_on_static_config_not_flagged():
+    # np math NOT involving a traced parameter is static setup — fine
+    assert _codes(
+        """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            c = np.sqrt(2.0)
+            return x * c
+        """
+    ) == []
+
+
+def test_np_math_outside_jit_not_flagged():
+    assert _codes(
+        """
+        import numpy as np
+
+        def f(x):
+            return np.sum(x)
+        """
+    ) == []
+
+
+def test_function_passed_to_jit_is_traced():
+    assert _codes(
+        """
+        import jax
+        import numpy as np
+
+        def body(x):
+            return np.dot(x, x)
+
+        g = jax.jit(body)
+        """
+    ) == ["AL002"]
+
+
+def test_scan_body_closure_is_traced():
+    # a nested def inside a jitted function traces with it
+    assert _codes(
+        """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def outer(xs):
+            def body(carry, x):
+                return carry + np.log(xs), None
+            return jax.lax.scan(body, 0.0, xs)
+        """
+    ) == ["AL002"]
+
+
+def test_partial_jit_decorator_detected():
+    assert _codes(
+        """
+        from functools import partial
+        import jax
+        import numpy as np
+
+        @partial(jax.jit, static_argnums=(1,))
+        def f(x, n):
+            return np.mean(x)
+        """
+    ) == ["AL002"]
+
+
+# ------------------------------------------------------------- AL003 defaults
+
+
+def test_mutable_default_flagged():
+    assert _codes(
+        """
+        def f(x, cache={}):
+            return x
+        """
+    ) == ["AL003"]
+
+
+def test_none_default_clean():
+    assert _codes(
+        """
+        def f(x, cache=None, k=3, name="a", t=()):
+            return x
+        """
+    ) == []
+
+
+# ------------------------------------------------------------- noqa + sweep
+
+
+def test_noqa_suppresses_specific_code():
+    assert _codes(
+        """
+        import jax
+
+        def f(key):
+            sub = jax.random.split(key)
+            return jax.random.normal(key, (2,))  # noqa: AL001
+        """
+    ) == []
+
+
+def test_noqa_other_code_does_not_suppress():
+    assert _codes(
+        """
+        import jax
+
+        def f(key):
+            sub = jax.random.split(key)
+            return jax.random.normal(key, (2,))  # noqa: AL002
+        """
+    ) == ["AL001"]
+
+
+def test_repo_source_tree_is_lint_clean():
+    """src/repro must stay clean — the gate fails CI otherwise. Intentional
+    exceptions carry a per-line noqa with a justification comment."""
+    findings = lint_paths("src/repro")
+    assert findings == [], [str(f) for f in findings]

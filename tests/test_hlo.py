@@ -1,4 +1,15 @@
-from repro.utils.hlo import collective_stats, shape_bytes
+"""Unit suite for repro.utils.hlo — the parser under the analysis gate.
+
+Fixtures are adversarial on purpose: tiled layouts with internal commas,
+tuple result types, async -start/-done pairs, bounded dynamic dims, and
+metadata noise that *names* a collective without being one.
+"""
+from repro.utils.hlo import (
+    collective_stats,
+    input_output_aliases,
+    shape_bytes,
+    while_trip_counts,
+)
 
 SAMPLE = """
 HloModule test
@@ -20,6 +31,23 @@ def test_shape_bytes():
     assert shape_bytes("pred[]") == 1
 
 
+def test_shape_bytes_tiled_layout_and_memory_space():
+    # TPU tiling annotations carry commas and parens inside the layout braces
+    assert shape_bytes("f32[256,128]{1,0:T(8,128)}") == 256 * 128 * 4
+    assert shape_bytes("bf16[1024]{0:T(1024)S(1)}") == 1024 * 2
+
+
+def test_shape_bytes_bounded_dynamic_dims():
+    # bounded dynamic dims count at their bound
+    assert shape_bytes("f32[<=512,4]") == 512 * 4 * 4
+    assert shape_bytes("s32[<=8]") == 8 * 4
+
+
+def test_shape_bytes_unknown_dtype_ignored():
+    assert shape_bytes("opaque[16]") == 0
+    assert shape_bytes("token[]") == 0
+
+
 def test_collective_stats_counts_and_bytes():
     stats = collective_stats(SAMPLE)
     ops = stats["by_op"]
@@ -31,8 +59,99 @@ def test_collective_stats_counts_and_bytes():
     assert ops["collective-permute"]["count"] == 1
     assert ops["all-to-all"]["count"] == 1
     assert stats["total_bytes"] > 0
+    assert stats["async_unmatched"] == {}
 
 
 def test_non_collective_lines_ignored():
     stats = collective_stats("%add = f32[4]{0} add(%a, %b)")
     assert stats["total_bytes"] == 0
+    assert stats["by_op"] == {}
+
+
+def test_variadic_tuple_all_reduce_sums_elements():
+    # a fused (variadic) psum of a tuple carry: ONE op, bytes = sum of elems
+    text = ("%ar = (f32[8,8]{1,0}, f32[8]{0}, f32[24,2]{1,0}) "
+            "all-reduce(%a, %b, %c), channel_id=1, to_apply=%add")
+    stats = collective_stats(text)
+    assert stats["by_op"]["all-reduce"]["count"] == 1
+    assert stats["by_op"]["all-reduce"]["bytes"] == (64 + 8 + 48) * 4
+
+
+def test_async_start_counts_largest_element_once():
+    # -start result is (operand_alias, result): payload = max, not sum
+    text = """
+%ags = (f32[4,4]{1,0}, f32[32,4]{1,0}) all-gather-start(%p), channel_id=2
+%agd = f32[32,4]{1,0} all-gather-done(%ags)
+%ars = (f32[16]{0}, f32[16]{0}) all-reduce-start(%q), channel_id=3
+%ard = f32[16]{0} all-reduce-done(%ars)
+"""
+    stats = collective_stats(text)
+    assert stats["by_op"]["all-gather"]["count"] == 1
+    assert stats["by_op"]["all-gather"]["bytes"] == 32 * 4 * 4
+    assert stats["by_op"]["all-reduce"]["count"] == 1
+    assert stats["by_op"]["all-reduce"]["bytes"] == 16 * 4
+    assert stats["async_unmatched"] == {}
+
+
+def test_unbalanced_async_pair_reported():
+    text = "%ags = (f32[4]{0}, f32[8]{0}) all-gather-start(%p), channel_id=2"
+    stats = collective_stats(text)
+    assert stats["by_op"]["all-gather"]["count"] == 1
+    assert stats["async_unmatched"] == {"all-gather": 1}
+
+
+def test_tiled_layout_inside_tuple_does_not_split_elements():
+    # layout braces carry commas AND parens; the tuple splitter must not
+    # break f32[256,128]{1,0:T(8,128)} into two bogus elements
+    text = ("%ar = (f32[256,128]{1,0:T(8,128)}, f32[8]{0}) "
+            "all-reduce(%a, %b), channel_id=4, to_apply=%add")
+    stats = collective_stats(text)
+    assert stats["by_op"]["all-reduce"]["count"] == 1
+    assert stats["by_op"]["all-reduce"]["bytes"] == (256 * 128 + 8) * 4
+
+
+def test_metadata_naming_a_collective_is_not_counted():
+    # fusion/custom-call lines can *mention* collectives in metadata or
+    # backend_config — operand refs (%) / quoted strings reject the match
+    text = """
+%fusion.1 = f32[64]{0} fusion(%p0), kind=kLoop, calls=%comp, metadata={op_name="jit(f)/all-reduce"}
+%cc = f32[4]{0} custom-call(%x), custom_call_target="foo", backend_config="all-gather"
+"""
+    stats = collective_stats(text)
+    assert stats["by_op"] == {}
+    assert stats["total_bytes"] == 0
+
+
+def test_collective_named_result_var_still_counted():
+    # the result variable NAME contains the op token before '=' — only the
+    # post-'=' occurrence may count
+    text = "%all-reduce.7 = f32[12]{0} all-reduce(%x), channel_id=1"
+    stats = collective_stats(text)
+    assert stats["by_op"]["all-reduce"]["count"] == 1
+    assert stats["by_op"]["all-reduce"]["bytes"] == 12 * 4
+
+
+def test_input_output_aliases_parsing():
+    text = ("HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias), "
+            "{1}: (2, {}, must-alias) }, entry_computation_layout={(f32[4])->f32[4]}")
+    aliases = input_output_aliases(text)
+    assert len(aliases) == 2
+    assert aliases[0] == ("0", 0)
+    assert aliases[1] == ("1", 2)
+
+
+def test_input_output_aliases_nested_output_index():
+    text = "HloModule m, input_output_alias={ {0, 1}: (3, {}, may-alias) }"
+    aliases = input_output_aliases(text)
+    assert aliases == [("0, 1", 3)]
+
+
+def test_input_output_aliases_absent():
+    assert input_output_aliases("HloModule m\n%r = f32[4]{0} add(%a, %b)") == []
+
+
+def test_while_trip_counts():
+    text = ('%w = while(%init), condition=%c, body=%b, '
+            'backend_config={"known_trip_count":{"n":"7"}} trip_count=7\n'
+            "%w2 = while(%i2), trip_count=3")
+    assert sorted(while_trip_counts(text)) == [3, 7]

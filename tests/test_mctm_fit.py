@@ -341,16 +341,19 @@ def test_sharded_lbfgs_matches_single_host_ragged():
 
 def test_sharded_streamed_nll_one_psum():
     """The sharded evaluator matches the dense NLL on a ragged mesh AND
-    lowers to exactly ONE all-reduce — the fused-collective contract."""
+    honors its full invariant budget — the census now runs through the
+    registry-based auditor (repro.analysis) instead of an ad-hoc
+    collective_stats call, so this test and CI's analysis gate enforce the
+    SAME contract (ONE all-reduce, chunk-bounded intermediates, no f64,
+    no host callbacks)."""
     _run_in_subprocess(
         """
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import mctm as M
         from repro.core import mctm_fit as F
         from repro.core.bernstein import DataScaler
-        from repro.core.distributed_coreset import shard_layout
         from repro.utils.compat import make_mesh
-        from repro.utils.hlo import collective_stats
+        from repro.analysis import audit_program, get_program
 
         mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
@@ -364,18 +367,11 @@ def test_sharded_streamed_nll_one_psum():
         got = F.streamed_nll(cfg, scaler, params, Y, weights=w, chunk=128, mesh=mesh)
         assert abs(dense - got) / abs(dense) < 1e-5, (dense, got)
 
-        # ONE collective: lower the evaluator and census its all-reduces
-        chunk, cps, n_pad = shard_layout(mesh, ("data",), 1203, 128)
-        feat = F.fit_featurize(cfg, scaler)
-        fn = F._make_sharded_nll_fn(feat, cfg, mesh, ("data",), chunk, cps)
-        pad = n_pad - 1203
-        Yp = np.concatenate([Y, np.broadcast_to(Y[:1], (pad, 2))]).astype(np.float32)
-        wp = np.concatenate([w, np.zeros(pad, np.float32)])
-        hlo = fn.lower(params, jnp.asarray(Yp), jnp.asarray(wp)).compile().as_text()
-        stats = collective_stats(hlo)
-        n_ar = stats["by_op"].get("all-reduce", {}).get("count", 0)
-        assert n_ar == 1, stats["by_op"]
-        print("OK", n_ar)
+        # full static audit of the registered evaluator program
+        report = audit_program(get_program("streamed_nll_sharded"))
+        assert report["ok"], report["failures"]
+        assert report["metrics"]["collectives"]["all-reduce"] == 1, report
+        print("OK", report["metrics"]["collectives"])
         """
     )
 
