@@ -154,8 +154,19 @@ def scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
     # relative error for the saved sweep
     rel_err = np.abs(scores_1p - scores_2p) / np.maximum(np.abs(scores_2p), 1e-12)
 
+    # fused one-pass sweep body vs the 3 unfused dispatches it replaced,
+    # timed at the exact chunk shapes of this bench (plus the per-kernel
+    # analytic roofline rows) — see benchmarks/roofline_table.py
+    from benchmarks.roofline_table import kernel_roofline
+
+    roofline = kernel_roofline(
+        chunk=chunk, J=J, degree=degree, k_hull=k_hull, sketch=sketch,
+        repeats=1 if smoke else 3,
+    )
+
     one_pass_rec = {
         "sketch_size": sketch,
+        "fused_vs_unfused": roofline["fused_vs_unfused"],
         "two_pass_s": us_two_pass / 1e6,
         "one_pass_s": us_one_pass / 1e6,
         "speedup": us_two_pass / us_one_pass,
@@ -191,6 +202,8 @@ def scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
         "rss_mb": {"start": rss0, "after_chunked": rss_chunked, "after_dense": rss_dense},
         # one-pass sketched vs two-pass exact (pass-strategy comparison)
         "one_pass_vs_two_pass": one_pass_rec,
+        # per-kernel analytic bytes/FLOPs/AI + measured oracle wall-clock
+        "roofline": roofline,
     }
     emit(
         f"scoring/n{n}_J{J}_d{d}/chunk{chunk}",
@@ -205,6 +218,14 @@ def scoring_bench(smoke: bool = False, out_path: str | None = None) -> dict:
         f"one_pass={one_pass_rec['one_pass_s']:.2f}s "
         f"passes={one_pass_calls}v{two_pass_calls} "
         f"med_rel_err={one_pass_rec['median_rel_score_err']:.1e}",
+    )
+    fu = roofline["fused_vs_unfused"]
+    emit(
+        f"scoring_fused_sweep/chunk{chunk}_sketch{sketch}",
+        fu["fused_us"],
+        f"unfused={fu['unfused_us']:.0f}us fused={fu['fused_us']:.0f}us "
+        f"speedup={fu['measured_speedup']:.2f}x "
+        f"traffic={fu['traffic_ratio']:.2f}x",
     )
     if out_path is None:
         # smoke runs land in results/ so they don't churn the committed

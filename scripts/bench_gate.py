@@ -20,6 +20,10 @@ compares generated vs baseline per metric class:
 * **invariants** (booleans like ``all_within_band``/``hull_points_equal``
   and config fields like n/degree/chunk): must hold exactly; a config
   mismatch means the comparison is meaningless and also fails.
+* **floor metrics** (headline claims like "one-pass is strictly faster than
+  two-pass"): the generated value must be ≥ an ABSOLUTE floor, independent
+  of the baseline — runner noise may move the margin but may never flip the
+  claim itself.
 
 Usage::
 
@@ -50,10 +54,11 @@ class Rule:
     ``[]`` segments map over list elements (e.g. ``per_k.[].eps_hat``)."""
 
     path: str
-    kind: str            # "time_ratio" | "exact" | "invariant"
+    kind: str            # "time_ratio" | "exact" | "invariant" | "floor"
     rel: float = 1.5     # exact: multiplicative envelope
     abs: float = 0.0     # exact: additive envelope
     ratio: float | None = None  # time_ratio: per-rule override of --time-ratio
+    floor: float = 0.0   # floor: absolute minimum for the generated value
 
 
 # Per-file rule sets, keyed by the basename prefix of the generated record.
@@ -65,6 +70,13 @@ RULES: dict[str, list[Rule]] = {
         Rule("speedup", "time_ratio"),
         Rule("max_abs_score_diff", "exact", rel=4.0, abs=1e-6),
         Rule("one_pass_vs_two_pass.speedup", "time_ratio"),
+        # the headline claim of the fused sweep kernel: one-pass STRICTLY
+        # dominates two-pass — the 0.95x regression can never silently return
+        Rule("one_pass_vs_two_pass.speedup", "floor", floor=1.0),
+        Rule("one_pass_vs_two_pass.fused_vs_unfused.measured_speedup",
+             "time_ratio"),
+        Rule("one_pass_vs_two_pass.fused_vs_unfused.measured_speedup",
+             "floor", floor=1.0),
         Rule("one_pass_vs_two_pass.one_pass_rows_streamed", "invariant"),
         Rule("one_pass_vs_two_pass.one_pass_featurize_calls", "invariant"),
         Rule("one_pass_vs_two_pass.median_rel_score_err", "exact", rel=2.0, abs=0.01),
@@ -169,6 +181,12 @@ def check_rule(rule: Rule, generated: dict, baseline: dict,
                     f"{where}: {float(g):.4g} regressed more than "
                     f"{ratio}x vs baseline {float(b):.4g} "
                     f"(floor {floor:.4g})"
+                )
+        elif rule.kind == "floor":
+            if float(g) < rule.floor:
+                fails.append(
+                    f"{where}: {float(g):.4g} is below the absolute floor "
+                    f"{rule.floor:.4g} — the gated claim no longer holds"
                 )
         elif rule.kind == "exact":
             ceiling = float(b) * rule.rel + rule.abs

@@ -436,8 +436,8 @@ register(ProgramSpec(
                                           fixed_elems=FIXED_SHARDED),
     donated_outputs=0,
     needs_devices=SHARDS,
-    invariants=("COLL-ONE-PSUM", "COLL-HULL-GATHER", "MAT-CHUNK", "DTYPE-F32",
-                "HOST-FREE"),
+    invariants=("COLL-ONE-PSUM", "COLL-HULL-GATHER", "SWEEP-FUSED",
+                "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
 ))
 
 
@@ -537,7 +537,8 @@ register(ProgramSpec(
                                           fixed_elems=FIXED_SEGMENTED),
     donated_outputs=0,
     needs_devices=SHARDS,
-    invariants=("COLL-SEG-NONE", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+    invariants=("COLL-SEG-NONE", "SWEEP-FUSED", "MAT-CHUNK", "DTYPE-F32",
+                "HOST-FREE"),
 ))
 
 
@@ -616,4 +617,44 @@ register(ProgramSpec(
                                           fixed_elems=4 * CHUNK * J * 128),
     donated_outputs=0,
     invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_sweep_kernel_interpret():
+    import jax
+
+    from repro.kernels.sweep.ops import fused_sweep_update
+
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(CHUNK, D_BASIS)).astype(np.float32)
+    Pr = rng.normal(size=(CHUNK * J, DEGREE + 1)).astype(np.float32)
+    sw = np.ones(CHUNK, np.float32)
+    rows = rng.integers(0, SKETCH, size=CHUNK).astype(np.int32)
+    signs = np.where(rng.random(CHUNK) < 0.5, -1.0, 1.0).astype(np.float32)
+    omega = rng.normal(size=(D_BASIS, PROJ_Q)).astype(np.float32)
+    dirs = np.asarray(_dirs())  # host-side: direction sampling is not traceable
+    SX = np.zeros((SKETCH, D_BASIS), np.float32)
+    fn = jax.jit(
+        lambda SX, X, P, sw, r, s, om: fused_sweep_update(
+            SX, X, P, sw, r, s, dirs=dirs, omega=om,
+            backend="pallas", interpret=True,
+        )
+    )
+    return fn, (SX, X, Pr, sw, rows, signs, omega)
+
+
+register(ProgramSpec(
+    name="sweep_kernel_interpret",
+    description="fused one-pass sweep Pallas kernel wrapper (interpret mode): "
+                "CountSketch + projected z + hull extremes in one residency "
+                "(kernels.sweep — the OnePassSketched chunk body)",
+    build=_build_sweep_kernel_interpret,
+    collectives=CollectiveBudget(),
+    # X/P/z rows and the padded dirs/Ω blocks are lane-padded to 128; the
+    # largest fixed intermediates are the (128, 128) dirs/Ω pads and the
+    # (m_pad, block·r) score tile — all under 4·CHUNK·J·128
+    materialization=MaterializationBudget(row_elems=2 * 128,
+                                          fixed_elems=4 * CHUNK * J * 128),
+    donated_outputs=0,
+    invariants=("SWEEP-FUSED", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
 ))

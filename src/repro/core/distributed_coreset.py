@@ -87,6 +87,7 @@ from repro.core.scoring import (
     upfront_directions,
 )
 from repro.kernels.gram.ops import gram_matrix
+from repro.kernels.sweep.ops import fused_sweep_update
 from repro.utils.compat import shard_map
 
 __all__ = [
@@ -408,8 +409,9 @@ def _extremes_init(m: int):
     )
 
 
-def _extremes_step(ext, Pr, dirs, pm, row_offset):
-    """Fold one chunk's directional extremes into the running carry.
+def _extremes_fold(ext, block, row_offset):
+    """Fold one chunk's block-local directional extremes into the running
+    carry.
 
     Strict comparisons keep the first-occurrence (lowest-row) tie-break,
     matching the single-host running extremes. Indices are cast to int32 so
@@ -417,7 +419,7 @@ def _extremes_step(ext, Pr, dirs, pm, row_offset):
     against n·r overflowing int32 up front).
     """
     bmax, imax, bmin, imin = ext
-    vmax, lmax, vmin, lmin = hull_chunk_extremes(Pr, dirs, pm)
+    vmax, lmax, vmin, lmin = block
     gmax = (row_offset + lmax).astype(jnp.int32)
     gmin = (row_offset + lmin).astype(jnp.int32)
     upd = vmax > bmax
@@ -425,6 +427,12 @@ def _extremes_step(ext, Pr, dirs, pm, row_offset):
     upd = vmin < bmin
     bmin, imin = jnp.where(upd, vmin, bmin), jnp.where(upd, gmin, imin)
     return bmax, imax, bmin, imin
+
+
+def _extremes_step(ext, Pr, dirs, pm, row_offset):
+    """``_extremes_fold`` over the standalone extremes kernel — the two-pass
+    scan bodies' step (the one-pass bodies fold the fused sweep's block)."""
+    return _extremes_fold(ext, hull_chunk_extremes(Pr, dirs, pm), row_offset)
 
 
 def _extremes_cross_shard(ext, axis_name):
@@ -626,12 +634,13 @@ def make_sharded_onepass_fn(
             SX, ext = carry
             ci, yc, swc, mc, rc, sc = xs
             X, Pr = featurize(yc)
-            Xw = X * swc[:, None]
-            SX = SX.at[rc].add(sc[:, None] * Xw)
+            # ONE fused op per chunk (kernels.sweep): sketch + z + extremes
+            SX, z, extb, _ = fused_sweep_update(
+                SX, X, Pr if hull else None, swc, rc, sc,
+                dirs=dirs, omega=omega, mask=mc if hull else None,
+            )
             if hull:
-                pm = jnp.repeat(mc, r) > 0
-                ext = _extremes_step(ext, Pr, dirs, pm, (base + ci * chunk) * r)
-            z = Xw if omega is None else Xw @ omega
+                ext = _extremes_fold(ext, extb, (base + ci * chunk) * r)
             return (SX, ext), z
 
         init = (jnp.zeros((sketch_size, D), jnp.float32), _extremes_init(m))
@@ -864,12 +873,17 @@ def make_segmented_onepass_fn(
             SXc, ext = carry
             ci, yc, swc, mc, rc, sc = xs
             X, Pr = featurize(yc)
-            Xw = X * swc[:, None]
-            SXc = SXc.at[rc].add(sc[:, None] * Xw)
+            # same fused op as the non-segmented sweep — the per-shard carry
+            # layout (and so the segment checkpoints) is unchanged
+            SXc, z, extb, _ = fused_sweep_update(
+                SXc, X, Pr if hull else None, swc, rc, sc,
+                dirs=dirs if hull else None, omega=omega,
+                mask=mc if hull else None,
+            )
             if hull:
-                pm = jnp.repeat(mc, r) > 0
-                ext = _extremes_step(ext, Pr, dirs, pm, (base + (c0 + ci) * chunk) * r)
-            z = Xw if omega is None else Xw @ omega
+                ext = _extremes_fold(
+                    ext, extb, (base + (c0 + ci) * chunk) * r
+                )
             return (SXc, ext), z
 
         ext0 = (bmax[0], imax[0], bmin[0], imin[0]) if hull else ()
@@ -1487,6 +1501,13 @@ class DistributedScoringEngine:
                 "in f64 inside the mesh and requires x64 mode "
                 "(JAX_ENABLE_X64=1); the single-host engine accumulates "
                 "host-side instead and needs no flag"
+            )
+        if getattr(strat, "gram_dtype", "float32") == "float64" and not f64:
+            # the sharded one-pass carries (and psums) an f32 CountSketch —
+            # refuse a sketched f64 request instead of silently downcasting
+            raise NotImplementedError(
+                "gram_dtype='float64' sketched accumulation is single-host "
+                "only (the sharded one-pass sweep carries an f32 sketch)"
             )
         r = self.rows_per_point
         hull = hull_k > 0

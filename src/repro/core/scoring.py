@@ -59,6 +59,26 @@ Strategies
       through the same ``hull_directions``); the random directions are drawn
       identically to the two-pass net.
 
+Strategy comparison (what each sweep costs; see docs/KERNELS.md for the
+kernel dispatch contract behind ``fused_update``):
+
+  strategy           sweeps  carry                 retention   chunk body
+  TwoPassExact       2       (G, Σp, Σppᵀ)         O(chunk)    matmul + fused hull sweep 2
+  TwoPassSketched    2       (SX, Σp, Σppᵀ)        O(chunk)    fused sweep (sketch+moments)
+  OnePassSketched    1       SX                    O(n·q)      fused sweep (sketch+z+hull)
+
+``fused_update`` is the strategy hook behind the single-residency sweep:
+one call per chunk covering the sketch/Gram update, the optional emitted z
+block, AND the block-local hull extremes (``repro.kernels.sweep`` — Pallas
+kernel on TPU, fused-jnp oracle elsewhere). Strategies that don't fuse fall
+back to ``update`` + a standalone hull reduction; the sketched strategies
+override it, which is what makes the true one-pass sweep one dispatch per
+chunk and strictly faster than two-pass (BENCH_scoring.json
+``one_pass_vs_two_pass``, floor-gated ≥ 1.0 by scripts/bench_gate.py). The
+fused op returns chunk-LOCAL extremes which the drivers fold at their own
+row offsets, so engine state layouts — and sweep checkpoints — stay
+byte-identical to the unfused formulation.
+
 The per-chunk math (``pass1_update``, ``leverage_chunk``,
 ``hull_chunk_extremes``) and the between-pass host algebra
 (``projection_from_gram``, ``directions_from_moments``, ``finalize_scoring``)
@@ -86,6 +106,7 @@ from repro.core.hull import hull_directions, stable_first_unique
 from repro.ft.config import get_ft_config, maybe_inject
 from repro.kernels.extremes.ops import directional_extremes
 from repro.kernels.gram.ops import gram_matrix
+from repro.kernels.sweep.ops import fused_sweep_update
 
 __all__ = [
     "ScoringEngine",
@@ -274,6 +295,13 @@ def _z_leverage(z, V, inv):
 
 
 _acc_stats = jax.jit(pass1_update, static_argnames=("gram_dtype",))
+# the fused one-pass sweep step (kernels.sweep): CountSketch + moments +
+# extremes + z in ONE dispatch — the single-host realization shares this
+# trace cache, the sharded scan bodies trace the op inline
+_fused_sweep = jax.jit(
+    fused_sweep_update,
+    static_argnames=("want_z", "block_rows", "backend", "interpret"),
+)
 _acc_moments = jax.jit(_moments_update)
 _acc_sketch = jax.jit(_sketch_update)
 _leverage_chunk = jax.jit(leverage_chunk)
@@ -440,6 +468,21 @@ class PassStrategy:
     def result_gram(self, state, plan=None):
         return self.gram(state, plan)
 
+    def fused_update(self, state, X, P, sw, plan_slice=(), dirs=None):
+        """Per-chunk accumulation fused with the directional-extremes block.
+
+        Returns ``(state', z, ext)`` where ``ext`` is the chunk-LOCAL
+        (vmax, imax, vmin, imin) against ``dirs`` (``None`` when ``dirs``
+        is). The engine drivers call THIS — strategies whose sweep can fold
+        the hull reduction into their accumulation (``OnePassSketched`` via
+        ``kernels.sweep``) override it; the default composes ``update`` with
+        the standalone extremes kernel, which is exactly the unfused
+        behavior.
+        """
+        state, z = self.update(state, X, P, sw, plan_slice)
+        ext = _hull_chunk(P, dirs) if dirs is not None else None
+        return state, z, ext
+
     # init_state / update / gram: subclass responsibility
 
 
@@ -484,15 +527,37 @@ class TwoPassExact(PassStrategy):
 
 @dataclasses.dataclass(frozen=True)
 class _SketchedBase(PassStrategy):
-    """Shared CountSketch plan/state for the sketched strategies."""
+    """Shared CountSketch plan/state for the sketched strategies.
+
+    ``gram_dtype="float64"`` carries the CountSketch accumulator SX in f64 —
+    the sketched analogue of the two-pass f64 Gram carry (same x64
+    requirement: the accumulation runs on device, so a silent f32 downcast
+    must be refused loudly). The streamed rows, moments and emitted z blocks
+    stay f32; only the accumulator (and the Grams read off it) widen.
+    """
 
     sketch_size: int = 0
+    gram_dtype: str = "float32"
 
     needs_key = True
 
     def __post_init__(self):
         if self.sketch_size <= 0:
             raise ValueError("sketched strategies require sketch_size > 0")
+        if self.gram_dtype not in GRAM_DTYPES:
+            raise ValueError(f"gram_dtype must be one of {GRAM_DTYPES}")
+
+    def _acc_dtype(self):
+        if self.gram_dtype == "float64":
+            if not jax.config.jax_enable_x64:
+                raise ValueError(
+                    "gram_dtype='float64' on a sketched strategy carries the "
+                    "CountSketch accumulator in f64 on device and requires "
+                    "x64 mode (JAX_ENABLE_X64=1 / jax.config.update"
+                    "('jax_enable_x64', True))"
+                )
+            return jnp.float64
+        return jnp.float32
 
     def begin(self, n: int, D: int, key):
         return sketch_plan(key, n, self.sketch_size)
@@ -501,7 +566,7 @@ class _SketchedBase(PassStrategy):
         return (plan[0][lo:hi], plan[1][lo:hi])
 
     def init_state(self, D: int, p: int | None):
-        SX = jnp.zeros((self.sketch_size, D), jnp.float32)
+        SX = jnp.zeros((self.sketch_size, D), self._acc_dtype())
         if p is None:
             return (SX, None, None)
         return (SX, jnp.zeros((p,), jnp.float32), jnp.zeros((p, p), jnp.float32))
@@ -513,11 +578,18 @@ class _SketchedBase(PassStrategy):
 @dataclasses.dataclass(frozen=True)
 class TwoPassSketched(_SketchedBase):
     """CountSketch Gram in pass 1; still re-streams for pass 2 (the engine's
-    pre-refactor ``sketch_size`` behavior, kept as an explicit strategy)."""
+    pre-refactor ``sketch_size`` behavior, kept as an explicit strategy).
+    Pass 1 runs through the fused sweep op (sketch + hull moments in one
+    dispatch, ``want_z=False`` — nothing is retained)."""
 
     def update(self, state, X, P, sw, plan_slice=()):
         rows, signs = plan_slice
-        return _acc_sketch(state[0], state[1], state[2], X, P, sw, rows, signs), None
+        moments = (state[1], state[2]) if P is not None else None
+        SX, _, _, mom = _fused_sweep(
+            state[0], X, P, sw, rows, signs, moments=moments, want_z=False
+        )
+        s1, s2 = mom if mom is not None else (state[1], state[2])
+        return (SX, s1, s2), None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -554,12 +626,25 @@ class OnePassSketched(_SketchedBase):
     def init_state(self, D: int, p: int | None = None):
         # no (p, p) moment gram: the one-pass net is fixed upfront, so the
         # moments would be dead weight on the hot streaming path
-        return (jnp.zeros((self.sketch_size, D), jnp.float32), None, None)
+        return (jnp.zeros((self.sketch_size, D), self._acc_dtype()), None, None)
 
     def update(self, state, X, P, sw, plan_slice=()):
+        state, z, _ = self.fused_update(state, X, None, sw, plan_slice)
+        return state, z
+
+    def fused_update(self, state, X, P, sw, plan_slice=(), dirs=None):
+        """The fused realization (kernels.sweep): CountSketch + z emission +
+        hull extremes in ONE dispatch — single VMEM residency on TPU, one
+        fused XLA call on CPU. ``ext`` carries chunk-local indices; the
+        driver folds them with its row offset, so the carried state (and any
+        sweep checkpoint written from it) is laid out exactly as the unfused
+        path's."""
         rows, signs, omega = plan_slice
-        state = _acc_sketch(state[0], state[1], state[2], X, None, sw, rows, signs)
-        return state, _project_rows(X, sw, omega)
+        SX, z, ext, _ = _fused_sweep(
+            state[0], X, P if dirs is not None else None, sw, rows, signs,
+            dirs=dirs, omega=omega,
+        )
+        return (SX, None, None), z, ext
 
     def gram(self, state, plan=None):
         """Projection Gram — (SXΩ)ᵀ(SXΩ), the Gram of the retained z rows."""
@@ -596,14 +681,14 @@ def resolve_strategy(
         return strategy
     if strategy is None:
         if sketch_size > 0:
-            return OnePassSketched(sketch_size)
+            return OnePassSketched(sketch_size, gram_dtype)
         return TwoPassExact(gram_dtype)
     if strategy == "two-pass":
         return TwoPassExact(gram_dtype)
     if strategy == "two-pass-sketched":
-        return TwoPassSketched(sketch_size)
+        return TwoPassSketched(sketch_size, gram_dtype)
     if strategy == "one-pass":
-        return OnePassSketched(sketch_size)
+        return OnePassSketched(sketch_size, gram_dtype)
     raise ValueError(
         f"unknown pass strategy {strategy!r} (expected one of {_STRATEGY_NAMES} "
         "or a PassStrategy instance)"
@@ -880,14 +965,16 @@ class ScoringEngine:
                         upfront_directions(hull_key, p, hull_k, self.hull_oversample)
                     )
                     ext = RunningExtremes(int(dirs1.shape[0]))
-            state, z = strat.update(state, Xc, Pc, swc, strat.slice_plan(plan, lo, hi))
+            state, z, extb = strat.fused_update(
+                state, Xc, Pc, swc, strat.slice_plan(plan, lo, hi), dirs=dirs1
+            )
             if z is not None:
                 if z_buf is not None:
                     z_buf[lo:hi] = np.asarray(z)
                 else:
                     z_blocks.append(z)
             if ext is not None:
-                ext.update(*_hull_chunk(Pc, dirs1), offset=lo * r)
+                ext.update(*extb, offset=lo * r)
             if ck is not None and ((ci + 1) % ck.every == 0 or ci + 1 == n_chunks):
                 done1 = ci + 1
                 ck.mgr1.save(ci + 1, payload1())

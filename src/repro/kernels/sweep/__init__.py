@@ -1,0 +1,6 @@
+from repro.kernels.sweep.ops import (  # noqa: F401
+    DEFAULT_BLOCK_ROWS,
+    default_sweep_backend,
+    fused_sweep_update,
+)
+from repro.kernels.sweep.ref import fused_sweep_ref  # noqa: F401

@@ -1,0 +1,137 @@
+"""jnp oracle: the fused one-pass sweep body, as ONE traceable function.
+
+This is the exact math of ``OnePassSketched``'s per-chunk work — CountSketch
+accumulation, optional hull-moment accumulation, the directional extremes of
+the derivative rows, and the sketch-projected z emission — fused so a single
+dispatch (one jit call single-host, one scan-body inline sharded) replaces
+the three separate ops the pre-fused engine issued per chunk.
+
+The extremes reduction is restructured relative to
+``kernels.extremes.ref.directional_extremes_ref``: instead of a dense
+per-direction ``argmax`` over the full (m, c·r) score block (XLA lowers the
+variadic value+index reduce ~7x slower than a plain ``max`` on CPU), the
+block is folded in two levels — per-tile max/min, an argmax over the tiny
+(m, tiles) tile-maxima, then an argmax inside the single winning
+(m, block_rows) tile. The results are IDENTICAL bit for bit, including the
+first-occurrence tie-break (the tile argmax picks the first tile attaining
+the global extreme; the within-tile argmax picks the first row inside it),
+which is what keeps fused and unfused engine paths interchangeable and
+resume checkpoints bit-identical. This mirrors the Pallas kernel's running
+per-tile accumulation, so oracle and kernel share the reduction shape.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# tile width of the two-level extremes reduction — shared default with the
+# Pallas kernels (see ops.DEFAULT_BLOCK_ROWS, re-exported from
+# kernels.extremes)
+_REF_TILE = 512
+
+
+def _direct_extremes(Smax, Smin):
+    """Dense single-level extremes of one (m, k) score block — the
+    ``directional_extremes_ref`` formulation, used for the ragged tail."""
+    imax = jnp.argmax(Smax, axis=1)
+    imin = jnp.argmin(Smin, axis=1)
+    vmax = jnp.take_along_axis(Smax, imax[:, None], axis=1)[:, 0]
+    vmin = jnp.take_along_axis(Smin, imin[:, None], axis=1)[:, 0]
+    return vmax, imax, vmin, imin
+
+
+def _two_level_extremes(Smax, Smin, tile: int):
+    """Two-level extremes over a (m, nb·tile) score block (see module doc)."""
+    m, nmain = Smax.shape
+    nb = nmain // tile
+    SbM = Smax.reshape(m, nb, tile)
+    Sbm = Smin.reshape(m, nb, tile)
+    tmax = jnp.max(SbM, axis=2)          # (m, nb) tile maxima
+    tmin = jnp.min(Sbm, axis=2)
+    jmax = jnp.argmax(tmax, axis=1)      # first tile attaining the extreme
+    jmin = jnp.argmin(tmin, axis=1)
+    vmax = jnp.take_along_axis(tmax, jmax[:, None], axis=1)[:, 0]
+    vmin = jnp.take_along_axis(tmin, jmin[:, None], axis=1)[:, 0]
+    wmax = jnp.take_along_axis(SbM, jmax[:, None, None], axis=1)[:, 0]
+    wmin = jnp.take_along_axis(Sbm, jmin[:, None, None], axis=1)[:, 0]
+    imax = jmax * tile + jnp.argmax(wmax, axis=1)
+    imin = jmin * tile + jnp.argmin(wmin, axis=1)
+    return vmax, imax, vmin, imin
+
+
+def blocked_extremes_ref(P, dirs, mask=None, *, tile: int = _REF_TILE):
+    """Directional extremes of one block, two-level formulation.
+
+    Same contract and bit-identical results as ``directional_extremes_ref``
+    (P: (rows, d), dirs: (m, d), mask: optional (rows,) validity) — only the
+    reduction order differs. The ragged tail (rows % tile) is reduced
+    densely and folded with strict comparisons, preserving first-occurrence
+    tie-breaking across the tail boundary.
+    """
+    S = dirs @ P.T  # (m, rows) — block-local only, never (n·r, m)
+    if mask is None:
+        Smax = Smin = S
+    else:
+        Smax = jnp.where(mask[None, :], S, -jnp.inf)
+        Smin = jnp.where(mask[None, :], S, jnp.inf)
+    rows = S.shape[1]
+    nb = rows // tile
+    if nb <= 1:  # too small for two levels — the dense reduce is cheap here
+        return _direct_extremes(Smax, Smin)
+    main = nb * tile
+    vmax, imax, vmin, imin = _two_level_extremes(
+        Smax[:, :main], Smin[:, :main], tile
+    )
+    if main < rows:
+        tv, ti, tw, tj = _direct_extremes(Smax[:, main:], Smin[:, main:])
+        # strict comparisons: the main block wins ties (its rows come first)
+        upd = tv > vmax
+        vmax = jnp.where(upd, tv, vmax)
+        imax = jnp.where(upd, ti + main, imax)
+        upd = tw < vmin
+        vmin = jnp.where(upd, tw, vmin)
+        imin = jnp.where(upd, tj + main, imin)
+    return vmax, imax, vmin, imin
+
+
+def fused_sweep_ref(
+    SX,
+    X,
+    P,
+    sw,
+    rows,
+    signs,
+    *,
+    dirs=None,
+    omega=None,
+    mask=None,
+    moments=None,
+    want_z: bool = True,
+    tile: int = _REF_TILE,
+):
+    """One fused sweep step — see ``ops.fused_sweep_update`` for the contract.
+
+    Returns ``(SX', z, ext, moments')`` where ``ext`` is the block-LOCAL
+    (vmax, imax, vmin, imin) against ``dirs`` (``None`` when ``dirs`` is),
+    ``z = (√w·X)Ω`` (``None`` when ``want_z`` is False) and ``moments'`` the
+    accumulated (Σp, Σppᵀ) (``None`` when ``moments`` is). The CountSketch
+    update is cast to ``SX.dtype`` so an f64 accumulator
+    (``gram_dtype="float64"`` under x64) keeps full precision.
+    """
+    Xw = X * sw[:, None]
+    SX = SX.at[rows].add((signs[:, None] * Xw).astype(SX.dtype))
+    out_moments = None
+    if moments is not None:
+        s1, s2 = moments
+        out_moments = (s1 + jnp.sum(P, axis=0), s2 + P.T @ P)
+    z = None
+    if want_z:
+        z = Xw if omega is None else Xw @ omega
+    ext = None
+    if dirs is not None:
+        pmask = mask
+        if pmask is not None:
+            if pmask.shape[0] != P.shape[0]:  # per-point mask → per-P-row
+                pmask = jnp.repeat(pmask, P.shape[0] // pmask.shape[0])
+            pmask = pmask > 0
+        ext = blocked_extremes_ref(P, dirs, pmask, tile=tile)
+    return SX, z, ext, out_moments

@@ -33,6 +33,20 @@ def test_exact_rule_envelope():
     assert check_rule(rule, {"eps": 0.041}, base, 1.5)        # above ceiling
 
 
+def test_floor_rule_is_baseline_independent():
+    """The speedup >= 1.0 headline gate: an absolute floor, not a ratio — a
+    generous baseline can never mask the claim flipping back below 1."""
+    rule = Rule("one_pass_vs_two_pass.speedup", "floor", floor=1.0)
+    base = {"one_pass_vs_two_pass": {"speedup": 2.0}}
+    assert check_rule(rule, {"one_pass_vs_two_pass": {"speedup": 1.01}},
+                      base, 1.5) == []
+    # within the 1.5x time_ratio noise envelope of baseline, but below the
+    # floor — still fails
+    fails = check_rule(rule, {"one_pass_vs_two_pass": {"speedup": 0.95}},
+                       base, 1.5)
+    assert len(fails) == 1 and "floor" in fails[0]
+
+
 def test_invariant_rule_and_list_fanout():
     rule = Rule("per_k.[].within_band", "invariant")
     base = {"per_k": [{"within_band": True}, {"within_band": True}]}
@@ -64,9 +78,10 @@ def test_gate_pair_end_to_end(tmp_path):
         "n": 100, "degree": 6, "chunk_size": 8, "smoke": True,
         "speedup": 2.0, "max_abs_score_diff": 1e-7,
         "one_pass_vs_two_pass": {
-            "speedup": 1.0, "one_pass_rows_streamed": 100,
+            "speedup": 1.2, "one_pass_rows_streamed": 100,
             "one_pass_featurize_calls": 2,
             "median_rel_score_err": 0.04, "max_rel_score_err": 0.1,
+            "fused_vs_unfused": {"measured_speedup": 2.5},
         },
     }
     bp = tmp_path / "BENCH_scoring_smoke.json"

@@ -297,6 +297,35 @@ def test_sharded_engine_f64_requires_x64():
     )
 
 
+def test_sharded_engine_refuses_sketched_f64():
+    """The sharded one-pass sweep carries (and psums) an f32 CountSketch —
+    a sketched f64 request must be refused loudly, not silently downcast
+    (the single-host engine's oracle path handles it instead)."""
+    run_in_subprocess(
+        """
+        import jax, numpy as np
+        from repro.utils.compat import make_mesh
+        from repro.core import mctm as M
+        from repro.core.bernstein import DataScaler
+        from repro.core.distributed_coreset import DistributedScoringEngine
+        from repro.core.scoring import OnePassSketched
+        mesh = make_mesh((8,), ("data",))
+        Y = np.random.default_rng(0).random((64, 2)).astype(np.float32)
+        cfg = M.MCTMConfig(J=2, degree=5)
+        eng = DistributedScoringEngine(cfg, DataScaler.fit(Y), mesh=mesh)
+        try:
+            eng.score(Y, method="l2-only", key=jax.random.PRNGKey(0),
+                      strategy=OnePassSketched(256, "float64"))
+        except NotImplementedError as e:
+            assert "single-host" in str(e)
+        else:
+            raise AssertionError("sharded sketched f64 must raise")
+        print("OK")
+        """,
+        extra_env={"JAX_ENABLE_X64": "1"},
+    )
+
+
 def test_stage_rows_zero_copy_staging():
     """stage_rows assembles the engine-layout padded row-sharded array from
     O(chunk) host blocks; scoring the staged array (n_valid=) matches scoring

@@ -170,6 +170,62 @@ def test_gram_dtype_float64_stabilizes_degree6():
     assert dense.gram.dtype == np.float64
 
 
+def test_sketched_gram_dtype_refuses_without_x64():
+    """An f64 CountSketch accumulator without x64 would silently downcast on
+    device — ``_acc_dtype`` must refuse loudly (x64 is off in this process)."""
+    assert not jax.config.jax_enable_x64
+    for strat in (OnePassSketched(64, "float64"), TwoPassSketched(64, "float64")):
+        with pytest.raises(ValueError, match="x64"):
+            strat.init_state(12, None)
+
+
+def test_sketched_gram_dtype_float64_parity():
+    """Under x64 the sketched strategies carry SX in f64 (the sketched
+    analogue of the two-pass f64 Gram carry) and reproduce the f32 leverage
+    estimates — same plan, same streamed rows, only the accumulator widens.
+    x64 must be set before jax initializes, so this runs in a subprocess."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["JAX_ENABLE_X64"] = "1"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    assert jax.config.jax_enable_x64
+    from repro.core.scoring import OnePassSketched, ScoringEngine, TwoPassSketched
+    rng = np.random.default_rng(0)
+    F = rng.standard_normal((700, 10)).astype(np.float32)
+    engine = ScoringEngine(
+        featurize=lambda Yc: (jnp.asarray(Yc, jnp.float32), None),
+        chunk_size=128, rows_per_point=1,
+    )
+    key = jax.random.PRNGKey(0)
+    for cls in (OnePassSketched, TwoPassSketched):
+        # the accumulator really is carried in f64...
+        st = cls(512, "float64").init_state(10, None)
+        assert st[0].dtype == jnp.float64, cls.__name__
+        # ...and the widened accumulation reproduces the f32 estimates
+        s32 = engine.score(F, method="l2-only", key=key,
+                           strategy=cls(512, "float32"))
+        s64 = engine.score(F, method="l2-only", key=key,
+                           strategy=cls(512, "float64"))
+        rel = np.abs(s64.leverage - s32.leverage) / np.maximum(
+            np.abs(s32.leverage), 1e-6)
+        assert rel.max() < 1e-3, (cls.__name__, float(rel.max()))
+        assert np.isfinite(np.asarray(s64.scores)).all()
+    print("OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+
+
 def test_proj_size_compression():
     """Ω-projected retention: proj_size ≥ rank reproduces the plain one-pass
     estimates (leverage is invariant under rank-preserving right

@@ -1,0 +1,230 @@
+"""Fused one-pass sweep kernel: interpret-mode Pallas and the fused-jnp
+oracle against the UNFUSED composition (scatter-add CountSketch + z emission
++ dense-argmax directional extremes + moment sums) the engines ran before
+fusion — ragged tails, argmax tie-breaking, zero-weight padding rows,
+proj_size on/off — plus the streams-each-row-once counting guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scoring import sketch_plan
+from repro.kernels.extremes.ref import directional_extremes_ref
+from repro.kernels.sweep.ops import fused_sweep_update
+from repro.kernels.sweep.ref import blocked_extremes_ref, fused_sweep_ref
+
+
+def _unfused(SX, X, P, sw, rows, signs, dirs=None, omega=None, mask=None,
+             moments=None, want_z=True):
+    """The pre-fusion per-chunk math, one dispatch per accumulator."""
+    Xw = X * sw[:, None]
+    SX = SX.at[rows].add((signs[:, None] * Xw).astype(SX.dtype))
+    out_moments = None
+    if moments is not None:
+        out_moments = (moments[0] + jnp.sum(P, axis=0), moments[1] + P.T @ P)
+    z = (Xw if omega is None else Xw @ omega) if want_z else None
+    ext = None
+    if dirs is not None:
+        pm = mask
+        if pm is not None and pm.shape[0] != P.shape[0]:
+            pm = jnp.repeat(pm, P.shape[0] // pm.shape[0])
+        ext = directional_extremes_ref(P, dirs, None if pm is None else pm > 0)
+    return SX, z, ext, out_moments
+
+
+def _case(n, D, d, r, m, sk, seed=0, q=None):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+    P = jnp.asarray(rng.standard_normal((n * r, d)), jnp.float32)
+    dirs = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    sw = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
+    omega = (
+        None if q is None
+        else jnp.asarray(rng.standard_normal((D, q)), jnp.float32)
+    )
+    rows, signs = sketch_plan(jax.random.PRNGKey(seed), n, sk)
+    SX = jnp.zeros((sk, D), jnp.float32)
+    return SX, X, P, sw, rows, signs, dirs, omega
+
+
+def _check(got, ref, rtol=1e-6, atol=1e-6):
+    SXg, zg, extg, mog = got
+    SXr, zr, extr, mor = ref
+    np.testing.assert_allclose(np.asarray(SXg), np.asarray(SXr),
+                               rtol=rtol, atol=atol)
+    assert (zg is None) == (zr is None)
+    if zg is not None:
+        np.testing.assert_allclose(np.asarray(zg), np.asarray(zr),
+                                   rtol=rtol, atol=atol)
+    assert (extg is None) == (extr is None)
+    if extg is not None:
+        vmax, imax, vmin, imin = extg
+        rvmax, rimax, rvmin, rimin = extr
+        # indices are EXACT — first-occurrence tie-breaking must survive the
+        # two-level / running-block reduction restructure
+        np.testing.assert_array_equal(np.asarray(imax), np.asarray(rimax))
+        np.testing.assert_array_equal(np.asarray(imin), np.asarray(rimin))
+        np.testing.assert_allclose(np.asarray(vmax), np.asarray(rvmax),
+                                   rtol=rtol, atol=atol)
+        np.testing.assert_allclose(np.asarray(vmin), np.asarray(rvmin),
+                                   rtol=rtol, atol=atol)
+    assert (mog is None) == (mor is None)
+    if mog is not None:
+        np.testing.assert_allclose(np.asarray(mog[0]), np.asarray(mor[0]),
+                                   rtol=rtol, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(mog[1]), np.asarray(mor[1]),
+                                   rtol=rtol, atol=1e-4)
+
+
+# ragged tails on purpose: n not a multiple of any block size, r ∈ {1, 2},
+# proj_size (omega) on/off
+@pytest.mark.parametrize(
+    "n,D,d,r,m,sk,q",
+    [
+        (257, 12, 6, 2, 16, 64, None),
+        (1030, 14, 7, 2, 24, 96, None),
+        (7, 10, 5, 1, 8, 32, None),
+        (513, 14, 7, 2, 16, 64, 4),
+        (640, 16, 8, 1, 130, 128, 8),
+    ],
+)
+def test_fused_oracle_matches_unfused(n, D, d, r, m, sk, q):
+    SX, X, P, sw, rows, signs, dirs, omega = _case(n, D, d, r, m, sk, n, q)
+    moments = (jnp.zeros((d,), jnp.float32), jnp.zeros((d, d), jnp.float32))
+    got = fused_sweep_ref(SX, X, P, sw, rows, signs, dirs=dirs, omega=omega,
+                          moments=moments, tile=128)
+    ref = _unfused(SX, X, P, sw, rows, signs, dirs=dirs, omega=omega,
+                   moments=moments)
+    _check(got, ref)
+
+
+@pytest.mark.parametrize(
+    "n,D,d,r,m,sk,q",
+    [
+        (257, 12, 6, 2, 16, 64, None),
+        (1030, 14, 7, 2, 24, 96, None),
+        (513, 14, 7, 2, 16, 64, 4),
+    ],
+)
+def test_fused_interpret_matches_unfused(n, D, d, r, m, sk, q):
+    """The Pallas kernel itself (interpret=True on CPU) against the unfused
+    composition — the acceptance bar is ≤1e-6."""
+    SX, X, P, sw, rows, signs, dirs, omega = _case(n, D, d, r, m, sk, n, q)
+    got = fused_sweep_update(SX, X, P, sw, rows, signs, dirs=dirs,
+                             omega=omega, block_rows=128, interpret=True)
+    ref = _unfused(SX, X, P, sw, rows, signs, dirs=dirs, omega=omega)
+    _check(got, ref)
+
+
+def test_fused_interpret_moments_want_z_off():
+    """TwoPassSketched's pass-1 configuration: moments on, nothing retained."""
+    SX, X, P, sw, rows, signs, dirs, _ = _case(300, 12, 6, 2, 16, 64, 3)
+    moments = (jnp.zeros((6,), jnp.float32), jnp.zeros((6, 6), jnp.float32))
+    got = fused_sweep_update(SX, X, P, sw, rows, signs, moments=moments,
+                             want_z=False, block_rows=64, interpret=True)
+    ref = _unfused(SX, X, P, sw, rows, signs, moments=moments, want_z=False)
+    _check(got, ref)
+
+
+def test_fused_extremes_tie_breaking():
+    """Duplicate P blocks straddling tile and Pallas block boundaries: both
+    the two-level oracle reduction and the kernel's running fold must break
+    ties to the FIRST occurrence, exactly like the dense argmax."""
+    rng = np.random.default_rng(0)
+    n, D, d, r, sk = 384, 12, 6, 2, 64
+    P_np = rng.standard_normal((n * r, d)).astype(np.float32)
+    P_np[256:512] = P_np[:256]  # duplicates across the 128-row tiles
+    X = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+    P = jnp.asarray(P_np)
+    dirs = jnp.asarray(rng.standard_normal((24, d)), jnp.float32)
+    sw = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
+    rows, signs = sketch_plan(jax.random.PRNGKey(0), n, sk)
+    SX = jnp.zeros((sk, D), jnp.float32)
+
+    dense = directional_extremes_ref(P, dirs)
+    for ext in (
+        blocked_extremes_ref(P, dirs, tile=128),
+        fused_sweep_ref(SX, X, P, sw, rows, signs, dirs=dirs, tile=128)[2],
+        fused_sweep_update(SX, X, P, sw, rows, signs, dirs=dirs,
+                           block_rows=64, interpret=True)[2],
+    ):
+        np.testing.assert_array_equal(np.asarray(ext[1]), np.asarray(dense[1]))
+        np.testing.assert_array_equal(np.asarray(ext[3]), np.asarray(dense[3]))
+        # every winner resolved into the first copy of the duplicated block
+        assert not np.any((np.asarray(ext[1]) >= 256) & (np.asarray(ext[1]) < 512))
+
+
+def test_fused_zero_weight_padding_rows():
+    """The engines' shard-padding pattern: trailing rows carry sw = 0 and a
+    prefix-ones mask. Padding garbage (huge values!) must not leak into the
+    sketch, z, or the extremes — the outputs equal the trimmed computation."""
+    rng = np.random.default_rng(1)
+    n, nv, D, d, r, m, sk = 320, 277, 12, 6, 2, 16, 64
+    X_np = rng.standard_normal((n, D)).astype(np.float32)
+    P_np = rng.standard_normal((n * r, d)).astype(np.float32)
+    X_np[nv:] = 1e9  # garbage beyond the valid prefix
+    P_np[nv * r:] = 1e9
+    sw_np = (rng.random(n) + 0.5).astype(np.float32)
+    sw_np[nv:] = 0.0
+    mask = jnp.arange(n) < nv
+    dirs = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    rows, signs = sketch_plan(jax.random.PRNGKey(1), n, sk)
+    SX = jnp.zeros((sk, D), jnp.float32)
+
+    trimmed = _unfused(
+        SX, jnp.asarray(X_np[:nv]), jnp.asarray(P_np[: nv * r]),
+        jnp.asarray(sw_np[:nv]), rows[:nv], signs[:nv], dirs=dirs,
+    )
+    for got in (
+        fused_sweep_ref(SX, jnp.asarray(X_np), jnp.asarray(P_np),
+                        jnp.asarray(sw_np), rows, signs, dirs=dirs,
+                        mask=mask, tile=128),
+        fused_sweep_update(SX, jnp.asarray(X_np), jnp.asarray(P_np),
+                           jnp.asarray(sw_np), rows, signs, dirs=dirs,
+                           mask=mask, block_rows=64, interpret=True),
+    ):
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(trimmed[0]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got[1][:nv]),
+                                   np.asarray(trimmed[1]), rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got[2][1]),
+                                      np.asarray(trimmed[2][1]))
+        np.testing.assert_array_equal(np.asarray(got[2][3]),
+                                      np.asarray(trimmed[2][3]))
+        assert int(np.max(got[2][1])) < nv * r
+        assert int(np.max(got[2][3])) < nv * r
+
+
+def test_fused_path_streams_each_row_exactly_once():
+    """The fused one-pass sweep (hull directions + sketch in one dispatch)
+    must still be ONE data pass: every row featurized exactly once."""
+    from repro.core.scoring import ScoringEngine
+
+    calls = []
+    rng = np.random.default_rng(0)
+    F = rng.standard_normal((700, 10)).astype(np.float32)
+
+    def featurize(Yc):
+        calls.append(int(Yc.shape[0]))
+        Fc = jnp.asarray(Yc, jnp.float32)
+        return Fc, Fc
+
+    engine = ScoringEngine(featurize=featurize, chunk_size=128, rows_per_point=1)
+    res = engine.score(
+        F, method="l2-hull", hull_k=4, hull_key=jax.random.PRNGKey(1),
+        sketch_size=256, key=jax.random.PRNGKey(0),
+    )
+    assert np.isfinite(np.asarray(res.scores)).all()
+    assert sum(calls) == 700, "fused one-pass must stream each row exactly once"
+    assert len(calls) == -(-700 // 128)
+
+
+def test_sweep_backend_dispatch():
+    SX, X, P, sw, rows, signs, dirs, _ = _case(64, 8, 4, 1, 8, 32)
+    with pytest.raises(ValueError):
+        fused_sweep_update(SX, X, P, sw, rows, signs, backend="nope")
+    # the Pallas kernel is f32-only — a widened accumulator (f64 under x64;
+    # bf16 stands in here, x64 is off in this process) is an oracle feature
+    with pytest.raises(ValueError, match="f32-only"):
+        fused_sweep_update(SX.astype(jnp.bfloat16), X, P, sw, rows, signs,
+                           backend="pallas")
