@@ -1,0 +1,238 @@
+"""Density-serving throughput/latency bench → BENCH_serve.json.
+
+Measures the serving-layer claims (ROADMAP item 1) on a fitted MCTM:
+
+* ``coalesced_vs_unbatched.speedup`` — queries/s through the continuous-
+  batching engine at ``max_batch`` vs the same queries served one request
+  per dispatch (a ``max_batch=1`` engine — identical code path, bucket 1).
+  Gated with an absolute floor: coalescing must stay ≥ 5x at smoke load.
+* ``load_sweep`` — open-loop synthetic arrivals at several offered QPS
+  levels; p50/p99 request latency and achieved (sustained) QPS per level.
+  Arrival times are precomputed (open loop: the client does not wait for
+  answers), so queueing shows up in the tail exactly as it would live.
+* ``steady_state_recompiles`` — XLA traces observed AFTER the warmup pass
+  across all of the above mixed traffic (every bucket, both query kinds,
+  one hot swap). Invariant-gated at 0.
+* ``hot_swap`` — a background refit (fresh coreset → streaming L-BFGS via
+  ``serve.density.refit_and_publish``) published mid-traffic:
+  publish→visible stall, dropped queries (gated 0), and mixed-params
+  queries — every answer must match its recorded model version's reference
+  exactly-one-of-old-or-new (gated 0).
+
+Run: ``PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _percentiles(lat_s: list[float]) -> dict:
+    lat = np.asarray(lat_s, np.float64) * 1e3
+    return {
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "max_ms": float(lat.max()),
+    }
+
+
+def serve_bench(smoke: bool = False, out_path: str | None = None) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core import mctm as M
+    from repro.core.bernstein import DataScaler
+    from repro.core.coreset import build_coreset
+    from repro.core.mctm_fit import fit_mctm_streaming
+    from repro.data.dgp import generate
+    from repro.serve.density import DensityServeEngine, start_background_refit
+
+    n = 20_000 if smoke else 200_000
+    k = 400 if smoke else 2000
+    steps = 60 if smoke else 200
+    degree = 5
+    max_batch = 64 if smoke else 256
+    n_queries = 2048 if smoke else 16_384
+    offered_qps = [500, 2000, 8000] if smoke else [1000, 5000, 20_000, 50_000]
+
+    cfg = M.MCTMConfig(J=2, degree=degree)
+    Y = generate("normal_mixture", n, seed=0).astype(np.float32)
+    scaler = DataScaler.fit(Y)
+    key = jax.random.PRNGKey(0)
+    k_build, k_fit, k_refit, k_serve = jax.random.split(key, 4)
+
+    cs = build_coreset(cfg, scaler, Y, k, "l2-hull", key=k_build)
+    fit = fit_mctm_streaming(
+        cfg, scaler, Y[cs.indices], weights=np.asarray(cs.weights, np.float32),
+        key=k_fit, steps=steps, method="lbfgs",
+    )
+    rng = np.random.default_rng(1)
+    qY = Y[rng.integers(0, n, size=n_queries)]
+
+    def fresh_engine(mb):
+        e = DensityServeEngine(cfg, fit.params, scaler, max_batch=mb,
+                               min_bucket=min(8, mb), sample_key=k_serve)
+        e.warmup()
+        return e
+
+    # ---- coalesced vs unbatched (same code path, bucket ladder vs bucket 1)
+    def closed_loop_qps(mb, m) -> float:
+        eng = fresh_engine(mb)
+        t0 = time.perf_counter()
+        i = 0
+        while i < m:
+            b = min(mb, m - i)
+            eng.submit_log_density(qY[i:i + b])
+            eng.submit_sample(b, seeds=list(range(i, i + b)))
+            eng.run_until_drained()
+            i += b
+        return 2 * m / (time.perf_counter() - t0)
+
+    m_un = max(n_queries // 16, 64)  # per-dispatch serving is slow — subsample
+    unbatched_qps = closed_loop_qps(1, m_un)
+    coalesced_qps = closed_loop_qps(max_batch, n_queries)
+    speedup = coalesced_qps / unbatched_qps
+
+    # ---- open-loop load sweep: precomputed arrival times, mixed kinds
+    load_sweep = []
+    for qps in offered_qps:
+        eng = fresh_engine(max_batch)
+        m = min(n_queries, max(256, qps))  # ≥1s of traffic per level
+        arrivals = np.arange(m) / qps
+        reqs = []
+        t0 = time.perf_counter()
+        i = 0
+        while i < m or any(eng.queues.values()):
+            now = time.perf_counter() - t0
+            while i < m and arrivals[i] <= now:
+                if i % 4 == 3:
+                    reqs += eng.submit_sample(1, y_obs=qY[i], n_obs=1, seeds=[i])
+                else:
+                    reqs += eng.submit_log_density(qY[i][None])
+                i += 1
+            eng.step()
+        wall = time.perf_counter() - t0
+        load_sweep.append({
+            "offered_qps": qps,
+            "achieved_qps": m / wall,
+            "queries": m,
+            **_percentiles([r.latency_s for r in reqs]),
+        })
+
+    # ---- hot swap under traffic: background refit, exact version audit
+    eng = fresh_engine(max_batch)
+    warm = eng.compile_count
+    refit = start_background_refit(
+        eng, scaler, Y, k, key=k_refit, method="lbfgs", steps=steps)
+    reqs = []
+    i = 0
+    while (refit.is_alive() or eng.version < 1 or i < 512) and i < 10 * n_queries:
+        burst = max_batch // 2
+        reqs += engine_submit_mixed(eng, qY, i, burst)
+        i += burst
+        eng.step()
+    refit.join()
+    eng.run_until_drained()
+    recompiles = eng.compile_count - warm
+    stall = [e["visible_s"] - e["published_s"]
+             for e in eng.swap_events if e["visible_s"] is not None]
+    # audit: every log_density answer matches its recorded version exactly-
+    # one-of-old-or-new (version 1's params are live in the engine slot)
+    refs = {
+        0: np.asarray(M.log_density(cfg, fit.params, scaler, jnp.asarray(qY))),
+        1: np.asarray(
+            M.log_density(cfg, eng._slot.params, scaler, jnp.asarray(qY))
+        ),
+    }
+    mixed = dropped = 0
+    for j, r in enumerate(reqs):
+        if not r.done:
+            dropped += 1
+            continue
+        if r.kind != "log_density":
+            continue
+        qi = int(r.uid_qi)
+        err_mine = abs(r.result - refs[r.version][qi])
+        err_other = min(abs(r.result - refs[v][qi]) for v in refs if v != r.version)
+        if err_mine > 1e-5 and err_other <= err_mine:
+            mixed += 1
+    hot_swap = {
+        "dropped": dropped,
+        "mixed_params_queries": mixed,
+        "versions_served": sorted({r.version for r in reqs if r.done}),
+        "publish_to_visible_ms": float(max(stall) * 1e3) if stall else None,
+        "queries_in_flight": len(reqs),
+    }
+
+    rec = {
+        "n": n,
+        "k": k,
+        "degree": degree,
+        "steps": steps,
+        "max_batch": max_batch,
+        "buckets": list(fresh_engine(max_batch).buckets),
+        "smoke": bool(smoke),
+        "coalesced_vs_unbatched": {
+            "unbatched_qps": unbatched_qps,
+            "coalesced_qps": coalesced_qps,
+            "speedup": speedup,
+        },
+        "load_sweep": load_sweep,
+        "steady_state_recompiles": recompiles,
+        "hot_swap": hot_swap,
+        "zero_dropped_or_mixed": bool(dropped == 0 and mixed == 0),
+    }
+    if out_path is None:
+        if smoke:
+            from benchmarks.common import bench_dir
+
+            out_path = os.path.join(bench_dir("bench"), "BENCH_serve_smoke.json")
+        else:
+            out_path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[serve_bench] coalesced {coalesced_qps:.0f} QPS vs unbatched "
+          f"{unbatched_qps:.0f} QPS → {speedup:.1f}x  "
+          f"recompiles={recompiles}  dropped={dropped} mixed={mixed}",
+          flush=True)
+    for row in load_sweep:
+        print(f"[serve_bench] offered {row['offered_qps']:>6} QPS → achieved "
+              f"{row['achieved_qps']:8.0f}  p50 {row['p50_ms']:6.2f}ms  "
+              f"p99 {row['p99_ms']:7.2f}ms", flush=True)
+    print(f"[serve_bench] wrote {out_path}", flush=True)
+    if not rec["zero_dropped_or_mixed"] or recompiles != 0:
+        raise SystemExit("[serve_bench] serving contract violated")
+    return rec
+
+
+def engine_submit_mixed(eng, qY, start, burst):
+    reqs = []
+    for i in range(start, start + burst):
+        qi = i % len(qY)
+        if i % 4 == 3:
+            r = eng.submit_sample(1, y_obs=qY[qi], n_obs=1, seeds=[i])
+        else:
+            r = eng.submit_log_density(qY[qi][None])
+        r[0].uid_qi = qi  # remember which query row, for the version audit
+        reqs += r
+    return reqs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes — seconds, for CI")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    serve_bench(smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

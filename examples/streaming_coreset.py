@@ -1,5 +1,8 @@
 """Streaming scenario: maintain an MCTM coreset over an insertion stream with
-Merge & Reduce (paper §4 'Data streams and distributed data'), then fit.
+Merge & Reduce (paper §4 'Data streams and distributed data'), fit, and keep
+a live serving slot fresh — each re-fit on the maintained coreset publishes
+atomically into a ``DensityServeEngine`` while it answers queries (the
+bridge to the serving layer: stream → coreset → refit → publish).
 
     PYTHONPATH=src python examples/streaming_coreset.py
 """
@@ -9,7 +12,9 @@ import jax
 import numpy as np
 
 from repro.core import DataScaler, MCTMConfig, MergeReduceCoreset, basis_features, fit_mctm, nll
+from repro.core.mctm_fit import fit_mctm_streaming
 from repro.data import generate
+from repro.serve import DensityServeEngine
 
 
 def main():
@@ -19,23 +24,47 @@ def main():
     scaler = DataScaler.fit(Y[:chunk])  # scaler from the first chunk (stream!)
 
     mr = MergeReduceCoreset(cfg, scaler, k=k, key=jax.random.PRNGKey(0))
+    engine = None
+    refits = 0
     t0 = time.time()
     for i in range(0, n, chunk):
         mr.push(Y[i : i + chunk])
+        # periodic refresh: refit on the maintained coreset and publish to
+        # the serving slot without interrupting its traffic
+        if (i // chunk) % 8 == 7:
+            res = mr.result()
+            fit = fit_mctm_streaming(
+                cfg, scaler, res.Y,
+                weights=np.asarray(res.weights, np.float32),
+                steps=60, method="lbfgs",
+            )
+            if engine is None:
+                engine = DensityServeEngine(cfg, fit.params, scaler, max_batch=64)
+                engine.warmup()
+            else:
+                engine.publish(fit.params)
+            # queries riding between refits all answer from one version
+            probe = engine.submit_log_density(Y[:32])
+            engine.run_until_drained()
+            assert {r.version for r in probe} == {engine.version}
+            refits += 1
     res = mr.result()
     t_stream = time.time() - t0
     print(f"streamed {mr.n_seen} points → coreset of {res.size} "
           f"(Σw = {res.weights.sum():.0f}) in {t_stream:.2f}s "
-          f"[{len([b for b in mr._buckets if b is not None])} live buckets]")
+          f"[{len([b for b in mr._buckets if b is not None])} live buckets, "
+          f"{refits} refits published to serving slot v{engine.version}]")
 
     fit = fit_mctm(cfg, scaler, res.Y, weights=np.asarray(res.weights, np.float32), steps=800)
+    v_final = engine.publish(fit.params)
 
     import jax.numpy as jnp
 
     A, Ap = basis_features(cfg, scaler, jnp.asarray(Y))
     full_fit = fit_mctm(cfg, scaler, Y, steps=800)
     r = float(nll(cfg, fit.params, A, Ap)) / float(nll(cfg, full_fit.params, A, Ap))
-    print(f"stream-coreset vs full-data likelihood ratio: {r:.4f}")
+    print(f"stream-coreset vs full-data likelihood ratio: {r:.4f} "
+          f"(final fit staged as serving version {v_final})")
 
 
 if __name__ == "__main__":

@@ -107,6 +107,27 @@ RULES: dict[str, list[Rule]] = {
         # regressions
         Rule("per_k.[].speedup_vs_full_fit", "time_ratio", ratio=3.0),
     ],
+    "BENCH_serve": [
+        Rule("n", "invariant"),
+        Rule("k", "invariant"),
+        Rule("degree", "invariant"),
+        Rule("max_batch", "invariant"),
+        # the serving contracts are hard zeros, not envelopes: a single
+        # steady-state retrace, dropped query, or mixed-params answer is a
+        # broken scheduler/hot-swap protocol, whatever the runner
+        Rule("steady_state_recompiles", "invariant"),
+        Rule("hot_swap.dropped", "invariant"),
+        Rule("hot_swap.mixed_params_queries", "invariant"),
+        Rule("zero_dropped_or_mixed", "invariant"),
+        Rule("coalesced_vs_unbatched.speedup", "time_ratio"),
+        # the headline throughput claim: request coalescing beats
+        # per-request dispatch ≥ 5x at smoke load (absolute floor — runner
+        # noise may move the margin, never flip the claim)
+        Rule("coalesced_vs_unbatched.speedup", "floor", floor=5.0),
+        # open-loop tails are noisy on shared runners: gate the p99 as an
+        # exact ceiling with generous slack rather than a tight envelope
+        Rule("load_sweep.[].p99_ms", "exact", rel=5.0, abs=50.0),
+    ],
     "BENCH_ft": [
         Rule("n_score", "invariant"),
         Rule("score_chunks", "invariant"),
@@ -132,6 +153,7 @@ DEFAULT_PAIRS = [
     ("BENCH_mctm_fit_smoke_lbfgs.json", "BENCH_mctm_fit_smoke_lbfgs.json"),
     ("BENCH_mctm_fit_smoke_minibatch.json", "BENCH_mctm_fit_smoke_minibatch.json"),
     ("BENCH_ft_smoke.json", "BENCH_ft_smoke.json"),
+    ("BENCH_serve_smoke.json", "BENCH_serve_smoke.json"),
 ]
 
 

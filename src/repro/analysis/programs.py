@@ -620,6 +620,86 @@ register(ProgramSpec(
 ))
 
 
+# ---------------------------------------------------------------------------
+# serving-layer programs (DensityServeEngine hot paths, one bucket each)
+# ---------------------------------------------------------------------------
+
+SERVE_BUCKET = CHUNK        # one padded request bucket
+SERVE_GRID = 512            # conditional-sample inversion grid (engine default)
+# The sampler legitimately holds the (SERVE_GRID, d) inversion-grid basis and
+# the (SERVE_GRID, J) grid values as fixed state; a bucket-stacked basis
+# would be n-scaled and is caught by row_elems < J·d as usual.
+FIXED_SERVE = SERVE_GRID * (DEGREE + 1)
+
+
+def _build_serve_log_density():
+    import jax
+
+    from repro.serve.density import make_log_density_fn
+
+    cfg, scaler = _cfg_scaler()
+    Y, _ = _data()
+    fn = jax.jit(make_log_density_fn(cfg))
+    return fn, (
+        _params(cfg),
+        np.asarray(scaler.low, np.float32),
+        np.asarray(scaler.high, np.float32),
+        np.asarray(scaler.inv_span, np.float32),
+        Y[:SERVE_BUCKET],
+    )
+
+
+register(ProgramSpec(
+    name="serve_log_density_bucket",
+    description="DensityServeEngine batched log-density executable for one "
+                "padded bucket; params AND scaler bounds are jit arguments so "
+                "hot swaps never retrace (serve.density.make_log_density_fn)",
+    build=_build_serve_log_density,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_serve_conditional_sample():
+    import jax
+
+    from repro.serve.density import make_conditional_sample_fn
+
+    cfg, scaler = _cfg_scaler()
+    Y, _ = _data()
+    fn = jax.jit(make_conditional_sample_fn(cfg, n_grid=SERVE_GRID))
+    seeds = np.arange(SERVE_BUCKET, dtype=np.int32)
+    n_obs = np.tile(np.arange(J + 1, dtype=np.int32),
+                    SERVE_BUCKET)[:SERVE_BUCKET]
+    return fn, (
+        _params(cfg),
+        np.asarray(scaler.low, np.float32),
+        np.asarray(scaler.high, np.float32),
+        jax.random.PRNGKey(0),
+        Y[:SERVE_BUCKET],
+        n_obs,
+        seeds,
+    )
+
+
+register(ProgramSpec(
+    name="serve_conditional_sample_bucket",
+    description="DensityServeEngine batched conditional sampler for one "
+                "padded bucket: per-row fold_in randomness (bucket-invariant "
+                "draws), fixed (grid, d) inversion basis — nothing scales "
+                "past the bucket (serve.density.make_conditional_sample_fn)",
+    build=_build_serve_conditional_sample,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=J,
+                                          fixed_elems=max(FIXED_SERVE,
+                                                          FIXED_SHARDED)),
+    donated_outputs=0,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
 def _build_sweep_kernel_interpret():
     import jax
 

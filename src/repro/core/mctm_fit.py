@@ -114,6 +114,7 @@ from repro.utils.compat import shard_map
 __all__ = [
     "MCTMDensityModel",
     "LBFGSState",
+    "LAST_LBFGS_SWEEPS",
     "fit_featurize",
     "fit_density_model",
     "fit_mctm_streaming",
@@ -306,6 +307,7 @@ def fit_density_model(
     microbatches: int = 1,
     batch_size: int | None = None,
     sample_seed: int = 0,
+    sampling: str = "uniform",
     history: int = 10,
     gtol: float = 1e-6,
     max_linesearch: int = 20,
@@ -329,7 +331,11 @@ def fit_density_model(
     norm). ``method="minibatch"`` samples ``batch_size`` weighted rows per
     step via ``data.pipeline.subset_loader`` (seeded by ``sample_seed``; the
     caller sets the model's normalizer so the estimate is unbiased — see
-    ``method_batch_plan``). With ``mesh`` every mode jits its step/oracles
+    ``method_batch_plan``; ``sampling="importance"`` draws rows
+    w-proportionally with the constant 1/p correction instead of uniformly —
+    both modes are unbiased under the same normalizer, importance kills the
+    weight contribution to gradient variance for heavy-tailed coreset
+    weights). With ``mesh`` every mode jits its step/oracles
     with the batch row-sharded and params (plus any optimizer/curvature
     state) replicated; without, a plain jit. ``checkpoint`` is a
     ``CheckpointManager``; ``resume=True`` restarts from its latest step and
@@ -356,7 +362,7 @@ def fit_density_model(
         return _fit_minibatch(
             model, params0, batch, optimizer=optimizer, steps=steps,
             mesh=mesh, microbatches=microbatches, batch_size=batch_size,
-            sample_seed=sample_seed, checkpoint=checkpoint,
+            sample_seed=sample_seed, sampling=sampling, checkpoint=checkpoint,
             ckpt_every=ckpt_every, resume=resume, log_every=log_every,
             label=label,
         )
@@ -524,11 +530,22 @@ class LBFGSState(NamedTuple):
     step: jax.Array       # int32 iteration counter (train-loop contract)
     flat: jax.Array       # (P,) f32 current iterate (ravel_pytree order)
     loss: jax.Array       # f32 objective at ``flat``
+    grad: jax.Array       # (P,) f32 gradient at ``flat`` (fused-oracle carry)
+    have_grad: jax.Array  # bool — loss/grad are valid (skip the opening sweep)
     mem_s: jax.Array      # (history, P) iterate displacements s = x₊ − x
     mem_y: jax.Array      # (history, P) curvature responses y = ∇²f(x₊)·s
     mem_rho: jax.Array    # (history,) 1 / sᵀy
     count: jax.Array      # int32 number of valid pairs (rows [0:count])
     converged: jax.Array  # bool — further steps are no-ops (replay-stable)
+
+
+# Streamed-sweep census of the most recent ``_fit_lbfgs`` call on this
+# thread of execution: {"vg": fused value-and-grad sweeps, "hvp": HVP
+# sweeps, "iters": active (non-latched) iterations}. Diagnostics for the
+# pass-count contract (~2 sweeps/iter with the fused Armijo oracle) —
+# benchmarks and tests read it; concurrent fits (a background serving
+# refit) each overwrite it, so read it right after the fit returns.
+LAST_LBFGS_SWEEPS: dict[str, int] = {"vg": 0, "hvp": 0, "iters": 0}
 
 
 def _two_loop(g, S, Yv, rho, count: int):
@@ -572,24 +589,30 @@ def _fit_lbfgs(
 ):
     """Streaming-HVP L-BFGS: quasi-Newton over the streamed oracles.
 
-    One iteration = one streamed value+grad sweep, ≤ ``max_linesearch``
-    streamed value sweeps (Armijo backtracking), and one streamed HVP sweep
-    forming the curvature pair y = ∇²f(x₊)·s (more robust than gradient
-    differences and exactly one extra pass). The two-loop direction and ring
-    update run host-side in f64 on O(history·P) data; state is stored f32,
-    and every iteration is a pure function of (state, batch), so checkpoint
-    resume replays the straight run bit-for-bit. Once ``gtol`` is reached
-    (or no Armijo point exists along a descent direction — the float-noise
-    plateau), ``converged`` latches and remaining steps are free no-ops.
+    Pass-count contract (~2 streamed sweeps per iteration): the Armijo
+    backtracker evaluates the FUSED value-and-grad oracle at each candidate
+    (a trial costs one sweep either way — the data is read once), and the
+    accepted candidate's (f, ∇f) are carried in the state, so the next
+    iteration opens with no sweep at all. With the typical first-trial
+    acceptance of a quasi-Newton step that is 1 fused sweep + 1 streamed
+    HVP sweep forming the curvature pair y = ∇²f(x₊)·s (more robust than
+    gradient differences and exactly one extra pass) — down from ~3.5
+    (separate value+grad open, value-only trials) per iteration. The
+    two-loop direction and ring update run host-side in f64 on
+    O(history·P) data; state is stored f32, and every iteration is a pure
+    function of (state, batch), so checkpoint resume replays the straight
+    run bit-for-bit (the carried gradient is part of the state). Once
+    ``gtol`` is reached (or no Armijo point exists along a descent
+    direction — the float-noise plateau), ``converged`` latches and
+    remaining steps are free no-ops.
     """
     from jax.flatten_util import ravel_pytree
 
     microbatches = max(1, microbatches)
     batch, _, _ = _pad_batch(batch, microbatches * _num_shards(mesh))
-    value_and_grad, value, hvp = make_streamed_oracles(model, microbatches)
+    value_and_grad, _, hvp = make_streamed_oracles(model, microbatches)
     if mesh is None:
         vg_j = jax.jit(value_and_grad)
-        val_j = jax.jit(value)
         hvp_j = jax.jit(hvp)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
     else:
@@ -602,7 +625,6 @@ def _fit_lbfgs(
         }
         batch_sh = batch_specs(batch_shapes, mesh, default_rules(mesh))
         vg_j = jax.jit(value_and_grad, in_shardings=(param_sh, batch_sh))
-        val_j = jax.jit(value, in_shardings=(param_sh, batch_sh))
         hvp_j = jax.jit(hvp, in_shardings=(param_sh, param_sh, batch_sh))
         batch = {
             k: jax.device_put(jnp.asarray(v), batch_sh[k]) for k, v in batch.items()
@@ -610,16 +632,30 @@ def _fit_lbfgs(
     flat0, unravel = ravel_pytree(params0)
     P = int(flat0.shape[0])
     m = max(1, int(history))
+    sweeps = {"vg": 0, "hvp": 0, "iters": 0}
+
+    def _flat_grad(grads) -> np.ndarray:
+        return np.asarray(
+            ravel_pytree(jax.tree.map(host_gather, grads))[0], np.float64
+        )
 
     def step_fn(state: LBFGSState, batch):
         metrics = {"loss": state.loss, "grad_norm": np.float32(0.0),
                    "step": state.step}
         if bool(state.converged):
             return state._replace(step=state.step + 1), metrics
+        sweeps["iters"] += 1
         x = np.asarray(state.flat, np.float64)
-        loss, grads = vg_j(unravel(jnp.asarray(x, jnp.float32)), batch)
-        g = np.asarray(ravel_pytree(jax.tree.map(host_gather, grads))[0], np.float64)
-        f0 = float(host_gather(loss))
+        if bool(state.have_grad):
+            # fused-oracle carry: (f, ∇f) at x were computed by the sweep
+            # that ACCEPTED x in the previous line search — no opening sweep
+            f0 = float(state.loss)
+            g = np.asarray(state.grad, np.float64)
+        else:
+            loss, grads = vg_j(unravel(jnp.asarray(x, jnp.float32)), batch)
+            sweeps["vg"] += 1
+            g = _flat_grad(grads)
+            f0 = float(host_gather(loss))
         gnorm = float(np.linalg.norm(g))
         metrics = {"loss": np.float32(f0), "grad_norm": np.float32(gnorm),
                    "step": state.step}
@@ -648,11 +684,16 @@ def _fit_lbfgs(
         if not np.isfinite(gd) or gd >= 0.0:  # ring gone stale → steepest descent
             d, gd = -g, -(gnorm * gnorm)
         t = min(1.0, 1.0 / max(float(np.abs(g).sum()), 1e-12)) if count == 0 else 1.0
-        f_t, armijo = f0, False
+        f_t, g_t, armijo = f0, None, False
         for _ in range(max_linesearch):
             cand = unravel(jnp.asarray(x + t * d, jnp.float32))
-            f_t = float(host_gather(val_j(cand, batch)))
+            # fused trial: value AND gradient in the same streamed sweep —
+            # the accepted trial's gradient seeds the next iteration free
+            loss_t, grads_t = vg_j(cand, batch)
+            sweeps["vg"] += 1
+            f_t = float(host_gather(loss_t))
             if np.isfinite(f_t) and f_t <= f0 + 1e-4 * t * gd:
+                g_t = _flat_grad(grads_t)
                 armijo = True
                 break
             t *= 0.5
@@ -668,6 +709,7 @@ def _fit_lbfgs(
             unravel(jnp.asarray(s, jnp.float32)),
             batch,
         )
+        sweeps["hvp"] += 1
         y = np.asarray(ravel_pytree(jax.tree.map(host_gather, hv))[0], np.float64)
         sy = float(s @ y)
         # curvature-pair acceptance (skip, don't damp: the HVP y is exact
@@ -684,6 +726,8 @@ def _fit_lbfgs(
             step=state.step + 1,
             flat=jnp.asarray(x_new, jnp.float32),
             loss=jnp.asarray(f_t, jnp.float32),
+            grad=jnp.asarray(g_t, jnp.float32),
+            have_grad=jnp.asarray(True),
             mem_s=jnp.asarray(S, jnp.float32),
             mem_y=jnp.asarray(Yv, jnp.float32),
             mem_rho=jnp.asarray(rho, jnp.float32),
@@ -696,6 +740,8 @@ def _fit_lbfgs(
             step=jnp.zeros((), jnp.int32),
             flat=jnp.asarray(flat0, jnp.float32),
             loss=jnp.asarray(np.inf, jnp.float32),
+            grad=jnp.zeros((P,), jnp.float32),
+            have_grad=jnp.zeros((), jnp.bool_),
             mem_s=jnp.zeros((m, P), jnp.float32),
             mem_y=jnp.zeros((m, P), jnp.float32),
             mem_rho=jnp.zeros((m,), jnp.float32),
@@ -712,6 +758,8 @@ def _fit_lbfgs(
 
     sup = RunSupervisor(label=label, mesh=mesh)
     state, losses = sup.run(attempt)
+    LAST_LBFGS_SWEEPS.clear()
+    LAST_LBFGS_SWEEPS.update(sweeps)
     params = unravel(jnp.asarray(state.flat))
     return params, np.asarray([float(x) for x in losses], np.float64), state
 
@@ -732,6 +780,7 @@ def _fit_minibatch(
     microbatches: int = 1,
     batch_size: int,
     sample_seed: int = 0,
+    sampling: str = "uniform",
     checkpoint=None,
     ckpt_every: int = 0,
     resume: bool = False,
@@ -740,8 +789,10 @@ def _fit_minibatch(
 ):
     """Sampled-minibatch driver: each step draws ``batch_size`` weighted rows
     through ``data.pipeline.subset_loader`` over the full index set (uniform
-    with replacement — the caller's normalizer makes the weighted-NLL
-    estimate unbiased, see ``method_batch_plan``) and takes one
+    with replacement, or w-proportional with the 1/p correction under
+    ``sampling="importance"`` — the caller's normalizer makes the
+    weighted-NLL estimate unbiased either way, see ``method_batch_plan``)
+    and takes one
     ``make_train_step`` step, sharded exactly like the full-batch path.
     Batches are a pure function of (sample_seed, step), so checkpoint resume
     replays the straight run's sample sequence.
@@ -762,11 +813,11 @@ def _fit_minibatch(
     w = np.asarray(batch["weights"], np.float32)
     b = resolve_batch_size(batch_size, microbatches, mesh)
     data = {k: np.asarray(v) for k, v in batch.items() if k != "weights"}
-    sample_fn = full_data_loader(data, w, b, seed=sample_seed)
+    sample_fn = full_data_loader(data, w, b, seed=sample_seed, sampling=sampling)
     ft = get_ft_config()
     if ft.straggler_deadline_ms > 0:
         backup_fn = full_data_loader(
-            data, w, b, seed=sample_seed + BACKUP_SEED_OFFSET
+            data, w, b, seed=sample_seed + BACKUP_SEED_OFFSET, sampling=sampling
         )
         sample_fn = with_backup_draws(
             sample_fn,
@@ -802,6 +853,7 @@ def fit_mctm_streaming(
     microbatches: int | None = None,
     batch_size: int | None = None,
     sample_seed: int = 0,
+    sampling: str = "uniform",
     history: int = 10,
     gtol: float = 1e-6,
     featurize: Callable | None = None,
@@ -818,7 +870,9 @@ def fit_mctm_streaming(
     (n, J, d) tensor. ``method`` selects the fit mode: ``"adam"`` (any
     first-order ``optimizer``), ``"lbfgs"`` (streaming-HVP quasi-Newton;
     ``steps`` are iterations, early-stopping at ``gtol``), or
-    ``"minibatch"`` (``batch_size`` sampled weighted rows per step).
+    ``"minibatch"`` (``batch_size`` sampled weighted rows per step;
+    ``sampling="importance"`` for w-proportional draws with the 1/p
+    correction).
     """
     Y = np.asarray(Y, np.float32)
     n = int(Y.shape[0])
@@ -852,6 +906,7 @@ def fit_mctm_streaming(
         microbatches=microbatches,
         batch_size=batch_size,
         sample_seed=sample_seed,
+        sampling=sampling,
         history=history,
         gtol=gtol,
         checkpoint=checkpoint,

@@ -31,6 +31,7 @@ __all__ = [
     "ShardedLoader",
     "CoresetSelector",
     "WeightedSubset",
+    "SAMPLING_MODES",
     "subset_loader",
     "full_data_loader",
     "with_backup_draws",
@@ -222,20 +223,56 @@ class CoresetSelector:
         return WeightedSubset(idx.astype(np.int64), w)
 
 
+SAMPLING_MODES = ("uniform", "importance")
+
+
 def subset_loader(
     data: dict[str, np.ndarray],
     subset: WeightedSubset,
     batch: int,
     seed: int = 0,
+    sampling: str = "uniform",
 ) -> Callable[[int], dict[str, np.ndarray]]:
-    """sample_fn over a coreset-selected subset, weights attached per example."""
+    """sample_fn over a coreset-selected subset, weights attached per example.
+
+    ``sampling`` picks the draw distribution; both are unbiased for the same
+    weighted objective, so they are interchangeable under the minibatch
+    fit's ``n/batch`` normalizer:
+
+    * ``"uniform"`` — uniform-with-replacement rows, weights passed through.
+      Heavy-tailed coreset weights then ride into the gradient estimator:
+      a batch's Σw varies with which rows it happened to draw.
+    * ``"importance"`` — rows drawn w-proportionally (pᵢ = wᵢ/Σw) with the
+      1/p correction wᵢ/(size·pᵢ) = Σw/size attached instead. The correction
+      is CONSTANT across rows, so every batch carries exactly the same total
+      weight — the weight contribution to gradient variance is zero, which
+      is the whole point for heavy-tailed weight distributions.
+
+    Each batch stays a pure function of (seed, step) in either mode.
+    """
+    if sampling not in SAMPLING_MODES:
+        raise ValueError(f"sampling must be one of {SAMPLING_MODES}: {sampling!r}")
+    probs = None
+    if sampling == "importance":
+        w = np.maximum(np.asarray(subset.weights, np.float64), 0.0)
+        total = float(w.sum())
+        if total <= 0.0:
+            raise ValueError("importance sampling needs positive total weight")
+        probs = w / total
+        # the constant 1/p-corrected per-row weight Σw/size
+        w_corr = np.full(batch, total / subset.size, np.float32)
 
     def sample_fn(step: int) -> dict[str, np.ndarray]:
         rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
-        pick = rng.integers(0, subset.size, batch)
+        if probs is None:
+            pick = rng.integers(0, subset.size, batch)
+            w_out = subset.weights[pick]
+        else:
+            pick = rng.choice(subset.size, size=batch, replace=True, p=probs)
+            w_out = w_corr
         rows = subset.indices[pick]
         out = {k: v[rows] for k, v in data.items()}
-        out["weights"] = subset.weights[pick]
+        out["weights"] = w_out
         return out
 
     return sample_fn
@@ -246,16 +283,18 @@ def full_data_loader(
     weights: np.ndarray,
     batch: int,
     seed: int = 0,
+    sampling: str = "uniform",
 ) -> Callable[[int], dict[str, np.ndarray]]:
-    """``subset_loader`` over the all-rows subset: uniform-with-replacement
-    weighted draws from the full dataset. Each batch is a pure function of
-    (seed, step) — the minibatch fit mode's resumable sampler, whose
-    Σ w·nll·(n/batch) is an unbiased estimate of the full weighted NLL."""
+    """``subset_loader`` over the all-rows subset: with-replacement weighted
+    draws from the full dataset (``sampling`` as in ``subset_loader``). Each
+    batch is a pure function of (seed, step) — the minibatch fit mode's
+    resumable sampler, whose Σ w·nll·(n/batch) is an unbiased estimate of
+    the full weighted NLL in both sampling modes."""
     n = int(next(iter(data.values())).shape[0])
     subset = WeightedSubset(
         np.arange(n, dtype=np.int64), np.asarray(weights, np.float32)
     )
-    return subset_loader(data, subset, batch, seed)
+    return subset_loader(data, subset, batch, seed, sampling)
 
 
 def with_backup_draws(

@@ -1,0 +1,549 @@
+"""Continuous-batching density-serving engine over a fitted MCTM.
+
+The serving-side counterpart of the fit layer (ROADMAP item 1): the coreset
+makes background *refits* cheap; this engine makes the fitted density
+*usable* under traffic. It adapts the LM engine's slot/queue scheduler
+(``serve.engine``) to density queries, where the two JAX-specific problems
+are different from token decoding:
+
+* **Static shapes under ragged traffic** — queries arrive one row at a
+  time; XLA wants fixed shapes. The engine coalesces queued requests into
+  padded **batch buckets** (powers of two from ``min_bucket`` up to
+  ``max_batch``) and keeps a compiled-executable cache keyed by
+  ``(query kind, bucket, dtype)``. After one warmup pass over the bucket
+  ladder, mixed ``log_density`` / ``sample`` traffic never recompiles: every
+  tick dispatches into an already-compiled executable (the jit dispatch
+  cache is the executable store; the engine's own table is the warmed-key
+  index and the recompile meter — a *trace-time* counter inside each jitted
+  body, so ``compile_count`` moves iff XLA actually retraces).
+
+* **Hot model refresh without draining** — a background refit (streaming
+  L-BFGS on a fresh coreset, ``core.mctm_fit.fit_density_model``) must be
+  published while queries are in flight. The engine double-buffers the model
+  slot: ``publish()`` stages the new ``ModelSlot`` (params + scaler arrays +
+  version) behind a lock; each tick swaps the staged slot in at its START
+  and reads the slot exactly once, so every query in a tick — and therefore
+  every query, since queries are served within exactly one tick — sees
+  exactly one version, never a mix, and none are dropped. Parameters are
+  *arguments* of the compiled executables, not closed-over constants, so a
+  swap costs zero recompiles (shapes and dtypes are fixed by the config).
+
+Query kinds
+-----------
+``log_density`` — batched ``log p(y)`` at the request's point (one jitted
+featurize → ``nll_terms`` evaluation, exactly ``mctm.log_density``).
+
+``sample`` — batched **conditional** sampling: each request carries an
+observed prefix ``y_obs[:n_obs]`` (``n_obs = 0`` → unconditional draw) and a
+per-request ``seed``. The MCTM is triangular (Z = Λ h̃(Y)), so dimension j
+resolves as h̃_j = z_j − Σ_{l<j} λ_{jl} h̃_l with observed dimensions
+substituting their realized h̃ — the same recursion as ``mctm.sample``, made
+conditional. Randomness is ``fold_in(base_key, seed)`` per request, so a
+request's sample is a pure function of (model version, seed) — independent
+of which bucket it lands in, which is what makes coalesced and per-request
+serving agree exactly.
+
+Contract details (bucket policy, swap protocol, refit trigger) are in
+``docs/SERVING.md``; the serving hot paths are registered in the
+``repro.analysis`` auditor (host-free, bucket-bounded materialization,
+f32-clean under x64).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mctm as M
+from repro.core.bernstein import bernstein_design, bernstein_deriv_design, monotone_theta
+
+__all__ = [
+    "QUERY_KINDS",
+    "DensityRequest",
+    "ModelSlot",
+    "DensityServeEngine",
+    "bucket_sizes",
+    "bucket_for",
+    "make_log_density_fn",
+    "make_conditional_sample_fn",
+    "refit_and_publish",
+    "start_background_refit",
+]
+
+QUERY_KINDS = ("log_density", "sample")
+
+
+# ---------------------------------------------------------------------------
+# batched query kernels (pure, params-as-arguments so hot swaps never retrace)
+# ---------------------------------------------------------------------------
+
+
+def make_log_density_fn(cfg: M.MCTMConfig) -> Callable:
+    """Batched ``log p(y)``: ``fn(params, low, high, inv_span, Y)`` → (B,).
+
+    ``low``/``high``/``inv_span`` are the ``DataScaler`` arrays passed as
+    arguments (a refit may republish a new scaler without recompiling).
+    Matches ``mctm.log_density`` exactly: ``inv_span`` arrives precomputed
+    rather than re-derived so the Jacobian scale is bit-identical.
+    """
+
+    def log_density_fn(params, low, high, inv_span, Y):
+        dt = Y.dtype
+        T = (Y - jnp.asarray(low, dt)) / (jnp.asarray(high, dt) - jnp.asarray(low, dt))
+        A = bernstein_design(T, cfg.degree)
+        Ap = bernstein_deriv_design(T, cfg.degree) * jnp.asarray(inv_span, dt)[..., None]
+        return -M.nll_terms(cfg, params, A, Ap)
+
+    return log_density_fn
+
+
+def make_conditional_sample_fn(cfg: M.MCTMConfig, n_grid: int = 512) -> Callable:
+    """Batched conditional sampler:
+    ``fn(params, low, high, base_key, y_obs, n_obs, seeds)`` → (B, J).
+
+    Row i observes ``y_obs[i, :n_obs[i]]`` and samples the remaining
+    dimensions (``n_obs[i] = 0`` → a full draw; ``n_obs[i] = J`` → returns
+    the row unchanged, the padding convention). The triangular recursion
+    h̃_j = z_j − Σ_{l<j} λ_{jl} h̃_l runs over realized h̃ values — observed
+    dimensions contribute their Bernstein transform, sampled ones the value
+    the recursion just produced — and sampled marginals invert on the same
+    ``n_grid`` grid as ``mctm.sample``. Per-row randomness is
+    ``fold_in(base_key, seeds[i])``: bucket-composition independent.
+    """
+    f32 = jnp.float32
+
+    def sample_fn(params, low, high, base_key, y_obs, n_obs, seeds):
+        theta = monotone_theta(params.theta_raw, cfg.min_slope)        # (J, d)
+        Lam = M.lambda_matrix(cfg, params.lam)
+        t_grid = jnp.linspace(f32(0.0), f32(1.0), n_grid, dtype=f32)
+        grid_vals = bernstein_design(t_grid, cfg.degree) @ theta.T     # (G, J)
+        z = jax.vmap(
+            lambda s: jax.random.normal(jax.random.fold_in(base_key, s),
+                                        (cfg.J,), f32)
+        )(seeds)                                                       # (B, J)
+        low = jnp.asarray(low, f32)
+        high = jnp.asarray(high, f32)
+        span = high - low
+        t_obs = jnp.clip((y_obs - low) / span, f32(0.0), f32(1.0))
+        h_obs = jnp.einsum("njd,jd->nj", bernstein_design(t_obs, cfg.degree), theta)
+        observed = jnp.arange(cfg.J, dtype=n_obs.dtype)[None, :] < n_obs[:, None]
+        h_cols: list = []
+        y_cols: list = []
+        for j in range(cfg.J):  # J is small and static — unrolled
+            target = z[:, j]
+            for l in range(j):
+                target = target - Lam[j, l] * h_cols[l]
+            idx = jnp.clip(jnp.searchsorted(grid_vals[:, j], target), 1, n_grid - 1)
+            v0, v1 = grid_vals[idx - 1, j], grid_vals[idx, j]
+            t0, t1 = t_grid[idx - 1], t_grid[idx]
+            frac = jnp.clip(
+                (target - v0) / jnp.maximum(v1 - v0, f32(1e-12)), f32(0.0), f32(1.0)
+            )
+            y_samp = low[j] + (t0 + frac * (t1 - t0)) * span[j]
+            h_cols.append(jnp.where(observed[:, j], h_obs[:, j], target))
+            y_cols.append(jnp.where(observed[:, j], y_obs[:, j], y_samp))
+        return jnp.stack(y_cols, axis=1)
+
+    return sample_fn
+
+
+# ---------------------------------------------------------------------------
+# requests, model slot, bucket policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DensityRequest:
+    """One density query. ``kind`` is ``"log_density"`` (evaluate at ``y``)
+    or ``"sample"`` (observe ``y[:n_obs]``, draw the rest with ``seed``)."""
+
+    uid: int
+    kind: str
+    y: np.ndarray                      # (J,) float32
+    n_obs: int = 0                     # sample: observed prefix length
+    seed: int = 0                      # sample: per-request randomness
+    # filled by the engine:
+    result: np.ndarray | float | None = None
+    version: int = -1                  # model version that served it
+    submitted_s: float = 0.0
+    finished_s: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.finished_s > 0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.submitted_s
+
+
+class ModelSlot(NamedTuple):
+    """One published model: immutable, swapped whole (double buffering)."""
+
+    version: int
+    params: M.MCTMParams
+    low: jax.Array        # (J,) f32 scaler bounds
+    high: jax.Array
+    inv_span: jax.Array   # (J,) f32, precomputed (bit-parity with DataScaler)
+
+
+def bucket_sizes(min_bucket: int, max_batch: int) -> tuple[int, ...]:
+    """The bucket ladder: powers of two from ``min_bucket``, capped at (and
+    always including) ``max_batch``."""
+    sizes = []
+    b = max(1, int(min_bucket))
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(int(max_batch))
+    return tuple(sizes)
+
+
+def bucket_for(m: int, sizes: tuple[int, ...]) -> int:
+    """Smallest bucket holding ``m`` rows (``m`` ≤ max(sizes) by admission)."""
+    for b in sizes:
+        if m <= b:
+            return b
+    return sizes[-1]
+
+
+def _slot_from(version: int, params: M.MCTMParams, scaler) -> ModelSlot:
+    return ModelSlot(
+        version=version,
+        params=jax.tree.map(jnp.asarray, params),
+        low=jnp.asarray(np.asarray(scaler.low, np.float32)),
+        high=jnp.asarray(np.asarray(scaler.high, np.float32)),
+        inv_span=jnp.asarray(np.asarray(scaler.inv_span, np.float32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+class DensityServeEngine:
+    """Continuous-batching server for ``log_density`` / conditional
+    ``sample`` queries over a fitted MCTM (module doc for the contract).
+
+    One ``step()`` = one tick: swap in any staged model, then for each query
+    kind coalesce up to ``max_batch`` queued requests into their padded
+    bucket and dispatch the cached executable. ``publish()`` may be called
+    from any thread (the background refit worker); it never blocks serving.
+    """
+
+    def __init__(
+        self,
+        cfg: M.MCTMConfig,
+        params: M.MCTMParams,
+        scaler,
+        *,
+        max_batch: int = 256,
+        min_bucket: int = 8,
+        n_grid: int = 512,
+        sample_key: jax.Array | None = None,
+    ):
+        if max_batch < 1 or min_bucket < 1:
+            raise ValueError("max_batch and min_bucket must be ≥ 1")
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.buckets = bucket_sizes(min_bucket, max_batch)
+        self.n_grid = int(n_grid)
+        self._base_key = (
+            sample_key if sample_key is not None else jax.random.PRNGKey(0)
+        )
+        self._slot = _slot_from(0, params, scaler)
+        self._staged: ModelSlot | None = None
+        self._lock = threading.Lock()
+        self._version = 0
+        self.queues: dict[str, deque[DensityRequest]] = {
+            k: deque() for k in QUERY_KINDS
+        }
+        self._uid = 0
+        # trace-time compile meter: the increments below run ONLY when jax
+        # retraces (python side effects never execute from the dispatch
+        # cache), so steady-state traffic keeps these counts frozen
+        self.trace_counts = {k: 0 for k in QUERY_KINDS}
+        ld = make_log_density_fn(cfg)
+        sf = make_conditional_sample_fn(cfg, n_grid)
+
+        def _ld(params, low, high, inv_span, Y):
+            self.trace_counts["log_density"] += 1
+            return ld(params, low, high, inv_span, Y)
+
+        def _sf(params, low, high, base_key, y_obs, n_obs, seeds):
+            self.trace_counts["sample"] += 1
+            return sf(params, low, high, base_key, y_obs, n_obs, seeds)
+
+        self._fns = {"log_density": jax.jit(_ld), "sample": jax.jit(_sf)}
+        # warmed (kind, bucket, dtype) keys — the index over jit's executable
+        # cache; a key present here will never trace again for any model slot
+        self._execs: dict[tuple[str, int, str], Callable] = {}
+        self.ticks = 0
+        self.served = {k: 0 for k in QUERY_KINDS}
+        self.bucket_counts: dict[tuple[str, int], int] = {}
+        self.swap_events: list[dict] = []
+        self.tick_times: list[float] = []
+
+    # ------------------------------------------------------------ properties
+
+    @property
+    def compile_count(self) -> int:
+        """Total XLA traces across both query kinds (the recompile meter)."""
+        return sum(self.trace_counts.values())
+
+    @property
+    def version(self) -> int:
+        return self._slot.version
+
+    # -------------------------------------------------------------- admission
+
+    def submit(self, req: DensityRequest) -> DensityRequest:
+        if req.kind not in QUERY_KINDS:
+            raise ValueError(f"unknown query kind {req.kind!r}")
+        req.submitted_s = time.perf_counter()
+        self.queues[req.kind].append(req)
+        return req
+
+    def _next_uid(self) -> int:
+        self._uid += 1
+        return self._uid
+
+    def submit_log_density(self, Y) -> list[DensityRequest]:
+        """Queue one ``log_density`` request per row of ``Y`` (n, J)."""
+        Y = np.atleast_2d(np.asarray(Y, np.float32))
+        return [
+            self.submit(DensityRequest(self._next_uid(), "log_density", y))
+            for y in Y
+        ]
+
+    def submit_sample(
+        self, n: int = 1, *, seeds=None, y_obs=None, n_obs: int = 0
+    ) -> list[DensityRequest]:
+        """Queue ``n`` conditional-sample requests. ``y_obs`` is one (J,)
+        observed row shared by the batch (or (n, J) per-request rows);
+        ``n_obs`` its observed prefix length; ``seeds`` per-request ints
+        (default: sequential from the engine's running uid)."""
+        J = self.cfg.J
+        if y_obs is None:
+            y_obs = np.zeros((n, J), np.float32)
+        else:
+            y_obs = np.asarray(y_obs, np.float32)
+            y_obs = np.broadcast_to(
+                np.atleast_2d(y_obs), (n, J)
+            ).copy()
+        if seeds is None:
+            seeds = [self._uid + 1 + i for i in range(n)]
+        return [
+            self.submit(
+                DensityRequest(
+                    self._next_uid(), "sample", y_obs[i],
+                    n_obs=int(n_obs), seed=int(seeds[i]),
+                )
+            )
+            for i in range(n)
+        ]
+
+    # -------------------------------------------------------------- execution
+
+    def _get_exec(self, kind: str, bucket: int, dtype: str) -> Callable:
+        key = (kind, bucket, dtype)
+        fn = self._execs.get(key)
+        if fn is None:
+            fn = self._fns[kind]
+            self._execs[key] = fn
+        return fn
+
+    def _dispatch(self, slot: ModelSlot, kind: str, reqs: list[DensityRequest]):
+        m = len(reqs)
+        bucket = bucket_for(m, self.buckets)
+        self.bucket_counts[(kind, bucket)] = (
+            self.bucket_counts.get((kind, bucket), 0) + 1
+        )
+        Y = np.empty((bucket, self.cfg.J), np.float32)
+        for i, r in enumerate(reqs):
+            Y[i] = r.y
+        # pad with valid row-0 copies (the fit layer's padding rule: real
+        # data through the featurizer, results sliced away)
+        Y[m:] = Y[0]
+        if kind == "log_density":
+            fn = self._get_exec(kind, bucket, "float32")
+            out = fn(slot.params, slot.low, slot.high, slot.inv_span,
+                     jnp.asarray(Y))
+        else:
+            n_obs = np.full(bucket, self.cfg.J, np.int32)  # pad: fully observed
+            seeds = np.zeros(bucket, np.int32)
+            for i, r in enumerate(reqs):
+                n_obs[i] = r.n_obs
+                seeds[i] = r.seed
+            fn = self._get_exec(kind, bucket, "float32")
+            out = fn(slot.params, slot.low, slot.high, self._base_key,
+                     jnp.asarray(Y), jnp.asarray(n_obs), jnp.asarray(seeds))
+        out = np.asarray(out)
+        now = time.perf_counter()
+        for i, r in enumerate(reqs):
+            r.result = float(out[i]) if kind == "log_density" else out[i]
+            r.version = slot.version
+            r.finished_s = now
+        self.served[kind] += m
+
+    def step(self) -> int:
+        """One tick: swap in a staged model, serve ≤ one bucket per kind.
+        Returns the number of requests completed this tick."""
+        t0 = time.perf_counter()
+        with self._lock:
+            if self._staged is not None:
+                self._slot = self._staged
+                self._staged = None
+                self.swap_events[-1]["visible_s"] = time.perf_counter()
+        slot = self._slot  # read ONCE per tick: all queries see one version
+        done = 0
+        for kind in QUERY_KINDS:
+            q = self.queues[kind]
+            if not q:
+                continue
+            reqs = [q.popleft() for _ in range(min(len(q), self.max_batch))]
+            self._dispatch(slot, kind, reqs)
+            done += len(reqs)
+        self.ticks += 1
+        self.tick_times.append(time.perf_counter() - t0)
+        return done
+
+    def run_until_drained(self, max_ticks: int = 1_000_000) -> int:
+        done = 0
+        while any(self.queues.values()) and max_ticks > 0:
+            done += self.step()
+            max_ticks -= 1
+        return done
+
+    def warmup(self, kinds=QUERY_KINDS, buckets=None) -> int:
+        """Compile the bucket ladder up front (dummy traffic through the real
+        dispatch path) so steady-state serving never traces. Returns the
+        number of executables compiled."""
+        before = self.compile_count
+        slot = self._slot
+        for kind in kinds:
+            for b in buckets or self.buckets:
+                reqs = [
+                    DensityRequest(0, kind, np.zeros(self.cfg.J, np.float32),
+                                   n_obs=self.cfg.J)
+                    for _ in range(b)
+                ]
+                self._dispatch(slot, kind, reqs)
+        # warmup traffic is not served traffic
+        for kind in kinds:
+            self.served[kind] = 0
+        self.bucket_counts.clear()
+        return self.compile_count - before
+
+    # -------------------------------------------------------------- hot swap
+
+    def publish(self, params: M.MCTMParams, scaler=None) -> int:
+        """Stage a new model for the next tick (thread-safe, non-blocking).
+
+        Double-buffer protocol: the staged slot becomes visible at the START
+        of the next tick; queries of the in-flight tick finish on the old
+        slot. Re-publishing before the swap replaces the staged slot (last
+        writer wins — both are complete models). Returns the new version.
+        """
+        with self._lock:
+            self._version += 1
+            scaler = scaler if scaler is not None else _ScalerView(
+                np.asarray(self._slot.low), np.asarray(self._slot.high)
+            )
+            self._staged = _slot_from(self._version, params, scaler)
+            self.swap_events.append({
+                "version": self._version,
+                "published_s": time.perf_counter(),
+                "visible_s": None,
+            })
+            return self._version
+
+    def stats(self) -> dict:
+        ticks = np.asarray(self.tick_times, np.float64)
+        return {
+            "ticks": self.ticks,
+            "served": dict(self.served),
+            "compile_count": self.compile_count,
+            "trace_counts": dict(self.trace_counts),
+            "buckets": {f"{k}/{b}": c for (k, b), c in self.bucket_counts.items()},
+            "version": self.version,
+            "tick_p50_ms": float(np.percentile(ticks, 50) * 1e3) if ticks.size else 0.0,
+            "tick_p99_ms": float(np.percentile(ticks, 99) * 1e3) if ticks.size else 0.0,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class _ScalerView:
+    """DataScaler-shaped view over published bounds (publish() without a new
+    scaler keeps the current one)."""
+
+    low: np.ndarray
+    high: np.ndarray
+
+    @property
+    def inv_span(self) -> np.ndarray:
+        return 1.0 / (self.high - self.low)
+
+
+# ---------------------------------------------------------------------------
+# background refit → publish (the coreset economics loop)
+# ---------------------------------------------------------------------------
+
+
+def refit_and_publish(
+    engine: DensityServeEngine,
+    scaler,
+    Y,
+    k: int,
+    *,
+    key: jax.Array,
+    method: str = "lbfgs",
+    steps: int = 60,
+    lr: float = 5e-2,
+    sketch_size: int = 0,
+    chunk_size: int | None = None,
+) -> int:
+    """One refresh cycle: fresh coreset on ``Y`` → streamed fit → publish.
+
+    This is the paper's economics made operational: the coreset build + fit
+    is the cheap background path (vs refitting on all of ``Y``), and the
+    publish is atomic w.r.t. serving. Returns the published version.
+    Runs synchronously — wrap with :func:`start_background_refit` to overlap
+    with serving.
+    """
+    from repro.core.coreset import build_coreset
+    from repro.core.mctm_fit import fit_mctm_streaming
+    from repro.core.scoring import DEFAULT_CHUNK
+
+    k_build, k_fit = jax.random.split(key)
+    cs = build_coreset(
+        engine.cfg, scaler, Y, k, "l2-hull", key=k_build,
+        sketch_size=sketch_size,
+        chunk_size=DEFAULT_CHUNK if chunk_size is None else chunk_size,
+    )
+    fit = fit_mctm_streaming(
+        engine.cfg, scaler, np.asarray(Y)[cs.indices],
+        weights=np.asarray(cs.weights, np.float32),
+        key=k_fit, steps=steps, lr=lr, method=method,
+        chunk_size=DEFAULT_CHUNK if chunk_size is None else chunk_size,
+    )
+    return engine.publish(fit.params, scaler)
+
+
+def start_background_refit(engine: DensityServeEngine, *args, **kwargs):
+    """Run :func:`refit_and_publish` on a daemon thread (serving continues on
+    the caller's thread; the publish lands between ticks). Returns the
+    started thread; ``join()`` it to wait for the publish."""
+    th = threading.Thread(
+        target=refit_and_publish, args=(engine, *args), kwargs=kwargs,
+        daemon=True,
+    )
+    th.start()
+    return th

@@ -417,3 +417,32 @@ def test_likelihood_ratio_shift_normalization():
     # negative reference NLL: one-plus-relative-excess reading
     assert F.likelihood_ratio(-90.0, -100.0) == pytest.approx(1.1)
     assert F.likelihood_ratio(-100.0, -100.0) == pytest.approx(1.0)
+
+
+def test_lbfgs_fused_linesearch_two_sweeps_per_iter():
+    """The fused value-and-grad Armijo oracle + gradient carry holds the
+    streamed pass count at ~2 sweeps/iteration (1 fused line-search sweep +
+    1 HVP), down from ~3.5 with a separate opening value+grad sweep and
+    value-only trials."""
+    from repro.core.mctm_fit import LAST_LBFGS_SWEEPS
+
+    rng = np.random.default_rng(0)
+    Y = rng.normal(size=(2000, 2)).astype(np.float32)
+    scaler = DataScaler.fit(Y)
+    cfg = M.MCTMConfig(J=2, degree=5)
+    fit = F.fit_mctm_streaming(
+        cfg, scaler, Y, key=jax.random.PRNGKey(1), steps=40,
+        method="lbfgs", chunk_size=512,
+    )
+    assert np.isfinite(fit.final_nll)
+    s = dict(LAST_LBFGS_SWEEPS)
+    assert s["iters"] > 10
+    # exactly one opening value+grad sweep for the whole run (first
+    # iteration only — after that the accepted trial's gradient is carried)
+    # plus one fused sweep per accepted/rejected trial; one HVP per accept
+    assert s["hvp"] <= s["iters"]
+    sweeps_per_iter = (s["vg"] + s["hvp"]) / s["iters"]
+    assert sweeps_per_iter <= 2.5, (s, sweeps_per_iter)
+    # the opening-sweep elimination is real: vg sweeps ≈ iters (+1 opener
+    # + occasional extra backtracking trials), NOT 2·iters
+    assert s["vg"] <= 1.5 * s["iters"] + 1, s

@@ -1,0 +1,215 @@
+"""DensityServeEngine: coalescing correctness, executable-cache stability,
+hot-swap atomicity (ISSUE 9 acceptance tests)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.serve.density import (
+    DensityServeEngine,
+    bucket_for,
+    bucket_sizes,
+)
+
+CFG = M.MCTMConfig(J=2, degree=5)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    key = jax.random.PRNGKey(0)
+    Y = np.array(jax.random.normal(key, (400, CFG.J)), np.float32)
+    Y[:, 1] = 0.5 * Y[:, 0] + 0.8 * Y[:, 1]  # correlated dims
+    scaler = DataScaler.fit(Y)
+    params = M.init_params(key, CFG)
+    return params, scaler, Y
+
+
+def test_bucket_policy():
+    assert bucket_sizes(8, 256) == (8, 16, 32, 64, 128, 256)
+    assert bucket_sizes(8, 100) == (8, 16, 32, 64, 100)
+    assert bucket_sizes(1, 1) == (1,)
+    sizes = bucket_sizes(8, 256)
+    assert bucket_for(1, sizes) == 8
+    assert bucket_for(8, sizes) == 8
+    assert bucket_for(9, sizes) == 16
+    assert bucket_for(256, sizes) == 256
+
+
+def test_coalesced_log_density_matches_per_request(fitted):
+    params, scaler, Y = fitted
+    # ragged: 37 queries through max_batch=32 → one full bucket + a 5-row
+    # tail padded up to the 8-bucket (zero-padded slots exercised)
+    eng = DensityServeEngine(CFG, params, scaler, max_batch=32, min_bucket=8)
+    reqs = eng.submit_log_density(Y[:37])
+    eng.run_until_drained()
+    got = np.array([r.result for r in reqs])
+
+    ref = np.asarray(M.log_density(CFG, params, scaler, jnp.asarray(Y[:37])))
+    np.testing.assert_allclose(got, ref, atol=1e-6, rtol=1e-6)
+
+    # per-request serving (bucket 1) agrees with the coalesced answers
+    one = DensityServeEngine(CFG, params, scaler, max_batch=1, min_bucket=1)
+    r1 = one.submit_log_density(Y[:5])
+    one.run_until_drained()
+    np.testing.assert_allclose(
+        np.array([r.result for r in r1]), got[:5], atol=1e-6, rtol=1e-6
+    )
+
+
+def test_coalesced_sample_matches_per_request_exactly(fitted):
+    params, scaler, Y = fitted
+    key = jax.random.PRNGKey(3)
+    seeds = [11, 7, 23, 5, 42, 8, 19]  # ragged count → padded bucket
+    big = DensityServeEngine(CFG, params, scaler, max_batch=64, min_bucket=8,
+                             sample_key=key)
+    rb = big.submit_sample(len(seeds), seeds=seeds, y_obs=Y[0], n_obs=1)
+    big.run_until_drained()
+    batched = np.stack([r.result for r in rb])
+
+    one = DensityServeEngine(CFG, params, scaler, max_batch=1, min_bucket=1,
+                             sample_key=key)
+    for i, s in enumerate(seeds):
+        r = one.submit_sample(1, seeds=[s], y_obs=Y[0], n_obs=1)
+        one.run_until_drained()
+        # per-request randomness is fold_in(base_key, seed): EXACT agreement
+        # regardless of bucket composition
+        np.testing.assert_array_equal(r[0].result, batched[i])
+
+
+def test_conditional_sample_contract(fitted):
+    params, scaler, Y = fitted
+    eng = DensityServeEngine(CFG, params, scaler, max_batch=16, min_bucket=4)
+    # fully observed → the row comes back unchanged (the padding convention)
+    r = eng.submit_sample(3, y_obs=Y[:3], n_obs=CFG.J, seeds=[1, 2, 3])
+    eng.run_until_drained()
+    np.testing.assert_allclose(np.stack([q.result for q in r]), Y[:3], atol=1e-6)
+    # observed prefix is pinned, sampled dims vary with the seed
+    r = eng.submit_sample(4, y_obs=Y[0], n_obs=1, seeds=[1, 2, 3, 4])
+    eng.run_until_drained()
+    out = np.stack([q.result for q in r])
+    np.testing.assert_allclose(out[:, 0], Y[0, 0], atol=1e-6)
+    assert len(np.unique(out[:, 1])) == 4
+    # unconditional draws land inside the scaler's support
+    r = eng.submit_sample(16, seeds=list(range(16)))
+    eng.run_until_drained()
+    out = np.stack([q.result for q in r])
+    assert np.all(out >= scaler.low - 1e-5) and np.all(out <= scaler.high + 1e-5)
+
+
+def test_steady_state_zero_recompiles(fitted):
+    params, scaler, Y = fitted
+    eng = DensityServeEngine(CFG, params, scaler, max_batch=32, min_bucket=8)
+    warmed = eng.warmup()
+    assert warmed == eng.compile_count == 2 * len(eng.buckets)
+    # mixed ragged traffic over every bucket size, plus a hot swap: the
+    # executable cache must absorb all of it without a single retrace
+    rng = np.random.default_rng(0)
+    for burst in (1, 5, 8, 9, 17, 32, 3):
+        eng.submit_log_density(Y[rng.integers(0, len(Y), burst)])
+        eng.submit_sample(burst, seeds=rng.integers(0, 1 << 30, burst).tolist())
+        eng.step()
+    eng.publish(M.init_params(jax.random.PRNGKey(9), CFG))
+    eng.submit_log_density(Y[:10])
+    eng.run_until_drained()
+    assert eng.compile_count == warmed
+    assert eng.stats()["compile_count"] == warmed
+
+
+def test_hot_swap_atomicity_in_flight(fitted):
+    """Queries in flight across publishes see exactly old-or-new params —
+    every answer matches its recorded version's reference, never a blend."""
+    params0, scaler, Y = fitted
+    # strongly separated models: each version shifts the marginal transform
+    # and the copula coupling, so the served answers identify their version
+    all_params = [params0] + [
+        M.MCTMParams(
+            theta_raw=params0.theta_raw + 0.5 * v,
+            lam=params0.lam + 0.4 * v,
+        )
+        for v in range(1, 4)
+    ]
+    eng = DensityServeEngine(CFG, params0, scaler, max_batch=16, min_bucket=4)
+    eng.warmup()
+    refs = [
+        np.asarray(M.log_density(CFG, p, scaler, jnp.asarray(Y[:200])))
+        for p in all_params
+    ]
+
+    stop = threading.Event()
+
+    def publisher():
+        v = 1
+        while not stop.is_set() and v < len(all_params):
+            eng.publish(all_params[v])
+            v += 1
+
+    reqs = []
+    th = threading.Thread(target=publisher)
+    th.start()
+    i = 0
+    while i < 200:
+        burst = min(7, 200 - i)
+        reqs += eng.submit_log_density(Y[i:i + burst])
+        i += burst
+        eng.step()
+    eng.run_until_drained()
+    stop.set()
+    th.join()
+
+    assert all(r.done for r in reqs), "no dropped queries across publishes"
+    versions = {r.version for r in reqs}
+    assert versions <= set(range(len(all_params))) and len(versions) >= 2
+    # versions must be distinguishable on average for the check to bite
+    for v in range(1, len(all_params)):
+        assert np.abs(refs[v] - refs[0]).mean() > 1e-2
+    for j, r in enumerate(reqs):
+        dists = [abs(r.result - refs[v][j]) for v in range(len(all_params))]
+        assert dists[r.version] < 1e-5, (
+            f"query {j} does not match its recorded version {r.version}"
+        )
+        assert int(np.argmin(dists)) == r.version, (
+            f"query {j} answered by params of a different version than recorded"
+        )
+
+
+def test_tick_serves_single_version(fitted):
+    """All queries coalesced into one tick share one model version even when
+    a publish lands mid-queue."""
+    params0, scaler, Y = fitted
+    eng = DensityServeEngine(CFG, params0, scaler, max_batch=64, min_bucket=8)
+    eng.warmup()
+    reqs = eng.submit_log_density(Y[:30])
+    eng.publish(M.init_params(jax.random.PRNGKey(5), CFG))
+    reqs += eng.submit_log_density(Y[30:60])
+    eng.step()  # ONE tick: the staged slot swaps in at tick start
+    assert all(r.done for r in reqs)
+    assert len({r.version for r in reqs}) == 1
+
+
+def test_publish_from_background_thread_never_blocks_serving(fitted):
+    params0, scaler, Y = fitted
+    eng = DensityServeEngine(CFG, params0, scaler, max_batch=16, min_bucket=4)
+    eng.warmup()
+    done = threading.Event()
+
+    def worker():
+        for v in range(3):
+            eng.publish(M.init_params(jax.random.PRNGKey(v), CFG))
+        done.set()
+
+    th = threading.Thread(target=worker)
+    th.start()
+    for i in range(50):
+        eng.submit_log_density(Y[i % len(Y)][None])
+        eng.step()
+    th.join(timeout=10)
+    assert done.is_set()
+    eng.run_until_drained()
+    assert eng.version == 3
+    stalls = [e["visible_s"] - e["published_s"]
+              for e in eng.swap_events if e["visible_s"] is not None]
+    assert stalls and all(s < 5.0 for s in stalls)
