@@ -1,0 +1,243 @@
+"""Streaming-maintenance bench → BENCH_stream.json.
+
+Measures what the streaming layer (ROADMAP item 2) claims and gates it:
+
+* ``maintain_vs_rebuild.speedup`` — the maintained coreset's median
+  per-window push vs rebuilding a batch coreset over the full seen prefix
+  at the final window (the cost the maintainer amortizes away). Floor-gated
+  ≥ 1.0: if maintenance is not strictly cheaper than rebuilding, the
+  streaming layer has no reason to exist.
+* ``policy_checks`` — sliding-window eviction drops expired buckets
+  exactly; decayed weights match the closed-form geometric sum
+  n·(1−γᵀ)/(1−γ); ``result()`` is idempotent.
+* ``resume_bit_identical`` — a stream killed mid-window (injected failure)
+  and resumed from its window checkpoint must reproduce the uninterrupted
+  final coreset bit-for-bit.
+* ``drift`` — the compact in-process drill: injected shift detected within
+  the latency budget, background refit published, post-refit measured ε̂
+  back inside the band, zero dropped/mixed probe queries.
+
+Run: ``PYTHONPATH=src:. python benchmarks/stream_bench.py --smoke``
+The script itself exits 1 on any streaming-contract violation; CI
+additionally diffs the record against ``benchmarks/baselines/`` via
+``scripts/bench_gate.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def stream_bench(smoke: bool = False, out_path: str | None = None) -> dict:
+    from repro.core import mctm as M
+    from repro.core.bernstein import DataScaler
+    from repro.core.coreset import build_coreset
+    from repro.core.mctm_fit import fit_mctm_streaming
+    from repro.core.streaming import DriftDetector, StreamingCoresetMaintainer
+    from repro.ft.config import get_ft_config
+    from repro.ft.failure import FailureSimulator, InjectedFailure
+    from repro.serve.density import DensityServeEngine
+
+    if smoke:
+        window, n_windows = 512, 12
+        k, sketch, degree, fit_steps = 96, 32, 4, 40
+    else:
+        window, n_windows = 4096, 24
+        k, sketch, degree, fit_steps = 256, 64, 6, 60
+    n = window * n_windows
+    eps = 0.1
+
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(n, 2)).astype(np.float32)
+    cfg = M.MCTMConfig(J=2, degree=degree)
+    scaler = DataScaler.fit(base)
+    key = jax.random.PRNGKey(0)
+    windows = [base[i * window : (i + 1) * window] for i in range(n_windows)]
+
+    # ---- maintain vs rebuild: per-window push cost vs full-prefix rebuild
+    kw = dict(policy="insertion", sketch_size=sketch)
+    m = StreamingCoresetMaintainer(cfg, scaler, k, key, **kw)
+    m.push(windows[0])  # warm the jit caches out of the timed pushes
+    push_times = []
+    for w in windows[1:]:
+        t0 = time.perf_counter()
+        m.push(w)
+        push_times.append(time.perf_counter() - t0)
+    t_push = float(np.median(push_times))
+    t0 = time.perf_counter()
+    build_coreset(cfg, scaler, base, k, "l2-hull",
+                  key=jax.random.PRNGKey(3), sketch_size=sketch)
+    t_rebuild = time.perf_counter() - t0
+    speedup = t_rebuild / max(t_push, 1e-9)
+
+    # ---- policy checks
+    W = 3
+    ms = StreamingCoresetMaintainer(
+        cfg, scaler, k, key, policy="sliding", window=W, sketch_size=sketch
+    )
+    for w in windows[:6]:
+        ms.push(w)
+    sliding_ok = ms.live_births() == list(range(6 - W, 6))
+    r1, r2 = ms.result(), ms.result()
+    idempotent = bool(
+        np.array_equal(r1.Y, r2.Y) and np.array_equal(r1.weights, r2.weights)
+    )
+    gamma, T = 0.7, 6
+    md = StreamingCoresetMaintainer(
+        cfg, scaler, k, key, policy="decayed", decay=gamma
+    )
+    for w in windows[:T]:
+        md.push(w)
+    expect = window * (1 - gamma**T) / (1 - gamma)
+    decay_rel_err = abs(md.total_weight() - expect) / expect
+    decayed_ok = bool(decay_rel_err < 1e-4)
+
+    # ---- kill mid-stream, resume from the window checkpoint, compare bits
+    ft = get_ft_config()
+    n_resume = 6
+    ref = StreamingCoresetMaintainer(cfg, scaler, k, key, **kw)
+    for w in windows[:n_resume]:
+        ref.push(w)
+    rr = ref.result()
+    with tempfile.TemporaryDirectory() as d:
+        ft.simulator = FailureSimulator().inject("streaming", 4)
+        try:
+            interrupts = 0
+            mi = StreamingCoresetMaintainer(cfg, scaler, k, key, ckpt_dir=d, **kw)
+            done = 0
+            while done < n_resume:
+                try:
+                    mi.push(windows[done])
+                    done = mi.windows_done
+                except InjectedFailure:
+                    interrupts += 1
+                    mi = StreamingCoresetMaintainer(
+                        cfg, scaler, k, key, ckpt_dir=d, **kw
+                    )
+                    done = mi.resume()
+        finally:
+            ft.simulator = None
+        ri = mi.result()
+    resume_bit_identical = bool(
+        interrupts >= 1
+        and np.array_equal(np.asarray(rr.Y), np.asarray(ri.Y))
+        and np.array_equal(np.asarray(rr.weights), np.asarray(ri.weights))
+    )
+
+    # ---- compact drift drill: shift → detect → refit → band recovery
+    drift_rows = (base[: 6 * window] * 1.6 + 2.0 * base.std(axis=0)).astype(
+        np.float32
+    )
+    dscaler = DataScaler.fit(np.concatenate([base, drift_rows]))
+    fit0 = fit_mctm_streaming(
+        cfg, dscaler, base[: 2 * window], key=jax.random.PRNGKey(1),
+        steps=fit_steps, method="lbfgs",
+    )
+    engine = DensityServeEngine(cfg, fit0.params, dscaler, max_batch=32)
+    engine.warmup(kinds=("log_density",))
+    det = DriftDetector(eps=eps, alpha=0.5, min_windows=2)
+    mdrill = StreamingCoresetMaintainer(
+        cfg, dscaler, k, jax.random.PRNGKey(2), policy="sliding", window=4,
+        sketch_size=sketch, serve_engine=engine, detector=det,
+        refit_kwargs=dict(steps=fit_steps, method="lbfgs"),
+    )
+    mixed = dropped = 0
+    pre, post = 4, 6
+    for i in range(pre + post):
+        rows = (
+            windows[2 + i][: window]
+            if i < pre
+            else drift_rows[(i - pre) * window : (i - pre + 1) * window]
+        )
+        mdrill.push(rows)
+        if mdrill.drift_log[-1]["triggered"]:
+            while engine.refit_in_flight:
+                time.sleep(0.05)
+        reqs = engine.submit_log_density(rows[:8])
+        engine.run_until_drained()
+        dropped += sum(0 if r.done else 1 for r in reqs)
+        if len({r.version for r in reqs if r.done}) > 1:
+            mixed += 1
+    dlog = mdrill.drift_log
+    fired = [e for e in dlog[pre:] if e["fired"]]
+    detected = bool(fired)
+    latency = (fired[0]["window"] - pre + 1) if fired else n_windows
+    post_log = [e for e in dlog if e["version"] >= 1]
+    post_eps = float(post_log[-1]["eps_hat"]) if post_log else float("inf")
+    post_in_band = bool(post_log and post_eps <= eps)
+
+    rec = {
+        "smoke": bool(smoke),
+        "n": n,
+        "window": window,
+        "n_windows": n_windows,
+        "k": k,
+        "degree": degree,
+        "sketch_size": sketch,
+        "maintain_vs_rebuild": {
+            "t_push_median_s": t_push,
+            "t_rebuild_s": t_rebuild,
+            "speedup": speedup,
+        },
+        "policy_checks": {
+            "sliding_evicts_expired": bool(sliding_ok),
+            "decayed_weight_matches_closed_form": decayed_ok,
+            "decayed_weight_rel_err": float(decay_rel_err),
+            "result_idempotent": idempotent,
+        },
+        "stream_interrupts": interrupts,
+        "resume_bit_identical": resume_bit_identical,
+        "drift": {
+            "eps": eps,
+            "detected": detected,
+            "detection_latency_windows": int(latency),
+            "triggers": int(mdrill.triggered),
+            "post_refit_eps_hat": post_eps,
+            "post_refit_in_band": post_in_band,
+            "mixed_version_batches": int(mixed),
+            "dropped_queries": int(dropped),
+        },
+    }
+    if out_path is None:
+        if smoke:
+            from benchmarks.common import bench_dir
+
+            out_path = os.path.join(bench_dir("bench"), "BENCH_stream_smoke.json")
+        else:
+            out_path = os.path.join(REPO_ROOT, "BENCH_stream.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[stream_bench] maintain_vs_rebuild {speedup:.1f}x  "
+          f"sliding_ok {sliding_ok}  decayed_ok {decayed_ok}  "
+          f"resume_bit_identical {resume_bit_identical}", flush=True)
+    print(f"[stream_bench] drift: detected {detected} "
+          f"latency {latency}w  post_eps_hat {post_eps:.4f} "
+          f"in_band {post_in_band}  mixed {mixed} dropped {dropped}", flush=True)
+    print(f"[stream_bench] wrote {out_path}", flush=True)
+    if not (sliding_ok and decayed_ok and idempotent and resume_bit_identical
+            and detected and post_in_band and mixed == 0 and dropped == 0
+            and speedup >= 1.0):
+        raise SystemExit("[stream_bench] streaming contract violated")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes — seconds, for CI")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    stream_bench(smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

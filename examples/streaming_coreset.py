@@ -1,71 +1,183 @@
-"""Streaming scenario: maintain an MCTM coreset over an insertion stream with
-Merge & Reduce (paper §4 'Data streams and distributed data'), fit, and keep
-a live serving slot fresh — each re-fit on the maintained coreset publishes
-atomically into a ``DensityServeEngine`` while it answers queries (the
-bridge to the serving layer: stream → coreset → refit → publish).
+"""Streaming drill: drift-triggered coreset maintenance feeding a live server.
 
-    PYTHONPATH=src python examples/streaming_coreset.py
+The production stream loop (ROADMAP item 2, `docs/STREAMING.md`): a
+``StreamingCoresetMaintainer`` consumes windows, a ``DriftDetector`` watches
+each window's NLL under the *live serving model* (fused streamed evaluator),
+and a fired alert calls ``DensityServeEngine.start_background_refit`` on the
+maintained coreset — the publish lands atomically between serving ticks
+while probe traffic keeps flowing.
+
+    PYTHONPATH=src python examples/streaming_coreset.py --smoke --inject-drift
+
+Exit status is the contract (the CI drill): 0 iff every check below holds —
+  * pre-drift windows stay inside the (1±eps) band with zero alerts;
+  * with ``--inject-drift``: the injected shift is detected within
+    ``DETECT_BUDGET`` windows of onset, a background refit publishes, and
+    the measured post-refit ε̂ re-enters the band;
+  * every probe query is answered by exactly one model version (no mixed
+    or dropped queries across the hot swaps).
+``--no-trigger`` disables the automatic refit trigger and is the teeth mode:
+the band then never recovers, the checks fail, and the script exits 1 — CI
+asserts that failure the same way the analysis gate asserts its seeded
+violation.
 """
+import argparse
+import sys
 import time
 
 import jax
 import numpy as np
 
-from repro.core import DataScaler, MCTMConfig, MergeReduceCoreset, basis_features, fit_mctm, nll
+from repro.core import DataScaler, MCTMConfig
 from repro.core.mctm_fit import fit_mctm_streaming
+from repro.core.streaming import DriftDetector, StreamingCoresetMaintainer
 from repro.data import generate
 from repro.serve import DensityServeEngine
 
+DETECT_BUDGET = 3      # windows from drift onset to first alert
+RECOVER_BUDGET = 6     # windows from first trigger to band re-entry
 
-def main():
-    n, chunk, k = 100_000, 4096, 256
-    Y = generate("hourglass", n, seed=0)
-    cfg = MCTMConfig(J=2, degree=6)
-    scaler = DataScaler.fit(Y[:chunk])  # scaler from the first chunk (stream!)
 
-    mr = MergeReduceCoreset(cfg, scaler, k=k, key=jax.random.PRNGKey(0))
-    engine = None
-    refits = 0
+def drifted(Y: np.ndarray, seed: int) -> np.ndarray:
+    """The injected shift: rescale + translate the DGP draw — a mean/cov
+    break the pre-drift model cannot explain."""
+    rng = np.random.default_rng(seed)
+    span = Y.std(axis=0)
+    return (Y * 1.6 + 2.0 * span + rng.normal(scale=0.1 * span, size=Y.shape)).astype(
+        np.float32
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--inject-drift", action="store_true",
+                    help="switch the stream to a shifted DGP mid-run")
+    ap.add_argument("--no-trigger", action="store_true",
+                    help="teeth mode: detector fires but never triggers a "
+                         "refit — the drill MUST exit 1")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        window, pre_windows, drift_windows = 256, 6, 8
+        k, sketch, degree, fit_steps = 96, 32, 4, 40
+    else:
+        window, pre_windows, drift_windows = 1024, 10, 12
+        k, sketch, degree, fit_steps = 256, 64, 6, 60
+    eps = 0.1
+
+    n_pre = window * (pre_windows + 2)  # +2 windows fit the initial model
+    Y_pre = np.asarray(generate("hourglass", n_pre, seed=0), np.float32)
+    Y_drift = drifted(
+        np.asarray(generate("hourglass", window * drift_windows, seed=1), np.float32),
+        seed=2,
+    )
+    cfg = MCTMConfig(J=2, degree=degree)
+    # scaler covers both regimes (a production scaler is set for the data
+    # domain, not the current mode); the MODEL only ever sees its fit data
+    scaler = DataScaler.fit(np.concatenate([Y_pre, Y_drift]))
+
     t0 = time.time()
-    for i in range(0, n, chunk):
-        mr.push(Y[i : i + chunk])
-        # periodic refresh: refit on the maintained coreset and publish to
-        # the serving slot without interrupting its traffic
-        if (i // chunk) % 8 == 7:
-            res = mr.result()
-            fit = fit_mctm_streaming(
-                cfg, scaler, res.Y,
-                weights=np.asarray(res.weights, np.float32),
-                steps=60, method="lbfgs",
+    fit0 = fit_mctm_streaming(
+        cfg, scaler, Y_pre[: 2 * window], key=jax.random.PRNGKey(1),
+        steps=fit_steps, method="lbfgs",
+    )
+    engine = DensityServeEngine(cfg, fit0.params, scaler, max_batch=64)
+    engine.warmup(kinds=("log_density",))
+    det = DriftDetector(eps=eps, alpha=0.5, min_windows=2)
+    maintainer = StreamingCoresetMaintainer(
+        cfg, scaler, k, jax.random.PRNGKey(2),
+        policy="sliding", window=4, sketch_size=sketch,
+        serve_engine=engine, detector=det,
+        auto_trigger=not args.no_trigger,
+        refit_kwargs=dict(steps=fit_steps, method="lbfgs"),
+    )
+
+    mixed = dropped = probes = 0
+
+    def probe_and_tick(rows: np.ndarray) -> None:
+        """Serve probe traffic through any hot swap; count contract breaks."""
+        nonlocal mixed, dropped, probes
+        reqs = engine.submit_log_density(rows[:16])
+        engine.run_until_drained()
+        probes += len(reqs)
+        versions = {r.version for r in reqs if r.done}
+        dropped += sum(0 if r.done else 1 for r in reqs)
+        if len(versions) > 1:
+            mixed += 1
+
+    stream = [
+        Y_pre[2 * window + i * window : 2 * window + (i + 1) * window]
+        for i in range(pre_windows)
+    ]
+    drift_onset = len(stream)
+    if args.inject_drift:
+        stream += [Y_drift[i * window : (i + 1) * window] for i in range(drift_windows)]
+
+    for widx, rows in enumerate(stream):
+        maintainer.push(rows)
+        # a fired trigger refits in the background; wait for the publish so
+        # the NEXT window re-anchors (CI determinism — production would keep
+        # streaming and converge a window or two later)
+        if maintainer.drift_log and maintainer.drift_log[-1]["triggered"]:
+            while engine.refit_in_flight:
+                time.sleep(0.05)
+        probe_and_tick(rows)
+
+    log = maintainer.drift_log
+    pre_log = log[:drift_onset]
+    drift_log = log[drift_onset:]
+    print(f"streamed {maintainer.n_seen} rows in {len(stream)} windows "
+          f"({time.time() - t0:.1f}s); serving v{engine.version}, "
+          f"{det.alerts} alerts, {maintainer.triggered} triggers, "
+          f"{probes} probe queries")
+    for e in log:
+        print(f"  w{e['window']:02d} v{e['version']} "
+              f"ratio={e['ratio']:.4f} ewma={e['ewma']:.4f} "
+              f"eps_hat={e['eps_hat']:.4f}"
+              + (" FIRED" if e["fired"] else "")
+              + (" TRIGGERED" if e["triggered"] else ""))
+
+    failures = []
+    if any(e["fired"] for e in pre_log):
+        failures.append("false alarm on a pre-drift window")
+    if not all(e["eps_hat"] <= eps for e in pre_log[1:]):
+        failures.append("pre-drift windows left the band")
+    if mixed or dropped:
+        failures.append(f"serving contract broken: {mixed} mixed-version "
+                        f"batches, {dropped} dropped queries")
+    if args.inject_drift:
+        fired = [e for e in drift_log if e["fired"]]
+        if not fired:
+            failures.append("injected drift was never detected")
+        else:
+            latency = fired[0]["window"] - drift_onset + 1
+            print(f"detection latency: {latency} windows (budget {DETECT_BUDGET})")
+            if latency > DETECT_BUDGET:
+                failures.append(f"detection latency {latency} > {DETECT_BUDGET}")
+        if engine.version < 1 or not engine.refit_log:
+            failures.append("no background refit published")
+        post = [e for e in drift_log if e["version"] >= 1]
+        back = [e for e in post if e["eps_hat"] <= eps]
+        if not post or not back or post[-1]["eps_hat"] > eps:
+            failures.append("post-refit eps_hat never re-entered the band")
+        elif maintainer.triggered:
+            recover = back[0]["window"] - next(
+                e["window"] for e in drift_log if e["triggered"]
             )
-            if engine is None:
-                engine = DensityServeEngine(cfg, fit.params, scaler, max_batch=64)
-                engine.warmup()
-            else:
-                engine.publish(fit.params)
-            # queries riding between refits all answer from one version
-            probe = engine.submit_log_density(Y[:32])
-            engine.run_until_drained()
-            assert {r.version for r in probe} == {engine.version}
-            refits += 1
-    res = mr.result()
-    t_stream = time.time() - t0
-    print(f"streamed {mr.n_seen} points → coreset of {res.size} "
-          f"(Σw = {res.weights.sum():.0f}) in {t_stream:.2f}s "
-          f"[{len([b for b in mr._buckets if b is not None])} live buckets, "
-          f"{refits} refits published to serving slot v{engine.version}]")
+            print(f"band recovery: {recover} windows (budget {RECOVER_BUDGET})")
+            if recover > RECOVER_BUDGET:
+                failures.append(f"band recovery took {recover} windows "
+                                f"> {RECOVER_BUDGET}")
 
-    fit = fit_mctm(cfg, scaler, res.Y, weights=np.asarray(res.weights, np.float32), steps=800)
-    v_final = engine.publish(fit.params)
-
-    import jax.numpy as jnp
-
-    A, Ap = basis_features(cfg, scaler, jnp.asarray(Y))
-    full_fit = fit_mctm(cfg, scaler, Y, steps=800)
-    r = float(nll(cfg, fit.params, A, Ap)) / float(nll(cfg, full_fit.params, A, Ap))
-    print(f"stream-coreset vs full-data likelihood ratio: {r:.4f} "
-          f"(final fit staged as serving version {v_final})")
+    if failures:
+        for f in failures:
+            print(f"DRILL FAILED: {f}")
+        return 1
+    print("streaming drill OK: detected → refit → band recovered, "
+          "0 dropped/mixed queries")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -143,6 +143,38 @@ RULES: dict[str, list[Rule]] = {
         Rule("ckpt_overhead_ratio", "exact", rel=1.5, abs=0.5),
         Rule("recovery_overhead_ratio", "exact", rel=1.5, abs=0.5),
     ],
+    "BENCH_stream": [
+        Rule("n", "invariant"),
+        Rule("window", "invariant"),
+        Rule("n_windows", "invariant"),
+        Rule("k", "invariant"),
+        Rule("degree", "invariant"),
+        Rule("sketch_size", "invariant"),
+        # the streaming policies are exact contracts, not envelopes: eviction
+        # order, the geometric decay sum, result() idempotence and crash/
+        # resume bit-identity either hold or the maintainer is broken
+        Rule("policy_checks.sliding_evicts_expired", "invariant"),
+        Rule("policy_checks.decayed_weight_matches_closed_form", "invariant"),
+        Rule("policy_checks.result_idempotent", "invariant"),
+        Rule("stream_interrupts", "invariant"),
+        Rule("resume_bit_identical", "invariant"),
+        # maintenance must beat a full-prefix rebuild outright (the reason
+        # the streaming layer exists), with the usual runner-noise envelope
+        # on top of the absolute claim
+        Rule("maintain_vs_rebuild.speedup", "time_ratio"),
+        Rule("maintain_vs_rebuild.speedup", "floor", floor=1.0),
+        # drift drill: the detector must fire within the committed latency
+        # (ceiling = baseline latency + 2 windows of slack, the drill's
+        # DETECT_BUDGET), the post-refit band must be re-entered with margin,
+        # and the serving contract is a hard zero across the hot swaps
+        Rule("drift.detected", "invariant"),
+        Rule("drift.detection_latency_windows", "exact", rel=1.0, abs=2.0),
+        Rule("drift.triggers", "floor", floor=1.0),
+        Rule("drift.post_refit_eps_hat", "exact", rel=1.5, abs=0.05),
+        Rule("drift.post_refit_in_band", "invariant"),
+        Rule("drift.mixed_version_batches", "invariant"),
+        Rule("drift.dropped_queries", "invariant"),
+    ],
 }
 
 # Default gate targets: (generated relpath, baseline relpath).
@@ -154,6 +186,7 @@ DEFAULT_PAIRS = [
     ("BENCH_mctm_fit_smoke_minibatch.json", "BENCH_mctm_fit_smoke_minibatch.json"),
     ("BENCH_ft_smoke.json", "BENCH_ft_smoke.json"),
     ("BENCH_serve_smoke.json", "BENCH_serve_smoke.json"),
+    ("BENCH_stream_smoke.json", "BENCH_stream_smoke.json"),
 ]
 
 

@@ -700,6 +700,63 @@ register(ProgramSpec(
 ))
 
 
+# ---------------------------------------------------------------------------
+# streaming-layer programs (drift detector's per-window NLL evaluator)
+# ---------------------------------------------------------------------------
+
+
+def _build_drift_nll_chunk():
+    from repro.core.mctm_fit import fit_featurize
+    from repro.core.streaming import _drift_chunk_fn
+
+    cfg, scaler = _cfg_scaler()
+    feat = fit_featurize(cfg, scaler)
+    Y, w = _data()
+    return _drift_chunk_fn(feat, cfg), (_params(cfg), Y[:CHUNK], w[:CHUNK])
+
+
+register(ProgramSpec(
+    name="drift_nll_chunk",
+    description="single-host drift-window NLL body: featurize → nll_terms on "
+                "one (chunk, J) block, fused (Σw·nll, Σw) pair "
+                "(streaming._drift_chunk_fn)",
+    build=_build_drift_nll_chunk,
+    collectives=CollectiveBudget(),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    invariants=("MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
+def _build_drift_nll_sharded():
+    from repro.core.mctm_fit import fit_featurize
+    from repro.core.streaming import make_sharded_drift_nll_fn
+
+    cfg, scaler = _cfg_scaler()
+    feat = fit_featurize(cfg, scaler)
+    fn = make_sharded_drift_nll_fn(feat, cfg, _mesh(), ("data",), CHUNK, CPS)
+    Y, w = _data()
+    return fn, (_params(cfg), Y, w)
+
+
+register(ProgramSpec(
+    name="drift_nll_sharded",
+    description="sharded drift-window NLL sweep (streaming."
+                "make_sharded_drift_nll_fn): per-shard chunk scan carrying "
+                "the fused (Σw·nll, Σw) pair, ONE psum call site closing the "
+                "window — the DriftDetector's live ε̂ evaluator",
+    build=_build_drift_nll_sharded,
+    # the single fused psum of the 2-tuple lowers as one all-reduce per
+    # element; pinning 2 catches a new psum call site and a new element in
+    # the fused pair alike
+    collectives=CollectiveBudget(all_reduce=2),
+    materialization=MaterializationBudget(row_elems=J, fixed_elems=FIXED_SHARDED),
+    donated_outputs=0,
+    needs_devices=SHARDS,
+    invariants=("COLL-ONE-PSUM", "MAT-CHUNK", "DTYPE-F32", "HOST-FREE"),
+))
+
+
 def _build_sweep_kernel_interpret():
     import jax
 

@@ -183,3 +183,26 @@ class CheckpointManager:
             if tuple(np.shape(tgt)) != tuple(arr.shape):
                 raise ValueError(f"shape mismatch: {np.shape(tgt)} vs {arr.shape}")
         return jax.tree.unflatten(treedef, arrays)
+
+    def restore_flat(self, step: int | None = None) -> dict[str, np.ndarray]:
+        """Restore a checkpoint as ``{leaf_name: array}`` without a template.
+
+        ``restore`` validates shapes against a fixed-shape target, which a
+        caller whose state is ragged (the streaming maintainer's bucket sets
+        grow and shrink between windows) cannot supply ahead of time. This
+        reads the manifest's leaf names back directly; the caller interprets
+        the names. Only flat dict states round-trip by name — nested pytrees
+        keep their keypath-encoded names.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        return {
+            e["name"]: np.load(os.path.join(d, e["name"] + ".npy"))
+            for e in manifest["leaves"]
+        }

@@ -67,4 +67,10 @@ from repro.core.scoring import (
     score_chunks,
 )
 from repro.core.sensitivity import sensitivity_sample
-from repro.core.streaming import MergeReduceCoreset, WeightedSet
+from repro.core.streaming import (
+    DriftDetector,
+    MergeReduceCoreset,
+    StreamingCoresetMaintainer,
+    WeightedSet,
+    drift_window_nll,
+)

@@ -1071,7 +1071,7 @@ class DistributedScoringEngine:
 
     def _score_segmented(
         self, strat, key, Y, weights, method, ridge_reg, hull_k, hull_key,
-        sweep_ckpt, resume,
+        sweep_ckpt, resume, hull_dirs=None,
     ):
         """The resumable sweep driver: host-held per-shard partials, atomic
         segment checkpoints, ONE host-side cross-shard reduction at the end.
@@ -1136,6 +1136,7 @@ class DistributedScoringEngine:
                 strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps, shards,
                 method, ridge_reg, hull_k, hull_key, dtype,
                 mgr1, seg_rows, segments, maybe_inject, resume,
+                hull_dirs=hull_dirs,
             )
 
         # ------------------------------------------------ two-pass, sweep 1
@@ -1193,12 +1194,15 @@ class DistributedScoringEngine:
         V, inv = projection_from_gram(G_tot, method, ridge_reg)
         dirs = None
         if hull:
-            dirs = np.asarray(
-                directions_from_moments(
-                    hull_key, s1_h.sum(axis=0), s2_h.sum(axis=0), n * r,
-                    hull_k, self.hull_oversample,
+            if hull_dirs is not None:
+                dirs = np.asarray(hull_dirs, np.float32)
+            else:
+                dirs = np.asarray(
+                    directions_from_moments(
+                        hull_key, s1_h.sum(axis=0), s2_h.sum(axis=0), n * r,
+                        hull_k, self.hull_oversample,
+                    )
                 )
-            )
 
         # ------------------------------------------------ two-pass, sweep 2
         m = int(dirs.shape[0]) if hull else 0
@@ -1259,7 +1263,7 @@ class DistributedScoringEngine:
     def _segmented_one_pass(
         self, strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps, shards,
         method, ridge_reg, hull_k, hull_key, dtype,
-        mgr1, seg_rows, segments, maybe_inject, resume,
+        mgr1, seg_rows, segments, maybe_inject, resume, hull_dirs=None,
     ):
         """Segmented one-pass sketched sweep (single data sweep, resumable)."""
         r = self.rows_per_point
@@ -1283,10 +1287,13 @@ class DistributedScoringEngine:
         m = 0
         if hull:
             dirs1 = np.asarray(
-                upfront_directions(
+                hull_dirs
+                if hull_dirs is not None
+                else upfront_directions(
                     hull_key, self._p_rows_width(chunk, Y_pad), hull_k,
                     self.hull_oversample,
-                )
+                ),
+                np.float32,
             )
             m = int(dirs1.shape[0])
 
@@ -1457,12 +1464,17 @@ class DistributedScoringEngine:
         key: jax.Array | None = None,
         strategy=None,
         gram_dtype: str | None = None,
+        hull_dirs=None,
         n_valid: int | None = None,
         sweep_ckpt=None,
         resume: bool = False,
     ) -> ScoringResult:
         """Score all n points on the mesh; same semantics (and the same pass
         strategies) as the single-host ``ScoringEngine.score``.
+
+        ``hull_dirs`` (m, p) overrides the hull direction net (identical
+        semantics to ``ScoringEngine.score(hull_dirs=...)``) — the streaming
+        maintainer passes the previous block's moment-derived net here.
 
         ``n_valid``: pass when ``Y`` was pre-staged with ``stage_rows`` —
         ``Y`` is then the already padded+sharded (n_pad, …) array and
@@ -1482,6 +1494,8 @@ class DistributedScoringEngine:
             raise ValueError(f"unknown scoring method: {method}")
         if hull_k > 0 and hull_key is None:
             raise ValueError("hull_k > 0 requires hull_key")
+        if hull_dirs is not None and hull_k <= 0:
+            raise ValueError("hull_dirs requires hull_k > 0")
         strat = resolve_strategy(
             strategy,
             sketch_size=sketch_size,
@@ -1529,7 +1543,7 @@ class DistributedScoringEngine:
                 )
             return self._score_segmented(
                 strat, key, Y, weights, method, ridge_reg, hull_k, hull_key,
-                sweep_ckpt, resume,
+                sweep_ckpt, resume, hull_dirs=hull_dirs,
             )
         if n_valid is not None:
             n = int(n_valid)
@@ -1572,7 +1586,7 @@ class DistributedScoringEngine:
         if isinstance(strat, OnePassSketched):
             u, G_host, hull_rows = self._score_one_pass(
                 strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps,
-                method, ridge_reg, hull_k, hull_key,
+                method, ridge_reg, hull_k, hull_key, hull_dirs=hull_dirs,
             )
             return finalize_scoring(
                 n, cps * shards, method, G_host, u, hull_rows, r
@@ -1592,14 +1606,17 @@ class DistributedScoringEngine:
 
         hull_rows = None
         if hull:
-            dirs = directions_from_moments(
-                hull_key,
-                host_gather(s1),
-                host_gather(s2),
-                n * r,
-                hull_k,
-                self.hull_oversample,
-            )
+            if hull_dirs is not None:
+                dirs = np.asarray(hull_dirs, np.float32)
+            else:
+                dirs = directions_from_moments(
+                    hull_key,
+                    host_gather(s1),
+                    host_gather(s2),
+                    n * r,
+                    hull_k,
+                    self.hull_oversample,
+                )
             u_pad, gimax, gimin = pass2(Y_pad, swm, mask, V, inv, jnp.asarray(dirs))
             cand = np.concatenate(
                 [host_gather(gimax), host_gather(gimin)]
@@ -1616,7 +1633,7 @@ class DistributedScoringEngine:
 
     def _score_one_pass(
         self, strat, key, Y_pad, swm, mask, n, n_pad, chunk, cps,
-        method, ridge_reg, hull_k, hull_key,
+        method, ridge_reg, hull_k, hull_key, hull_dirs=None,
     ):
         """The sharded one-pass sweep: ONE data pass, ONE fused state psum."""
         r = self.rows_per_point
@@ -1641,8 +1658,12 @@ class DistributedScoringEngine:
         dirs1 = None
         if hull:
             dirs1 = jnp.asarray(
-                upfront_directions(hull_key, self._p_rows_width(chunk, Y_pad),
-                                   hull_k, self.hull_oversample)
+                hull_dirs
+                if hull_dirs is not None
+                else upfront_directions(
+                    hull_key, self._p_rows_width(chunk, Y_pad),
+                    hull_k, self.hull_oversample,
+                )
             )
             extras = extras + (dirs1,)
 

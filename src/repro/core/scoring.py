@@ -176,6 +176,10 @@ class ScoringResult:
     n: int
     n_chunks: int
     rows_per_point: int = 1        # r: P rows per input point (row → point ÷ r)
+    # accumulated P moments (s1, s2, n_rows) when the strategy tracked them —
+    # the seed for the NEXT block's direction net in two-round streaming
+    # (streaming.StreamingCoresetMaintainer); None otherwise
+    moments: tuple | None = None
 
     @property
     def hull_candidates(self) -> np.ndarray | None:
@@ -415,7 +419,8 @@ class RunningExtremes:
 
 
 def finalize_scoring(
-    n: int, n_chunks: int, method: str, G, u, hull_rows, rows_per_point: int
+    n: int, n_chunks: int, method: str, G, u, hull_rows, rows_per_point: int,
+    moments: tuple | None = None,
 ) -> ScoringResult:
     """Assemble a ``ScoringResult`` from raw leverage + hull candidates."""
     u = np.asarray(u)
@@ -436,6 +441,7 @@ def finalize_scoring(
         n=n,
         n_chunks=n_chunks,
         rows_per_point=rows_per_point,
+        moments=moments,
     )
 
 
@@ -603,9 +609,19 @@ class OnePassSketched(_SketchedBase):
     retention to O(n·q); leverage of XΩ equals leverage of X whenever q ≥
     rank(X) (rank-preserving right-multiplication), and degrades gracefully
     below.
+
+    ``track_moments=True`` additionally accumulates the P hull moments
+    (Σp, Σppᵀ) in the same fused dispatch (``kernels.sweep`` carries them for
+    free next to the sketch). The moments cannot improve THIS sweep's net —
+    it is fixed before the data is seen — but they surface on the
+    ``ScoringResult`` so a streaming caller can seed the NEXT block's net via
+    ``directions_from_moments`` + ``score(hull_dirs=...)``: the two-round
+    streaming direction net that fixes the coordinate-axes weakness without
+    re-streaming.
     """
 
     proj_size: int | None = None
+    track_moments: bool = False
 
     one_pass = True
     n_data_passes = 1
@@ -624,27 +640,38 @@ class OnePassSketched(_SketchedBase):
         return (plan[0][lo:hi], plan[1][lo:hi], plan[2])
 
     def init_state(self, D: int, p: int | None = None):
-        # no (p, p) moment gram: the one-pass net is fixed upfront, so the
-        # moments would be dead weight on the hot streaming path
-        return (jnp.zeros((self.sketch_size, D), self._acc_dtype()), None, None)
+        # without track_moments there is no (p, p) moment gram: the one-pass
+        # net is fixed upfront, so the moments would be dead weight on the
+        # hot streaming path
+        SX = jnp.zeros((self.sketch_size, D), self._acc_dtype())
+        if self.track_moments and p is not None:
+            return (SX, jnp.zeros((p,), jnp.float32), jnp.zeros((p, p), jnp.float32))
+        return (SX, None, None)
 
     def update(self, state, X, P, sw, plan_slice=()):
-        state, z, _ = self.fused_update(state, X, None, sw, plan_slice)
+        state, z, _ = self.fused_update(state, X, P, sw, plan_slice)
         return state, z
 
     def fused_update(self, state, X, P, sw, plan_slice=(), dirs=None):
         """The fused realization (kernels.sweep): CountSketch + z emission +
-        hull extremes in ONE dispatch — single VMEM residency on TPU, one
-        fused XLA call on CPU. ``ext`` carries chunk-local indices; the
-        driver folds them with its row offset, so the carried state (and any
-        sweep checkpoint written from it) is laid out exactly as the unfused
-        path's."""
+        hull extremes (+ optional moments) in ONE dispatch — single VMEM
+        residency on TPU, one fused XLA call on CPU. ``ext`` carries
+        chunk-local indices; the driver folds them with its row offset, so
+        the carried state (and any sweep checkpoint written from it) is laid
+        out exactly as the unfused path's."""
         rows, signs, omega = plan_slice
-        SX, z, ext, _ = _fused_sweep(
-            state[0], X, P if dirs is not None else None, sw, rows, signs,
-            dirs=dirs, omega=omega,
+        moments = (
+            (state[1], state[2])
+            if state[1] is not None and P is not None
+            else None
         )
-        return (SX, None, None), z, ext
+        keep_P = dirs is not None or moments is not None
+        SX, z, ext, mom = _fused_sweep(
+            state[0], X, P if keep_P else None, sw, rows, signs,
+            dirs=dirs, omega=omega, moments=moments,
+        )
+        s1, s2 = mom if mom is not None else (state[1], state[2])
+        return (SX, s1, s2), z, ext
 
     def gram(self, state, plan=None):
         """Projection Gram — (SXΩ)ᵀ(SXΩ), the Gram of the retained z rows."""
@@ -789,6 +816,7 @@ class ScoringEngine:
         ridge_reg: float = 1.0,
         hull_k: int = 0,
         hull_key: jax.Array | None = None,
+        hull_dirs=None,
         strategy=None,
         gram_dtype: str | None = None,
         sweep_ckpt=None,
@@ -802,6 +830,11 @@ class ScoringEngine:
         direction net and returns ALL distinct ε-kernel candidate rows in
         first-occurrence order (requires ``hull_key``); truncation to k
         points happens at coreset assembly (``coreset.exact_hull_points``).
+        ``hull_dirs`` (m, p) overrides the direction net entirely — the
+        two-round streaming hook: a caller with moments from a PREVIOUS
+        block (``ScoringResult.moments`` + ``directions_from_moments``)
+        seeds this sweep's net instead of the one-pass identity prior (or
+        this sweep's own moment net on two-pass strategies).
         ``strategy`` selects the pass strategy (name or instance — see
         ``resolve_strategy``); the default is decided by ``sketch_size``.
 
@@ -832,10 +865,12 @@ class ScoringEngine:
         sqrt_w = (
             jnp.sqrt(jnp.asarray(weights, jnp.float32)) if weights is not None else None
         )
+        if hull_dirs is not None and hull_k <= 0:
+            raise ValueError("hull_dirs requires hull_k > 0")
         chunk = self.chunk_size if self.chunk_size > 0 else n
         return self._drive(
             strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key,
-            sweep_ckpt=sweep_ckpt, resume=resume,
+            hull_dirs=hull_dirs, sweep_ckpt=sweep_ckpt, resume=resume,
         )
 
     # --------------------------------------------------------------- helpers
@@ -854,7 +889,7 @@ class ScoringEngine:
 
     def _drive(
         self, strat, key, Y, sqrt_w, n, chunk, method, ridge_reg, hull_k, hull_key,
-        sweep_ckpt=None, resume=False,
+        hull_dirs=None, sweep_ckpt=None, resume=False,
     ) -> ScoringResult:
         """The shared chunk loop — ONE implementation for every strategy.
 
@@ -879,6 +914,9 @@ class ScoringEngine:
         featurize = self.featurize
         r = self.rows_per_point
         want_hull = hull_k > 0
+        # track_moments keeps P flowing even without a hull stage (the
+        # moments seed a FUTURE sweep's net, not this one's)
+        want_P = want_hull or getattr(strat, "track_moments", False)
         n_chunks = -(-n // chunk)
         ranges = [(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)]
 
@@ -886,7 +924,7 @@ class ScoringEngine:
             Xc, Pc = featurize(Y[lo:hi])
             if want_hull and Pc is None:
                 raise ValueError("hull_k > 0 requires a featurize that returns P rows")
-            if not want_hull:
+            if not want_P:
                 Pc = None  # no hull stage → don't pay for the P moment gram
             swc = (
                 sqrt_w[lo:hi]
@@ -930,7 +968,11 @@ class ScoringEngine:
                 z_buf = np.zeros((n, width), np.float32)
                 if want_hull:
                     dirs1 = jnp.asarray(
-                        upfront_directions(hull_key, p, hull_k, self.hull_oversample)
+                        hull_dirs
+                        if hull_dirs is not None
+                        else upfront_directions(
+                            hull_key, p, hull_k, self.hull_oversample
+                        )
                     )
                     ext = RunningExtremes(int(dirs1.shape[0]))
 
@@ -962,7 +1004,11 @@ class ScoringEngine:
                 state = strat.init_state(D, p)
                 if strat.one_pass and want_hull:
                     dirs1 = jnp.asarray(
-                        upfront_directions(hull_key, p, hull_k, self.hull_oversample)
+                        hull_dirs
+                        if hull_dirs is not None
+                        else upfront_directions(
+                            hull_key, p, hull_k, self.hull_oversample
+                        )
                     )
                     ext = RunningExtremes(int(dirs1.shape[0]))
             state, z, extb = strat.fused_update(
@@ -1000,10 +1046,13 @@ class ScoringEngine:
         else:
             # ---- sweep 2: leverage emission + fused directional hull extremes
             if want_hull:
-                s1, s2 = strat.moments(state)
-                dirs = jnp.asarray(
-                    self._directions(hull_key, s1, s2, n * r, hull_k)
-                )
+                if hull_dirs is not None:
+                    dirs = jnp.asarray(hull_dirs)
+                else:
+                    s1, s2 = strat.moments(state)
+                    dirs = jnp.asarray(
+                        self._directions(hull_key, s1, s2, n * r, hull_k)
+                    )
                 ext = RunningExtremes(int(dirs.shape[0]))
             u = np.zeros(n, np.float32)
             done2 = 0
@@ -1035,8 +1084,12 @@ class ScoringEngine:
             if ext is not None:
                 hull_rows = ext.candidates()
 
+        moments = None
+        if getattr(strat, "track_moments", False) and state[1] is not None:
+            moments = (np.asarray(state[1]), np.asarray(state[2]), n * r)
         return finalize_scoring(
-            n, n_chunks, method, strat.result_gram(state, plan), u, hull_rows, r
+            n, n_chunks, method, strat.result_gram(state, plan), u, hull_rows, r,
+            moments=moments,
         )
 
 

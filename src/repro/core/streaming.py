@@ -10,6 +10,34 @@ stream result matches the batch construction up to the usual (1±ε) slack.
 sketched strategy (``scoring.OnePassSketched``): each block is featurized
 and streamed exactly once per reduce — the pass shape merge-reduce assumes —
 at a constant-factor cost in score accuracy.
+
+Production stream consumption (``StreamingCoresetMaintainer``) layers three
+things on top of the insertion-only tree (contract: ``docs/STREAMING.md``):
+
+* **Windowing/decay policies** — ``"insertion"`` (the tree above),
+  ``"sliding"`` (only the last W windows contribute: one reduced bucket per
+  window, expired buckets evicted exactly), ``"decayed"`` (every live
+  bucket's weights shrink by γ per window before the new window merges in,
+  so the stream total matches the closed-form geometric sum — merge-reduce
+  conserves mass, Lucic et al.'s composability). All per-window randomness
+  is ``fold_in(base_key, window)``-derived, so an interrupted-and-resumed
+  maintainer replays bit-identically.
+
+* **Two-round streaming direction net** — each reduce with
+  ``sketch_size > 0`` tracks the block's hull moments in the same fused
+  one-pass sweep (``OnePassSketched(track_moments=True)``) and seeds the
+  NEXT window's net via ``directions_from_moments`` + ``hull_dirs=``,
+  fixing the one-pass identity-prior (coordinate-axes) weakness without
+  re-streaming any block.
+
+* **Drift detection → refit trigger** — every pushed window is scored
+  against the live serving model with the fused streamed-NLL evaluator
+  (``drift_window_nll``: one (Σw·nll, Σw) psum per window sweep on a mesh);
+  ``DriftDetector`` EWMAs the per-window likelihood ratio against the
+  published model's reference NLL and alerts when the measured band breaks,
+  which (``auto_trigger=True``) calls
+  ``DensityServeEngine.start_background_refit`` on the maintainer's own
+  coreset — refits become drift-driven instead of caller-initiated.
 """
 from __future__ import annotations
 
@@ -18,12 +46,28 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import mctm as M
 from repro.core.bernstein import DataScaler
-from repro.core.scoring import DEFAULT_CHUNK, ScoringEngine
+from repro.core.scoring import (
+    DEFAULT_CHUNK,
+    OnePassSketched,
+    ScoringEngine,
+    directions_from_moments,
+)
+from repro.ft.config import maybe_inject
+from repro.utils.compat import shard_map
 
-__all__ = ["WeightedSet", "MergeReduceCoreset"]
+__all__ = [
+    "WeightedSet",
+    "MergeReduceCoreset",
+    "StreamingCoresetMaintainer",
+    "DriftDetector",
+    "drift_window_nll",
+    "make_sharded_drift_nll_fn",
+    "STREAM_POLICIES",
+]
 
 
 @dataclasses.dataclass
@@ -163,3 +207,617 @@ class MergeReduceCoreset:
         for b in live[1:]:
             acc = WeightedSet.concat(acc, b)
         return self._reduce(acc, jax.random.fold_in(self._key, self.n_seen))
+
+
+# ---------------------------------------------------------------------------
+# fused drift-NLL evaluator (the detector's measurement device)
+# ---------------------------------------------------------------------------
+
+
+# same caching discipline as mctm_fit's evaluator closures: keyed on
+# (cfg, scaler bounds bytes[, mesh layout]) so per-window evaluation never
+# retraces; never keyed on custom featurize closures
+_DRIFT_CHUNK_CACHE: dict = {}
+_DRIFT_SHARDED_CACHE: dict = {}
+
+
+def _drift_chunk_fn(feat, cfg):
+    @jax.jit
+    def chunk_drift_nll(p, Yc, wc):
+        A, Ap = feat(Yc)
+        return jnp.sum(wc * M.nll_terms(cfg, p, A, Ap)), jnp.sum(wc)
+
+    return chunk_drift_nll
+
+
+def make_sharded_drift_nll_fn(feat, cfg, mesh, axes, chunk: int, cps: int):
+    """Sharded per-window drift sweep: each shard ``lax.scan``s its
+    (cps, chunk, J) row slices through featurize → nll_terms carrying the
+    fused ``(Σw·nll, Σw)`` pair, then ONE psum of the pair closes the sweep
+    — the drift analogue of ``mctm_fit._make_sharded_nll_fn`` (which psums a
+    bare scalar; the drift detector needs the weighted-mass denominator in
+    the same collective so a window evaluation is a single fused reduction).
+    """
+    axis_name = axes if len(axes) > 1 else axes[0]
+    row_spec = axes if len(axes) > 1 else axes[0]
+
+    def body(params, ys, wm):
+        def step(carry, xs):
+            yc, wc = xs
+            A, Ap = feat(yc)
+            tot, wsum = carry
+            return (
+                tot + jnp.sum(wc * M.nll_terms(cfg, params, A, Ap)),
+                wsum + jnp.sum(wc),
+            ), None
+
+        (total, wsum), _ = jax.lax.scan(
+            step,
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (ys.reshape((cps, chunk) + ys.shape[1:]), wm.reshape(cps, chunk)),
+        )
+        return jax.lax.psum((total, wsum), axis_name)
+
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(row_spec, None), P(row_spec)),
+            out_specs=P(),
+            check_vma=False,
+        )
+    )
+
+
+def drift_window_nll(
+    cfg: M.MCTMConfig,
+    scaler,
+    params: M.MCTMParams,
+    Y,
+    weights=None,
+    *,
+    chunk: int | None = DEFAULT_CHUNK,
+    mesh=None,
+    axis="data",
+) -> float:
+    """Per-weighted-point NLL of one stream window under ``params``:
+    ``Σw·nll / Σw`` streamed in O(chunk·J·d) memory.
+
+    Single-host: a host chunk loop over the jitted fused ``(Σw·nll, Σw)``
+    body. With ``mesh``: ONE fused pair psum per window sweep
+    (``make_sharded_drift_nll_fn``, registered in the ``repro.analysis``
+    collective census). The per-point normalization is what makes windows of
+    different sizes comparable on the detector's ratio scale.
+    """
+    from repro.core.mctm_fit import fit_featurize
+
+    feat = fit_featurize(cfg, scaler)
+    Y = np.asarray(Y, np.float32)
+    n = int(Y.shape[0])
+    if n == 0:
+        raise ValueError("cannot evaluate an empty window")
+    w = (
+        np.ones(n, np.float32)
+        if weights is None
+        else np.asarray(weights, np.float32)
+    )
+    ck = (
+        cfg,
+        None if scaler is None else np.asarray(scaler.low).tobytes(),
+        None if scaler is None else np.asarray(scaler.high).tobytes(),
+    )
+    if mesh is None:
+        c = int(chunk) if chunk else n
+        fn = _DRIFT_CHUNK_CACHE.get(ck)
+        if fn is None:
+            if len(_DRIFT_CHUNK_CACHE) > 64:
+                _DRIFT_CHUNK_CACHE.clear()
+            fn = _drift_chunk_fn(feat, cfg)
+            _DRIFT_CHUNK_CACHE[ck] = fn
+        total = wsum = 0.0
+        for lo in range(0, n, c):
+            hi = min(lo + c, n)
+            t, s = fn(p=params, Yc=jnp.asarray(Y[lo:hi]), wc=jnp.asarray(w[lo:hi]))
+            total += float(t)
+            wsum += float(s)
+        return total / max(wsum, 1e-9)
+
+    from repro.core.distributed_coreset import (
+        _axis_tuple,
+        host_gather,
+        shard_layout,
+    )
+
+    axes = _axis_tuple(axis)
+    chunk_v, cps, n_pad = shard_layout(mesh, axes, n, chunk)
+    pad = n_pad - n
+    if pad:
+        Y = np.concatenate([Y, np.broadcast_to(Y[:1], (pad,) + Y.shape[1:])])
+        w = np.concatenate([w, np.zeros(pad, np.float32)])
+    cache_key = ck + (mesh, axes, chunk_v, cps)
+    fn = _DRIFT_SHARDED_CACHE.get(cache_key)
+    if fn is None:
+        if len(_DRIFT_SHARDED_CACHE) > 64:
+            _DRIFT_SHARDED_CACHE.clear()
+        fn = make_sharded_drift_nll_fn(feat, cfg, mesh, axes, chunk_v, cps)
+        _DRIFT_SHARDED_CACHE[cache_key] = fn
+    total, wsum = fn(params, jnp.asarray(Y), jnp.asarray(w))
+    return float(host_gather(total)) / max(float(host_gather(wsum)), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# drift detector
+# ---------------------------------------------------------------------------
+
+
+class DriftDetector:
+    """EWMA band monitor over per-window likelihood ratios.
+
+    Each window's per-point NLL under the *live serving model* is normalized
+    against a reference anchor (``mctm_fit.likelihood_ratio`` — the paper
+    tables' shift normalization, stable for non-positive NLLs) and smoothed
+    with an EWMA. The detector fires when the smoothed ratio leaves the
+    (1±eps) band after at least ``min_windows`` observations of the current
+    model version — the streaming analogue of the (1±ε) coreset check.
+
+    Anchor protocol: on the first observation of a model version the
+    reference re-anchors — to ``ref_hint`` (the engine's recorded
+    ``fit_nll_pp`` for that version: the model's NLL per weighted point on
+    its own coreset) when available, else to that window's own NLL — and the
+    anchor observation never fires. Re-anchoring on version change is what
+    closes the loop: a drift-triggered refit publishes, the next window
+    re-anchors on the new version, and the measured band is honest again.
+
+    ``state()``/``load()`` round-trip the five scalars through the
+    maintainer's window checkpoints, so a resumed stream replays alerts
+    bit-identically.
+    """
+
+    def __init__(self, eps: float = 0.1, alpha: float = 0.4, min_windows: int = 2):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError("alpha must be in (0, 1]")
+        if eps <= 0.0:
+            raise ValueError("eps must be positive")
+        self.eps = float(eps)
+        self.alpha = float(alpha)
+        self.min_windows = int(min_windows)
+        self.ref_nll_pp: float | None = None
+        self.ref_version = -1
+        self.ewma = 1.0
+        self.last_ratio = 1.0
+        self.count = 0
+        self.alerts = 0
+
+    @property
+    def eps_hat(self) -> float:
+        """Measured band deviation |EWMA − 1| — the live ε̂."""
+        return abs(self.ewma - 1.0)
+
+    @property
+    def in_band(self) -> bool:
+        return self.eps_hat <= self.eps
+
+    def observe(self, nll_pp: float, version: int = 0, ref_hint=None) -> bool:
+        """Feed one window's per-point NLL; returns True when drift fires."""
+        from repro.core.mctm_fit import likelihood_ratio
+
+        nll_pp = float(nll_pp)
+        if self.ref_nll_pp is None or int(version) != self.ref_version:
+            self.ref_version = int(version)
+            self.ref_nll_pp = (
+                float(ref_hint) if ref_hint is not None else nll_pp
+            )
+            self.last_ratio = likelihood_ratio(nll_pp, self.ref_nll_pp)
+            self.ewma = self.last_ratio
+            self.count = 1
+            return False
+        self.last_ratio = likelihood_ratio(nll_pp, self.ref_nll_pp)
+        self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * self.last_ratio
+        self.count += 1
+        fired = self.count >= self.min_windows and not self.in_band
+        if fired:
+            self.alerts += 1
+        return fired
+
+    def state(self) -> np.ndarray:
+        """Checkpointable snapshot (f64 — exact scalar roundtrip)."""
+        return np.asarray(
+            [
+                np.nan if self.ref_nll_pp is None else self.ref_nll_pp,
+                self.ref_version,
+                self.ewma,
+                self.last_ratio,
+                self.count,
+                self.alerts,
+            ],
+            np.float64,
+        )
+
+    def load(self, s) -> None:
+        s = np.asarray(s, np.float64)
+        self.ref_nll_pp = None if np.isnan(s[0]) else float(s[0])
+        self.ref_version = int(s[1])
+        self.ewma = float(s[2])
+        self.last_ratio = float(s[3])
+        self.count = int(s[4])
+        self.alerts = int(s[5])
+
+
+# ---------------------------------------------------------------------------
+# the production stream consumer
+# ---------------------------------------------------------------------------
+
+
+STREAM_POLICIES = ("insertion", "sliding", "decayed")
+
+
+@dataclasses.dataclass
+class _Bucket:
+    """One live merge-reduce bucket: a reduced weighted set plus the window
+    index that created it (eviction clock) and its tree level."""
+
+    Y: np.ndarray
+    w: np.ndarray
+    birth: int
+    level: int
+
+    def as_ws(self) -> WeightedSet:
+        return WeightedSet(self.Y, self.w)
+
+
+class StreamingCoresetMaintainer:
+    """Windowed/decayed merge-reduce over an unbounded stream, with a
+    two-round direction net and an optional drift→refit loop (module doc).
+
+    One ``push(chunk)`` = one stream *window*. Policies:
+
+    ``"insertion"``
+        The classic binary bucket tree — every window ever seen contributes
+        (O(log windows) live buckets).
+    ``"sliding"``
+        Only the most recent ``window`` windows contribute: each push
+        reduces its chunk to one level-0 bucket, and buckets whose birth
+        falls off the horizon are dropped exactly (≤ ``window`` live
+        buckets; ``result()`` reduces their union).
+    ``"decayed"``
+        The insertion tree, but every live bucket's weights are multiplied
+        by ``decay`` (γ) before the new window merges in. Merge-reduce
+        conserves weight mass, so after T equal windows of n rows the
+        stream total is the closed-form geometric sum n·(1−γᵀ)/(1−γ).
+
+    Determinism under resume: all randomness derives from
+    ``fold_in(base_key, window)`` (never a sequentially advanced key), and
+    ``ckpt_dir`` checkpoints the full maintainer state (buckets, moments,
+    detector) atomically after every window, so crash → restore → re-push
+    replays bit-identically (``tests/test_stream_maintainer.py``).
+
+    Drift loop: with ``serve_engine`` and ``detector`` attached, every
+    pushed window is evaluated against the engine's live slot
+    (``drift_window_nll``); a fired detector (``auto_trigger=True``) calls
+    ``engine.start_background_refit(scaler, coreset=result())`` — at most
+    one refit in flight, publish lands between serving ticks.
+    """
+
+    def __init__(
+        self,
+        cfg: M.MCTMConfig,
+        scaler: DataScaler,
+        k: int,
+        key: jax.Array,
+        *,
+        policy: str = "insertion",
+        window: int = 0,
+        decay: float = 1.0,
+        alpha: float = 0.8,
+        chunk_size: int | None = DEFAULT_CHUNK,
+        sketch_size: int = 0,
+        serve_engine=None,
+        detector: DriftDetector | None = None,
+        auto_trigger: bool = True,
+        refit_kwargs: dict | None = None,
+        drift_chunk: int | None = DEFAULT_CHUNK,
+        drift_mesh=None,
+        drift_axis="data",
+        ckpt_dir: str | None = None,
+    ):
+        if policy not in STREAM_POLICIES:
+            raise ValueError(
+                f"unknown stream policy {policy!r} (expected one of "
+                f"{STREAM_POLICIES})"
+            )
+        if policy == "sliding" and window < 1:
+            raise ValueError("sliding policy requires window >= 1")
+        if policy == "decayed" and not (0.0 < decay < 1.0):
+            raise ValueError("decayed policy requires 0 < decay < 1")
+        self.cfg = cfg
+        self.scaler = scaler
+        self.k = int(k)
+        self.policy = policy
+        self.window = int(window)
+        self.decay = float(decay)
+        self.alpha = float(alpha)
+        self.sketch_size = int(sketch_size)
+        self._key = key
+        self._buckets: list[_Bucket | None] = []
+        self.n_seen = 0
+        self.windows_done = 0
+        self._moments: tuple | None = None
+        self._engine = ScoringEngine(cfg, scaler, chunk_size=chunk_size)
+        self.serve_engine = serve_engine
+        self.detector = detector
+        self.auto_trigger = bool(auto_trigger)
+        self.refit_kwargs = dict(refit_kwargs or {})
+        self._drift_chunk = drift_chunk
+        self._drift_mesh = drift_mesh
+        self._drift_axis = drift_axis
+        self.drift_log: list[dict] = []
+        self.triggered = 0
+        self._mgr = None
+        if ckpt_dir is not None:
+            from repro.checkpoint import CheckpointManager
+
+            self._mgr = CheckpointManager(str(ckpt_dir), keep=2)
+
+    # ------------------------------------------------------------- reduction
+
+    def _reduce(self, ws: WeightedSet, key: jax.Array, *,
+                update_moments: bool = True) -> WeightedSet:
+        """Weighted ℓ2-hull reduction to ≤ k points (the merge-reduce kernel;
+        same split structure as ``MergeReduceCoreset._reduce``), with the
+        two-round net: ``sketch_size > 0`` seeds the one-pass direction net
+        from the PREVIOUS block's hull moments (``hull_dirs=``) and tracks
+        this block's moments in the same fused sweep for the next one.
+        ``update_moments=False`` keeps the call side-effect-free
+        (``result()`` idempotence)."""
+        if ws.size <= self.k:
+            return ws
+        k1 = int(np.floor(self.alpha * self.k))
+        k2 = self.k - k1
+        if self.sketch_size > 0:
+            draw_key, hull_key, score_key = jax.random.split(key, 3)
+        else:
+            draw_key, hull_key = jax.random.split(key)
+            score_key = None
+        strategy = None
+        hull_dirs = None
+        if self.sketch_size > 0:
+            strategy = OnePassSketched(self.sketch_size, track_moments=True)
+            if self._moments is not None and k2 > 0:
+                s1, s2, n_rows = self._moments
+                hull_dirs = directions_from_moments(
+                    hull_key, s1, s2, n_rows, k2, self._engine.hull_oversample
+                )
+        res = self._engine.score(
+            jnp.asarray(ws.Y),
+            method="l2-hull",
+            weights=ws.weights,
+            hull_k=k2,
+            hull_key=hull_key,
+            sketch_size=self.sketch_size,
+            key=score_key,
+            strategy=strategy,
+            hull_dirs=hull_dirs,
+        )
+        if update_moments and res.moments is not None:
+            self._moments = res.moments
+        scores = res.scores
+        probs = scores / scores.sum()
+        idx = np.asarray(
+            jax.random.choice(
+                draw_key, ws.size, shape=(k1,), replace=True, p=jnp.asarray(probs)
+            )
+        )
+        w = ws.weights[idx] / (k1 * probs[idx])
+        if k2 > 0:
+            from repro.core.coreset import exact_hull_points
+
+            hull_pts = exact_hull_points(res, scores, k2)
+        else:
+            hull_pts = np.zeros(0, np.int64)
+        hull_w = ws.weights[hull_pts]
+        total_in = ws.weights.sum()
+        target = max(total_in - hull_w.sum(), 1e-9)
+        w = w * (target / max(w.sum(), 1e-9))
+        return WeightedSet(
+            Y=np.concatenate([ws.Y[idx], ws.Y[hull_pts]], axis=0),
+            weights=np.concatenate([w, hull_w], axis=0),
+        )
+
+    # ------------------------------------------------------------ maintenance
+
+    def live_buckets(self) -> list[_Bucket]:
+        return [b for b in self._buckets if b is not None]
+
+    def live_births(self) -> list[int]:
+        """Birth windows of the live buckets (eviction observability)."""
+        return sorted(b.birth for b in self.live_buckets())
+
+    def total_weight(self) -> float:
+        return float(sum(b.w.sum() for b in self.live_buckets()))
+
+    def push(self, chunk: np.ndarray) -> None:
+        """Consume one stream window: reduce, maintain buckets per policy,
+        observe drift, checkpoint. Crash-safe: the failure-injection point
+        fires BEFORE any state mutates, so a killed window is simply
+        re-pushed after restore."""
+        chunk = np.asarray(chunk)
+        widx = self.windows_done
+        maybe_inject("streaming", widx + 1)
+        def wsub(i: int):
+            # per-(window, stage) subkey — stage 0 is the chunk reduce,
+            # stage L+1 the level-L merge (bit-stable under resume: derived
+            # from (base key, widx, stage), never a sequentially advanced key)
+            return jax.random.fold_in(jax.random.fold_in(self._key, widx), i)
+
+        fresh = WeightedSet(chunk, np.ones(chunk.shape[0]))
+
+        if self.policy == "sliding":
+            bucket_ws = self._reduce(fresh, wsub(0))
+            self._buckets.append(
+                _Bucket(bucket_ws.Y, bucket_ws.weights, birth=widx, level=0)
+            )
+            horizon = widx - self.window
+            self._buckets = [
+                b for b in self._buckets if b is not None and b.birth > horizon
+            ]
+        else:
+            if self.policy == "decayed":
+                for b in self._buckets:
+                    if b is not None:
+                        b.w = b.w * self.decay
+            carry = self._reduce(fresh, wsub(0))
+            level = 0
+            while True:
+                if level >= len(self._buckets):
+                    self._buckets.append(
+                        _Bucket(carry.Y, carry.weights, birth=widx, level=level)
+                    )
+                    break
+                if self._buckets[level] is None:
+                    self._buckets[level] = _Bucket(
+                        carry.Y, carry.weights, birth=widx, level=level
+                    )
+                    break
+                merged = WeightedSet.concat(self._buckets[level].as_ws(), carry)
+                self._buckets[level] = None
+                carry = self._reduce(merged, wsub(level + 1))
+                level += 1
+
+        self.windows_done = widx + 1
+        self.n_seen += int(chunk.shape[0])
+        if self.detector is not None and self.serve_engine is not None:
+            self._observe_window(chunk, widx)
+        if self._mgr is not None:
+            self._mgr.save(self.windows_done, self.state_dict())
+
+    def result(self) -> WeightedSet:
+        """Union of live buckets, reduced once more to ≤ k points.
+
+        Idempotent and side-effect-free (``MergeReduceCoreset.result``'s
+        contract): the key derives from ``fold_in``, moments are read but
+        never written, and the bucket state is untouched.
+        """
+        live = self.live_buckets()
+        if not live:
+            return WeightedSet(np.zeros((0, self.cfg.J)), np.zeros((0,)))
+        acc = live[0].as_ws()
+        for b in live[1:]:
+            acc = WeightedSet.concat(acc, b.as_ws())
+        rkey = jax.random.fold_in(
+            jax.random.fold_in(self._key, 0x57E4), self.n_seen
+        )
+        return self._reduce(acc, rkey, update_moments=False)
+
+    # ------------------------------------------------------------ drift loop
+
+    def _observe_window(self, chunk: np.ndarray, widx: int) -> None:
+        eng = self.serve_engine
+        slot = eng.current_slot()
+        nll_pp = drift_window_nll(
+            self.cfg, self.scaler, slot.params, chunk,
+            chunk=self._drift_chunk, mesh=self._drift_mesh,
+            axis=self._drift_axis,
+        )
+        ref_hint = None
+        for rec in reversed(eng.refit_log):
+            if rec["version"] == slot.version:
+                ref_hint = rec["fit_nll_pp"]
+                break
+        fired = self.detector.observe(
+            nll_pp, version=slot.version, ref_hint=ref_hint
+        )
+        entry = {
+            "window": widx,
+            "version": int(slot.version),
+            "nll_pp": float(nll_pp),
+            "ratio": float(self.detector.last_ratio),
+            "ewma": float(self.detector.ewma),
+            "eps_hat": float(self.detector.eps_hat),
+            "fired": bool(fired),
+            "triggered": False,
+        }
+        if fired and self.auto_trigger:
+            cs = self.result()
+            if cs.size:
+                th = eng.start_background_refit(
+                    self.scaler,
+                    coreset=(cs.Y, np.asarray(cs.weights, np.float32)),
+                    key=jax.random.fold_in(
+                        jax.random.fold_in(self._key, 0xD21F), widx
+                    ),
+                    **self.refit_kwargs,
+                )
+                if th is not None:
+                    self.triggered += 1
+                    entry["triggered"] = True
+        self.drift_log.append(entry)
+
+    # ---------------------------------------------------------- checkpointing
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Flat named-array snapshot of the full maintainer state — ragged
+        bucket shapes round-trip through ``CheckpointManager.restore_flat``
+        (the template-validated ``restore`` can't express them)."""
+        out: dict[str, np.ndarray] = {
+            "meta": np.asarray(
+                [self.windows_done, self.n_seen, len(self._buckets)], np.int64
+            ),
+            "slots_birth": np.asarray(
+                [-1 if b is None else b.birth for b in self._buckets], np.int64
+            ),
+            "slots_level": np.asarray(
+                [-1 if b is None else b.level for b in self._buckets], np.int64
+            ),
+        }
+        for i, b in enumerate(self._buckets):
+            if b is not None:
+                out[f"b{i:03d}_Y"] = np.asarray(b.Y)
+                out[f"b{i:03d}_w"] = np.asarray(b.w)
+        if self._moments is not None:
+            s1, s2, n_rows = self._moments
+            out["mom_s1"] = np.asarray(s1)
+            out["mom_s2"] = np.asarray(s2)
+            out["mom_n"] = np.asarray(n_rows, np.int64)
+        if self.detector is not None:
+            out["det"] = self.detector.state()
+        return out
+
+    def load_state(self, state: dict[str, np.ndarray]) -> None:
+        meta = np.asarray(state["meta"], np.int64)
+        self.windows_done = int(meta[0])
+        self.n_seen = int(meta[1])
+        n_slots = int(meta[2])
+        births = np.asarray(state["slots_birth"], np.int64)
+        levels = np.asarray(state["slots_level"], np.int64)
+        self._buckets = []
+        for i in range(n_slots):
+            if births[i] < 0:
+                self._buckets.append(None)
+            else:
+                self._buckets.append(
+                    _Bucket(
+                        np.asarray(state[f"b{i:03d}_Y"]),
+                        np.asarray(state[f"b{i:03d}_w"]),
+                        birth=int(births[i]),
+                        level=int(levels[i]),
+                    )
+                )
+        if "mom_s1" in state:
+            self._moments = (
+                np.asarray(state["mom_s1"]),
+                np.asarray(state["mom_s2"]),
+                int(np.asarray(state["mom_n"])),
+            )
+        else:
+            self._moments = None
+        if self.detector is not None and "det" in state:
+            self.detector.load(state["det"])
+
+    def resume(self) -> int:
+        """Restore the latest window checkpoint from ``ckpt_dir`` (no-op
+        without one). Returns the number of completed windows — the caller
+        re-pushes the stream from there and the replay is bit-identical."""
+        if self._mgr is None or self._mgr.latest_step() is None:
+            return 0
+        self.load_state(self._mgr.restore_flat())
+        return self.windows_done

@@ -290,6 +290,11 @@ class DensityServeEngine:
         self.bucket_counts: dict[tuple[str, int], int] = {}
         self.swap_events: list[dict] = []
         self.tick_times: list[float] = []
+        # refit bookkeeping: one record per refit_and_publish cycle (version,
+        # fit NLL per weighted coreset point — the drift detector's reference
+        # anchor) and the single in-flight background refit thread
+        self.refit_log: list[dict] = []
+        self._refit_thread: threading.Thread | None = None
 
     # ------------------------------------------------------------ properties
 
@@ -301,6 +306,35 @@ class DensityServeEngine:
     @property
     def version(self) -> int:
         return self._slot.version
+
+    @property
+    def refit_in_flight(self) -> bool:
+        """True while a background refit started via
+        :meth:`start_background_refit` is still running."""
+        th = self._refit_thread
+        return th is not None and th.is_alive()
+
+    def current_slot(self) -> ModelSlot:
+        """The live model slot (params + scaler bounds + version) — what a
+        drift evaluator should score incoming windows against."""
+        return self._slot
+
+    def start_background_refit(self, *args, **kwargs):
+        """Engine-owned trigger: run :func:`refit_and_publish` on a daemon
+        thread with single-in-flight tracking — a second trigger while one
+        refit is still running is a no-op returning ``None`` (drift alerts
+        can fire on consecutive windows; one refit serves them all). Returns
+        the started thread otherwise.
+        """
+        if self.refit_in_flight:
+            return None
+        th = threading.Thread(
+            target=refit_and_publish, args=(self, *args), kwargs=kwargs,
+            daemon=True,
+        )
+        self._refit_thread = th
+        th.start()
+        return th
 
     # -------------------------------------------------------------- admission
 
@@ -416,8 +450,14 @@ class DensityServeEngine:
         return done
 
     def run_until_drained(self, max_ticks: int = 1_000_000) -> int:
+        """Tick until no work is pending. A staged-but-unswapped model counts
+        as pending work: the swap only happens at tick START, so without the
+        extra tick a model published after the last serving tick would stay
+        invisible until the next request arrives."""
         done = 0
-        while any(self.queues.values()) and max_ticks > 0:
+        while (
+            any(self.queues.values()) or self._staged is not None
+        ) and max_ticks > 0:
             done += self.step()
             max_ticks -= 1
         return done
@@ -500,8 +540,8 @@ class _ScalerView:
 def refit_and_publish(
     engine: DensityServeEngine,
     scaler,
-    Y,
-    k: int,
+    Y=None,
+    k: int | None = None,
     *,
     key: jax.Array,
     method: str = "lbfgs",
@@ -509,6 +549,7 @@ def refit_and_publish(
     lr: float = 5e-2,
     sketch_size: int = 0,
     chunk_size: int | None = None,
+    coreset=None,
 ) -> int:
     """One refresh cycle: fresh coreset on ``Y`` → streamed fit → publish.
 
@@ -517,24 +558,52 @@ def refit_and_publish(
     publish is atomic w.r.t. serving. Returns the published version.
     Runs synchronously — wrap with :func:`start_background_refit` to overlap
     with serving.
+
+    ``coreset=(cs_Y, cs_weights)`` skips the build entirely and fits on an
+    externally maintained coreset — the streaming maintainer's path, where
+    merge-reduce already holds a fresh (k, J) weighted set and rebuilding
+    from raw rows would defeat the point. Either ``coreset`` or ``(Y, k)``
+    must be given.
+
+    Every cycle appends ``{"version", "fit_nll_pp", "k"}`` to
+    ``engine.refit_log``: the fitted model's NLL per weighted coreset point,
+    the reference the drift detector re-anchors on after a publish.
     """
-    from repro.core.coreset import build_coreset
-    from repro.core.mctm_fit import fit_mctm_streaming
+    from repro.core.mctm_fit import fit_mctm_streaming, streamed_nll
     from repro.core.scoring import DEFAULT_CHUNK
 
     k_build, k_fit = jax.random.split(key)
-    cs = build_coreset(
-        engine.cfg, scaler, Y, k, "l2-hull", key=k_build,
-        sketch_size=sketch_size,
-        chunk_size=DEFAULT_CHUNK if chunk_size is None else chunk_size,
-    )
+    if coreset is not None:
+        cs_Y = np.asarray(coreset[0], np.float32)
+        cs_w = np.asarray(coreset[1], np.float32)
+    else:
+        if Y is None or k is None:
+            raise ValueError("refit_and_publish needs either coreset= or (Y, k)")
+        from repro.core.coreset import build_coreset
+
+        cs = build_coreset(
+            engine.cfg, scaler, Y, k, "l2-hull", key=k_build,
+            sketch_size=sketch_size,
+            chunk_size=DEFAULT_CHUNK if chunk_size is None else chunk_size,
+        )
+        cs_Y = np.asarray(Y)[cs.indices]
+        cs_w = np.asarray(cs.weights, np.float32)
     fit = fit_mctm_streaming(
-        engine.cfg, scaler, np.asarray(Y)[cs.indices],
-        weights=np.asarray(cs.weights, np.float32),
+        engine.cfg, scaler, cs_Y,
+        weights=cs_w,
         key=k_fit, steps=steps, lr=lr, method=method,
         chunk_size=DEFAULT_CHUNK if chunk_size is None else chunk_size,
     )
-    return engine.publish(fit.params, scaler)
+    fit_nll_pp = streamed_nll(
+        engine.cfg, scaler, fit.params, cs_Y, weights=cs_w,
+        chunk=DEFAULT_CHUNK if chunk_size is None else chunk_size,
+    ) / max(float(cs_w.sum()), 1e-9)
+    version = engine.publish(fit.params, scaler)
+    engine.refit_log.append(
+        {"version": version, "fit_nll_pp": float(fit_nll_pp),
+         "k": int(cs_Y.shape[0])}
+    )
+    return version
 
 
 def start_background_refit(engine: DensityServeEngine, *args, **kwargs):

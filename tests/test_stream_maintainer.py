@@ -1,0 +1,205 @@
+"""StreamingCoresetMaintainer: windowing/decay policies, drift detection,
+and crash/resume bit-identity (the streaming contract in docs/STREAMING.md)."""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import mctm as M
+from repro.core.bernstein import DataScaler
+from repro.core.streaming import (
+    STREAM_POLICIES,
+    DriftDetector,
+    StreamingCoresetMaintainer,
+)
+from repro.data.dgp import generate
+from repro.ft.config import get_ft_config
+from repro.ft.failure import FailureSimulator, InjectedFailure
+
+
+def _setup(n=3072, seed=0, degree=4):
+    Y = np.asarray(generate("normal_mixture", n, seed=seed), np.float32)
+    cfg = M.MCTMConfig(J=2, degree=degree)
+    return cfg, DataScaler.fit(Y), Y
+
+
+def _windows(Y, w):
+    return [Y[i : i + w] for i in range(0, len(Y), w)]
+
+
+def test_policy_validation():
+    cfg, scaler, _ = _setup(n=64)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        StreamingCoresetMaintainer(cfg, scaler, 32, key, policy="nope")
+    with pytest.raises(ValueError):
+        StreamingCoresetMaintainer(cfg, scaler, 32, key, policy="sliding")
+    with pytest.raises(ValueError):
+        StreamingCoresetMaintainer(cfg, scaler, 32, key, policy="decayed",
+                                   decay=1.0)
+
+
+def test_sliding_evicts_expired_buckets_exactly():
+    """After T windows with window=W, exactly the last W births are live."""
+    cfg, scaler, Y = _setup()
+    m = StreamingCoresetMaintainer(
+        cfg, scaler, 64, jax.random.PRNGKey(1), policy="sliding", window=3
+    )
+    for i, w in enumerate(_windows(Y, 384)):
+        m.push(w)
+        lo = max(0, i + 1 - 3)
+        assert m.live_births() == list(range(lo, i + 1))
+    # the evicted mass is gone: total weight covers only the live window
+    assert m.total_weight() == pytest.approx(3 * 384, rel=1e-4)
+
+
+def test_decayed_weights_match_closed_form():
+    """After T equal windows of n rows under decay γ, total live weight is
+    the geometric sum n·(1−γᵀ)/(1−γ) — exact, because every reduce conserves
+    mass and decay is a plain scalar multiply."""
+    cfg, scaler, Y = _setup()
+    gamma, w = 0.6, 512
+    m = StreamingCoresetMaintainer(
+        cfg, scaler, 64, jax.random.PRNGKey(2), policy="decayed", decay=gamma
+    )
+    for T, rows in enumerate(_windows(Y, w), start=1):
+        m.push(rows)
+        expect = w * (1 - gamma**T) / (1 - gamma)
+        assert m.total_weight() == pytest.approx(expect, rel=1e-4)
+
+
+@pytest.mark.parametrize("policy", sorted(STREAM_POLICIES))
+def test_result_idempotent_under_all_policies(policy):
+    cfg, scaler, Y = _setup()
+    kw = {"sliding": dict(window=2), "decayed": dict(decay=0.8)}.get(policy, {})
+    m = StreamingCoresetMaintainer(
+        cfg, scaler, 96, jax.random.PRNGKey(3), policy=policy,
+        sketch_size=64, **kw
+    )
+    for rows in _windows(Y, 512):
+        m.push(rows)
+    r1, r2 = m.result(), m.result()
+    np.testing.assert_array_equal(r1.Y, r2.Y)
+    np.testing.assert_array_equal(r1.weights, r2.weights)
+    # result() is a pure read: pushing after peeking stays deterministic
+    m.push(Y[:512])
+    r3 = m.result()
+    assert r3.size > 0
+
+
+@pytest.mark.parametrize("policy", sorted(STREAM_POLICIES))
+def test_interrupted_resume_bit_identical(policy):
+    """A maintainer killed mid-stream (injected failure at window 3) and
+    resumed from its checkpoint must reproduce the uninterrupted final
+    coreset bit-for-bit — the streaming analogue of test_scoring_resume."""
+    cfg, scaler, Y = _setup()
+    kw = {"sliding": dict(window=2), "decayed": dict(decay=0.7)}.get(policy, {})
+    kw.update(policy=policy, sketch_size=64)
+    key = jax.random.PRNGKey(4)
+    windows = _windows(Y, 512)
+
+    ref = StreamingCoresetMaintainer(cfg, scaler, 96, key, **kw)
+    for rows in windows:
+        ref.push(rows)
+    rr = ref.result()
+
+    ft = get_ft_config()
+    with tempfile.TemporaryDirectory() as d:
+        ft.simulator = FailureSimulator().inject("streaming", 3)
+        try:
+            interrupts = 0
+            m = StreamingCoresetMaintainer(cfg, scaler, 96, key, ckpt_dir=d, **kw)
+            done = 0
+            while done < len(windows):
+                try:
+                    m.push(windows[done])
+                    done = m.windows_done
+                except InjectedFailure:
+                    interrupts += 1
+                    m = StreamingCoresetMaintainer(
+                        cfg, scaler, 96, key, ckpt_dir=d, **kw
+                    )
+                    done = m.resume()
+        finally:
+            ft.simulator = None
+        ri = m.result()
+
+    assert interrupts >= 1
+    assert m.n_seen == ref.n_seen
+    np.testing.assert_array_equal(np.asarray(rr.Y), np.asarray(ri.Y))
+    np.testing.assert_array_equal(np.asarray(rr.weights), np.asarray(ri.weights))
+
+
+def test_state_dict_roundtrip_preserves_moments_and_detector():
+    cfg, scaler, Y = _setup()
+    det = DriftDetector(eps=0.2, alpha=0.5, min_windows=2)
+    det.observe(1.0)
+    det.observe(1.05)
+    m = StreamingCoresetMaintainer(
+        cfg, scaler, 64, jax.random.PRNGKey(5), sketch_size=64, detector=det
+    )
+    for rows in _windows(Y[:1536], 512):
+        m.push(rows)
+    state = m.state_dict()
+    m2 = StreamingCoresetMaintainer(
+        cfg, scaler, 64, jax.random.PRNGKey(5), sketch_size=64,
+        detector=DriftDetector(eps=0.2, alpha=0.5, min_windows=2),
+    )
+    m2.load_state(state)
+    assert m2.windows_done == m.windows_done and m2.n_seen == m.n_seen
+    np.testing.assert_array_equal(m2.detector.state(), m.detector.state())
+    assert (m2._moments is None) == (m._moments is None)
+    if m._moments is not None:
+        np.testing.assert_array_equal(m2._moments[0], m._moments[0])
+    a, b = m.result(), m2.result()
+    np.testing.assert_array_equal(a.Y, b.Y)
+    np.testing.assert_array_equal(a.weights, b.weights)
+
+
+# --------------------------------------------------------------- detector
+
+
+def test_detector_anchor_never_fires_and_band_holds():
+    det = DriftDetector(eps=0.1, alpha=0.5, min_windows=2)
+    assert not det.observe(2.0)          # anchor observation
+    for _ in range(5):
+        assert not det.observe(2.01)     # ratio ≈ 1.005, inside the band
+    assert det.alerts == 0
+    assert det.in_band
+
+
+def test_detector_fires_on_sustained_shift():
+    det = DriftDetector(eps=0.1, alpha=0.5, min_windows=2)
+    det.observe(1.0)
+    fired = [det.observe(1.6) for _ in range(4)]
+    assert any(fired)
+    assert det.alerts == sum(fired)
+    assert not det.in_band
+
+
+def test_detector_reanchors_on_version_change():
+    det = DriftDetector(eps=0.1, alpha=0.5, min_windows=1)
+    det.observe(1.0, version=0)
+    assert det.observe(1.8, version=0)   # drifted vs v0
+    # new model published: first observation under v1 re-anchors (to the
+    # engine's recorded fit NLL when given) and must not fire
+    assert not det.observe(1.8, version=1, ref_hint=1.75)
+    assert det.ref_version == 1 and det.ref_nll_pp == pytest.approx(1.75)
+    assert not det.observe(1.76, version=1)
+    assert det.in_band
+
+
+def test_detector_state_roundtrip():
+    det = DriftDetector(eps=0.15, alpha=0.4, min_windows=2)
+    det.observe(1.2, version=0)
+    det.observe(1.9, version=0)
+    det.observe(1.9, version=0)
+    s = det.state()
+    det2 = DriftDetector(eps=0.15, alpha=0.4, min_windows=2)
+    det2.load(s)
+    np.testing.assert_array_equal(det2.state(), s)
+    assert det2.ewma == det.ewma and det2.alerts == det.alerts
+    # both continue identically
+    assert det.observe(1.9) == det2.observe(1.9)
+    assert det.ewma == det2.ewma

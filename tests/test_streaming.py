@@ -152,3 +152,127 @@ def test_one_pass_sketched_reduce_streams_blocks_once():
     res2 = run()
     np.testing.assert_array_equal(res.Y, res2.Y)
     np.testing.assert_array_equal(res.weights, res2.weights)
+
+
+# ---------------------------------------------------- two-round direction net
+
+
+def test_one_pass_moment_tracking_matches_direct_sums():
+    """OnePassSketched(track_moments=True) surfaces (Σp, Σppᵀ, n) on the
+    result, matching direct sums over the featurized P rows — the raw
+    material of the two-round streaming direction net."""
+    from repro.core.scoring import OnePassSketched, ScoringEngine
+
+    Y = generate("normal_mixture", 777, seed=11)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    engine = ScoringEngine(cfg, scaler, chunk_size=128)
+    strat = OnePassSketched(256, track_moments=True)
+    res = engine.score(
+        jnp.asarray(Y), method="l2-hull", hull_k=6,
+        hull_key=jax.random.PRNGKey(7), sketch_size=256,
+        key=jax.random.PRNGKey(3), strategy=strat,
+    )
+    assert res.moments is not None
+    s1, s2, n_rows = res.moments
+    assert n_rows >= len(Y)  # padded row count; padding rows are masked zero
+    _, P = engine.featurize(jnp.asarray(Y))
+    np.testing.assert_allclose(s1, np.asarray(P).sum(0), rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(
+        s2, np.asarray(P).T @ np.asarray(P), rtol=2e-4, atol=1e-3
+    )
+    # plain one-pass keeps moments off the hot path
+    res_plain = engine.score(
+        jnp.asarray(Y), method="l2-hull", hull_k=6,
+        hull_key=jax.random.PRNGKey(7), sketch_size=256,
+        key=jax.random.PRNGKey(3),
+    )
+    assert res_plain.moments is None
+    np.testing.assert_array_equal(
+        np.asarray(res.scores), np.asarray(res_plain.scores)
+    )
+
+
+def test_hull_dirs_override_is_seedable_and_reproducible():
+    """score(hull_dirs=...) with the default upfront net reproduces the
+    unseeded one-pass sweep bit-for-bit; a moment-seeded net changes the
+    hull candidates deterministically."""
+    from repro.core.scoring import (
+        ScoringEngine,
+        OnePassSketched,
+        directions_from_moments,
+        upfront_directions,
+    )
+
+    Y = generate("hourglass", 1024, seed=12)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    engine = ScoringEngine(cfg, scaler, chunk_size=128)
+    hk, sk = jax.random.PRNGKey(7), jax.random.PRNGKey(3)
+    kwargs = dict(method="l2-hull", hull_k=6, hull_key=hk,
+                  sketch_size=256, key=sk)
+    base = engine.score(jnp.asarray(Y), **kwargs)
+    p = engine.featurize(jnp.asarray(Y[:1]))[1].shape[1]
+    explicit = engine.score(
+        jnp.asarray(Y),
+        hull_dirs=upfront_directions(hk, p, 6, engine.hull_oversample),
+        **kwargs,
+    )
+    np.testing.assert_array_equal(np.asarray(base.scores),
+                                  np.asarray(explicit.scores))
+    np.testing.assert_array_equal(base.hull_rows, explicit.hull_rows)
+
+    # seed round 2 from round 1's accumulated moments: deterministic, and
+    # the net now reflects the data covariance instead of coordinate axes
+    res1 = engine.score(
+        jnp.asarray(Y), strategy=OnePassSketched(256, track_moments=True),
+        **kwargs,
+    )
+    s1, s2, n_rows = res1.moments
+    dirs = directions_from_moments(hk, s1, s2, n_rows, 6,
+                                   engine.hull_oversample)
+    seeded_a = engine.score(jnp.asarray(Y), hull_dirs=dirs, **kwargs)
+    seeded_b = engine.score(jnp.asarray(Y), hull_dirs=dirs, **kwargs)
+    np.testing.assert_array_equal(np.asarray(seeded_a.scores),
+                                  np.asarray(seeded_b.scores))
+    np.testing.assert_array_equal(seeded_a.hull_rows, seeded_b.hull_rows)
+
+
+def test_hull_dirs_requires_hull_stage():
+    from repro.core.scoring import ScoringEngine
+
+    Y = generate("bivariate_normal", 256, seed=13)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+    engine = ScoringEngine(cfg, scaler, chunk_size=128)
+    with pytest.raises(ValueError, match="hull_dirs"):
+        engine.score(jnp.asarray(Y), method="l2-only",
+                     hull_dirs=np.eye(4, dtype=np.float32))
+
+
+def test_maintainer_seeds_next_reduce_from_previous_moments():
+    """A sketched maintainer accumulates moments across reduces (the
+    two-round net): after the first reducing push `_moments` is populated
+    and the stream stays deterministic."""
+    from repro.core.streaming import StreamingCoresetMaintainer
+
+    Y = np.asarray(generate("normal_mixture", 2048, seed=14), np.float32)
+    cfg = M.MCTMConfig(J=2, degree=4)
+    scaler = DataScaler.fit(Y)
+
+    def run():
+        m = StreamingCoresetMaintainer(
+            cfg, scaler, 96, jax.random.PRNGKey(14), sketch_size=128
+        )
+        for i in range(0, 2048, 512):
+            m.push(Y[i : i + 512])
+        return m
+
+    m1 = run()
+    assert m1._moments is not None
+    s1, s2, n_rows = m1._moments
+    assert s1.ndim == 1 and s2.shape == (s1.size, s1.size) and n_rows > 0
+    m2 = run()
+    a, b = m1.result(), m2.result()
+    np.testing.assert_array_equal(a.Y, b.Y)
+    np.testing.assert_array_equal(a.weights, b.weights)
